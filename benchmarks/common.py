@@ -1,0 +1,122 @@
+"""Shared training harness for the paper-table benchmarks.
+
+CPU-scale honesty (DESIGN.md §6): the paper's absolute accuracies need
+V100-scale training on the real datasets; these benchmarks reproduce the
+paper's *relative* claims at reduced scale on deterministic synthetic data
+with matched shapes — GQ rescues low-bit training (Table 1), learned
+quantization beats fixed-range (Table 2), FQ ~= Q accuracy after BN removal
+(Table 4/6), noise training recovers accuracy (Table 7). Every printed row
+is labeled reduced-scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill as distill_mod
+from repro.core.noise import NoiseConfig
+from repro.core.quant import QuantConfig
+from repro.data import synthetic
+from repro.optim import schedules, sgd
+
+
+@dataclasses.dataclass
+class BenchTask:
+    """A reduced classification task + model family (resnet/kws/darknet)."""
+    net: object                  # PaperNet (configs/paper_nets.py)
+    n_train: int = 512
+    n_test: int = 256
+    batch: int = 64
+    steps_per_stage: int = 120
+    lr: float = 0.05
+    seed: int = 0
+    data_noise: float = 2.0   # tuned so FP lands ~0.9: bitwidths separate
+
+    def make_data(self):
+        cfg = self.net.reduced
+        key = jax.random.key(self.seed)
+        k1, k2 = jax.random.split(key)
+        shape = self.net.reduced_input_shape
+        ncls = self.net.reduced_classes
+        if self.net.name == "kws":
+            xtr, ytr = synthetic.make_mfcc_dataset(
+                k1, n=self.n_train, seq_len=shape[0], n_mfcc=shape[1],
+                num_classes=ncls, noise=self.data_noise)
+            xte, yte = synthetic.make_mfcc_dataset(
+                k2, n=self.n_test, seq_len=shape[0], n_mfcc=shape[1],
+                num_classes=ncls, noise=self.data_noise)
+        else:
+            xtr, ytr = synthetic.make_image_dataset(
+                k1, n=self.n_train, shape=shape, num_classes=ncls,
+                noise=self.data_noise)
+            xte, yte = synthetic.make_image_dataset(
+                k2, n=self.n_test, shape=shape, num_classes=ncls,
+                noise=self.data_noise)
+        return (xtr, ytr), (xte, yte)
+
+
+def train_stage_fn(task: BenchTask, data, *, noise: Optional[NoiseConfig]
+                   = None, distill_alpha: float = 0.7):
+    """Builds the gradual-quantization ``train_stage`` callable: trains one
+    ladder stage with SGD+Nesterov (paper hyper-params, scaled down) and
+    distillation from the running teacher; returns val accuracy."""
+    (xtr, ytr), (xte, yte) = data
+    module, cfg = task.net.module, task.net.reduced
+    nsteps = task.steps_per_stage
+
+    def accuracy(params, state, qcfg):
+        logits, _ = module.apply(params, state, xte, qcfg, cfg, train=False)
+        return float(jnp.mean(jnp.argmax(logits, -1) == yte))
+
+    def train_stage(bundle, qcfg: QuantConfig, teacher_bundle, stage_idx):
+        params, state = bundle
+        opt = sgd.make(schedules.cosine(task.lr, nsteps),
+                       weight_decay=5e-4)
+        ost = opt.init(params)
+
+        def loss_fn(p, st, xb, yb, rng):
+            logits, new_st = module.apply(p, st, xb, qcfg, cfg, train=True,
+                                          noise=noise, rng=rng)
+            onehot = jax.nn.one_hot(yb, cfg.num_classes)
+            ce = jnp.mean(distill_mod.softmax_cross_entropy(logits, onehot))
+            if teacher_bundle is not None:
+                tp, ts = teacher_bundle[0], teacher_bundle[1]
+                tq = teacher_bundle[2] if len(teacher_bundle) > 2 else qcfg
+                t_logits, _ = module.apply(tp, ts, xb, tq, cfg, train=False)
+                ce = distill_mod.distillation_loss(
+                    logits, jax.lax.stop_gradient(t_logits), yb,
+                    alpha=distill_alpha)
+            return ce, new_st
+
+        @jax.jit
+        def step(p, st, ost, xb, yb, i, rng):
+            (l, new_st), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, st, xb, yb, rng)
+            p, ost = opt.update(p, g, ost, i)
+            return p, new_st, ost, l
+
+        n = xtr.shape[0]
+        rng = jax.random.key(100 + stage_idx)
+        for i in range(nsteps):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            idx = jax.random.randint(k1, (task.batch,), 0, n)
+            params, state, ost, l = step(params, state, ost, xtr[idx],
+                                         ytr[idx], jnp.int32(i),
+                                         k2 if noise else None)
+        acc = accuracy(params, state, qcfg)
+        return (params, state), acc
+
+    return train_stage, accuracy
+
+
+def timer(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us per call

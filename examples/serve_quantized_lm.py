@@ -1,0 +1,87 @@
+"""Serve a quantized LM: int8 weight codes (paper eq. 4 deployment) +
+continuous batching — the serving-kind end-to-end example.
+
+    PYTHONPATH=src python examples/serve_quantized_lm.py \
+        [--arch rwkv6-7b] [--requests 6]
+
+Uses the arch's reduced smoke config so it runs on CPU; the same code path
+serves the full config on a TPU mesh via ``repro.launch.serve``.
+"""
+import argparse
+import sys
+import time
+
+import os
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer as T
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.decode import SampleConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    cfg = arch.smoke
+    qcfg = arch.qcfg
+    params = T.make_params(jax.random.key(0), cfg)
+
+    # Paper eq. 4: weights -> int8 codes + one scale per layer. From here
+    # every projection reads 1 byte/param.
+    qparams = T.quantize_params_for_serving(params, 8)
+    n_bytes_fp = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(params))
+    n_bytes_q = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(qparams))
+    print(f"arch={args.arch} (smoke): params {n_bytes_fp/1e6:.1f}MB fp -> "
+          f"{n_bytes_q/1e6:.1f}MB int8-deployed")
+
+    # Sanity: int8 weights perturb logits only slightly. (On a random-init
+    # model greedy token agreement is meaningless — logits are near-uniform
+    # — so compare the logits themselves.)
+    toks = jax.random.randint(jax.random.key(1), (1, args.prompt_len), 0,
+                              cfg.vocab)
+    l_fp, _ = T.forward(params, {"tokens": toks}, cfg, qcfg)
+    l_q, _ = T.forward(qparams, {"tokens": toks}, cfg, qcfg)
+    rel = float(jnp.max(jnp.abs(l_fp - l_q)) / (jnp.max(jnp.abs(l_fp))
+                                                + 1e-9))
+    print(f"logit perturbation from int8 weights: {rel:.1%} (max-rel)")
+
+    batcher = ContinuousBatcher(qparams, cfg, qcfg, slots=args.slots,
+                                max_len=args.prompt_len + args.max_new + 4,
+                                sc=SampleConfig(temperature=0.0))
+    key = jax.random.key(2)
+    reqs = []
+    for i in range(args.requests):
+        key, k = jax.random.split(key)
+        reqs.append(Request(
+            rid=i,
+            prompt=jax.random.randint(k, (args.prompt_len,), 0,
+                                      cfg.vocab).tolist(),
+            max_new=args.max_new))
+    t0 = time.time()
+    out = batcher.run(reqs)
+    dt = time.time() - t0
+    total = sum(len(v) for v in out.values())
+    print(f"continuous batching: {len(reqs)} reqs x {args.max_new} tokens "
+          f"on {args.slots} slots -> {total} tokens in {dt:.1f}s "
+          f"({total/dt:.1f} tok/s)")
+    for rid in sorted(out)[:3]:
+        print(f"  req {rid}: {out[rid]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""ArchConfig: one assigned architecture = model config + runtime policy."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.quant import QuantConfig
+from ..models.transformer import TransformerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    model: TransformerConfig
+    smoke: TransformerConfig
+    # Parameter partition mode for models/sharding.py: "tp" replicates over
+    # data (small models), "fsdp_tp" 2-D-shards every matrix (big models).
+    mode: str = "fsdp_tp"
+    # Paper-faithful default QAT stage used by the dry-run train_step
+    # (gradual quantization then walks the arch's ladder down from here).
+    qcfg: QuantConfig = QuantConfig(8, 8)
+    # Serving-side weight quantization bits (paper eq. 4 deployment).
+    serve_bits_w: Optional[int] = 8
+    # Microbatches for gradient accumulation at the train_4k shape.
+    grad_accum: int = 1
+    notes: str = ""

@@ -1,0 +1,87 @@
+"""Assigned input shapes (the 4 LM shapes) and (arch x shape) applicability.
+
+train_4k     -> lowers ``train_step``  (tokens + labels, full batch)
+prefill_32k  -> lowers ``prefill``     (prompt pass filling a KV cache)
+decode_32k   -> lowers ``serve_step``  (ONE new token, cache of seq_len)
+long_500k    -> lowers ``serve_step``  at 524288; requires sub-quadratic
+                decode state (SSM / hybrid-local) per the assignment —
+                skipped (and recorded) for pure full-attention archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import frontends
+from ..models.transformer import TransformerConfig, cache_struct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def applicable(cfg: TransformerConfig, shape: ShapeSpec
+               ) -> Tuple[bool, str]:
+    """(runs?, reason). The only skip rule: long_500k needs sub-quadratic
+    attention (DESIGN.md records each skip)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k dense-KV decode is "
+                       "quadratic-history, outside this model family "
+                       "(DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _token_batch(cfg: TransformerConfig, batch: int, seq: int, *,
+                 labels: bool) -> dict:
+    """ShapeDtypeStruct batch for one forward/train step."""
+    n_vis = 0
+    specs = {}
+    if cfg.frontend.enabled:
+        if cfg.enc_dec:
+            specs["feats"] = frontends.feature_spec(cfg.frontend, batch)
+        else:  # VLM: patch embeddings occupy the first n_positions slots
+            n_vis = cfg.frontend.n_positions
+            specs["feats"] = frontends.feature_spec(cfg.frontend, batch)
+    s_text = seq - n_vis
+    specs["tokens"] = jax.ShapeDtypeStruct((batch, s_text), jnp.int32)
+    if labels:
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s_text), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: TransformerConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    Returns kwargs for the step function of ``shape.kind``:
+      train   -> {"batch": {...tokens/labels/feats}}
+      prefill -> {"batch": {...tokens/feats}}
+      decode  -> {"caches": <cache pytree>, "tokens": (B, 1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _token_batch(cfg, b, s, labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": _token_batch(cfg, b, s, labels=False)}
+    if shape.kind == "decode":
+        return {
+            "caches": cache_struct(cfg, b, s),
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,57 @@
+"""Network distillation (paper §3.3, Hinton et al. 2015) and label refinery.
+
+The low-precision student is trained on soft labels (teacher output
+probabilities). The paper uses temperature-based distillation for
+CIFAR/KWS and label refinery (temperature-free iterated distillation,
+Bagherinezhad et al. 2018) for ImageNet/DarkNet-19.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jax.Array, labels_onehot: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(labels_onehot * logp, axis=-1)
+
+
+def distillation_loss(
+    student_logits: jax.Array,
+    teacher_logits: jax.Array,
+    labels: jax.Array,
+    *,
+    temperature: float = 4.0,
+    alpha: float = 0.9,
+    num_classes: int | None = None,
+) -> jax.Array:
+    """alpha * T^2 * KL(teacher_T || student_T) + (1-alpha) * CE(hard labels).
+
+    The T^2 factor keeps gradient magnitudes comparable across temperatures
+    (Hinton et al. 2015). ``labels`` are integer class ids.
+    """
+    if num_classes is None:
+        num_classes = student_logits.shape[-1]
+    t = temperature
+    soft_teacher = jax.nn.softmax(teacher_logits / t, axis=-1)
+    log_soft_student = jax.nn.log_softmax(student_logits / t, axis=-1)
+    kl = jnp.sum(
+        soft_teacher * (jnp.log(jnp.clip(soft_teacher, 1e-12)) - log_soft_student),
+        axis=-1,
+    )
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=student_logits.dtype)
+    ce = softmax_cross_entropy(student_logits, onehot)
+    return jnp.mean(alpha * (t * t) * kl + (1.0 - alpha) * ce)
+
+
+def label_refinery_loss(
+    student_logits: jax.Array, teacher_logits: jax.Array
+) -> jax.Array:
+    """Temperature-free distillation: CE against teacher probabilities.
+
+    Label refinery replaces the dataset labels with the teacher's predictions
+    outright — no temperature hyper-parameter to tune (paper §4.1, Table 3).
+    """
+    soft = jax.nn.softmax(teacher_logits, axis=-1)
+    logp = jax.nn.log_softmax(student_logits, axis=-1)
+    return -jnp.mean(jnp.sum(soft * logp, axis=-1))

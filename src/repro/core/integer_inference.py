@@ -1,0 +1,82 @@
+"""Integer-only inference (paper eq. 4 + §3.4 deployment story).
+
+After FQ training, the float scale parameters are only needed to *place the
+bins*: a trained FQ layer collapses to
+
+    int8 weight codes  +  one folded rescale scalar per layer,
+
+and the whole conv stack runs integer-in / integer-out on the fq_matmul
+Pallas kernel. Only the final layer's  e^s / n  escapes to float, to feed the
+full-precision global-average-pool + softmax (paper §3.4, last paragraph).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND, n_levels,
+                    quantize_to_int)
+
+
+def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
+                  final: bool = False):
+    """Trained FQ layer params -> integer deployment params.
+
+    Returns a dict with int8 ``w_codes`` plus the folded epilogue scalar:
+    ``rescale`` (inner layers) or ``alpha`` (final layer, dequant epilogue).
+    """
+    assert qcfg.fq and qcfg.bits_out is not None and qcfg.bits_w is not None
+    w_codes = quantize_to_int(p["w"], p["s_w"], bits=qcfg.bits_w,
+                              b=WEIGHT_BOUND)
+    out = {
+        "w_codes": w_codes.reshape(-1, w_codes.shape[-1]),  # im2col layout
+        "n_out": n_levels(qcfg.bits_out),
+        "lo": 0 if relu_out else -n_levels(qcfg.bits_out),
+        "s_out": p["s_out"],
+    }
+    if final:
+        out["alpha"] = ops.fold_alpha(
+            p["s_in"], p["s_w"], bits_a=qcfg.bits_a, bits_w=qcfg.bits_w
+        )
+    else:
+        out["rescale"] = ops.fold_rescale(
+            p["s_in"], p["s_w"], p["s_out"],
+            bits_a=qcfg.bits_a, bits_w=qcfg.bits_w, bits_out=qcfg.bits_out,
+        )
+    return out
+
+
+def entry_codes(x, p, qcfg: QuantConfig, *, b_in: float = RELU_BOUND):
+    """Quantize a float tensor entering the integer stack to int8 codes."""
+    return ops.quantize_to_codes(x, p["s_in"], bits=qcfg.bits_a, b=b_in)
+
+
+def int_linear(ip, codes):
+    return ops.int_matmul(codes, ip["w_codes"], ip["rescale"],
+                          epilogue="requant", n_out=ip["n_out"], lo=ip["lo"])
+
+
+def int_linear_final(ip, codes):
+    return ops.int_matmul(codes, ip["w_codes"], ip["alpha"],
+                          epilogue="dequant")
+
+
+def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1):
+    return ops.fq_conv1d_int(codes, ip["w_codes"], ip["rescale"],
+                             ksize=ksize, dilation=dilation,
+                             n_out=ip["n_out"], lo=ip["lo"])
+
+
+def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0):
+    return ops.fq_conv2d_int(codes, ip["w_codes"], ip["rescale"],
+                             ksize=ksize, stride=stride, padding=padding,
+                             n_out=ip["n_out"], lo=ip["lo"])
+
+
+def decode_output(codes_or_float, s_out, bits_out: Optional[int]):
+    """Final-layer codes -> real values: e^s / n * codes (paper §3.4)."""
+    if bits_out is None:
+        return codes_or_float
+    return jnp.exp(s_out) / n_levels(bits_out) * codes_or_float.astype(jnp.float32)

@@ -1,0 +1,58 @@
+"""Noise injection on weights / activations / MAC results (paper §4.4).
+
+Models analog-accelerator non-idealities: noisy memory cells (weights), DACs
+(activations) and ADCs (MAC results). Noise is Gaussian with sigma expressed
+as a *percentage of one LSB* — one quantization interval, e^s / n — exactly
+the paper's parameterization, so Table 7's (sigma_w, sigma_a, sigma_MAC)
+triples map 1:1 onto :class:`NoiseConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quant import lsb
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    """sigma_* as fractions of one LSB (paper's % / 100)."""
+
+    sigma_w: float = 0.0
+    sigma_a: float = 0.0
+    sigma_mac: float = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.sigma_w > 0 or self.sigma_a > 0 or self.sigma_mac > 0
+
+
+# Table 7's five test conditions, (sigma_w, sigma_a, sigma_mac) in % LSB.
+TABLE7_CONDITIONS = [
+    NoiseConfig(0.01, 0.01, 0.05),
+    NoiseConfig(0.05, 0.05, 0.25),
+    NoiseConfig(0.10, 0.10, 0.50),
+    NoiseConfig(0.20, 0.20, 1.00),
+    NoiseConfig(0.30, 0.30, 1.50),
+]
+
+
+def add_lsb_noise(
+    x: jax.Array,
+    key: Optional[jax.Array],
+    sigma: float,
+    s: jax.Array,
+    bits: Optional[int],
+) -> jax.Array:
+    """x + N(0, sigma * LSB) where LSB = e^s / n for the given quantizer.
+
+    No-op when sigma == 0, key is None, or the tensor is full precision
+    (bits is None — then there is no LSB to scale by).
+    """
+    if sigma <= 0.0 or key is None or bits is None:
+        return x
+    step = lsb(s, bits).astype(x.dtype)
+    return x + sigma * step * jax.random.normal(key, x.shape, x.dtype)

@@ -1,0 +1,201 @@
+"""Learned quantization (paper eq. 1 & 2) with straight-through estimation.
+
+The paper's two equations:
+
+    quantize(x) = round(clip(x, b, 1) * n) / n              (1)
+    Q(x)        = e^s * quantize(x / e^s)                   (2)
+
+with ``b`` the clip lower bound (-1 for weights / linear outputs / network
+inputs, 0 for quantized ReLUs) and ``n = 2^(nb-1) - 1`` positive levels for
+``nb`` bits. ``s`` is a learnable log-scale.
+
+STE subtlety (and the paper's stated difference from PACT): we apply the
+straight-through estimator ONLY to ``round`` and let autodiff differentiate
+the rest. The resulting gradient w.r.t. ``s`` is
+
+    dQ/ds = Q(x) - x            for x inside the clip range
+    dQ/ds = e^s * b  (or e^s)   for x clipped below (above)
+
+i.e. the *quantization error* inside the range — non-zero, unlike PACT whose
+clip-parameter gradient is zero for unclipped values. The gradient w.r.t. x is
+the usual clipped-STE pass-through (1 inside the range, 0 outside).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Core primitives
+# ---------------------------------------------------------------------------
+
+
+def ste_round(v: jax.Array) -> jax.Array:
+    """round() in the forward pass, identity in the backward pass."""
+    return v + lax.stop_gradient(jnp.round(v) - v)
+
+
+def n_levels(bits: int) -> int:
+    """Number of positive quantization levels, n = 2^(nb-1) - 1 (paper §3.1)."""
+    if bits < 2:
+        raise ValueError(f"bits must be >= 2 (got {bits}); bits=2 is ternary")
+    return 2 ** (bits - 1) - 1
+
+
+def quantize_unit(x: jax.Array, b: float, n: int) -> jax.Array:
+    """Paper eq. (1): uniform quantization in the standardized [b, 1] range."""
+    return ste_round(jnp.clip(x, b, 1.0) * n) / n
+
+
+def _grad_scale(v: jax.Array, g: float) -> jax.Array:
+    """v in the forward pass; gradient scaled by g in the backward pass."""
+    return v * g + lax.stop_gradient(v * (1.0 - g))
+
+
+def learned_quantize(
+    x: jax.Array, s: jax.Array, *, bits: Optional[int], b: float,
+    stabilize: bool = True,
+) -> jax.Array:
+    """Paper eq. (2): Q(x) = e^s * quantize(x / e^s). bits=None -> identity.
+
+    ``stabilize`` applies LSQ-style gradient scaling (Esser et al. 2020) to
+    the scale parameter: dL/ds sums a per-element term over the WHOLE
+    tensor, so its magnitude grows with numel and (for clipped tensors)
+    with e^s — at CNN scale this makes s diverge at otherwise-fine learning
+    rates (observed: ResNet-32 FQ finetuning dead at lr 0.02, the benchmark
+    caught a constant-prediction network). Scaling by 1/sqrt(numel * n)
+    equalizes the s step size with the weight step sizes. Forward values
+    are IDENTICAL; this touches only the s gradient — recorded in DESIGN.md
+    as a training-stability deviation."""
+    if bits is None or bits >= 32:
+        return x
+    n = n_levels(bits)
+    if stabilize:
+        g = 1.0 / math.sqrt(max(x.size, 1) * n)
+        s = _grad_scale(s, g)
+    scale = jnp.exp(s).astype(x.dtype)
+    return scale * quantize_unit(x / scale, b, n)
+
+
+def quantize_to_int(
+    x: jax.Array, s: jax.Array, *, bits: int, b: float, dtype=jnp.int8
+) -> jax.Array:
+    """Integer codes w^int = round(clip(x/e^s, b, 1) * n) for eq. (4) inference.
+
+    Real value = e^s / n * code. No gradient flows (inference path).
+    """
+    n = n_levels(bits)
+    scale = jnp.exp(s).astype(x.dtype)
+    return jnp.round(jnp.clip(x / scale, b, 1.0) * n).astype(dtype)
+
+
+def dequantize_int(codes: jax.Array, s: jax.Array, *, bits: int) -> jax.Array:
+    """Inverse of :func:`quantize_to_int`: e^s * code / n."""
+    n = n_levels(bits)
+    return jnp.exp(s) * codes.astype(jnp.float32) / n
+
+
+def lsb(s: jax.Array, bits: int) -> jax.Array:
+    """One quantization interval (least significant bit) in real units: e^s/n.
+
+    Used by the paper's noise model (§4.4): sigma is expressed in % of LSB.
+    """
+    return jnp.exp(s) / n_levels(bits)
+
+
+def init_scale(x: jax.Array, *, percentile: float = 100.0) -> jax.Array:
+    """Initialize log-scale s so that e^s covers max|x| (or a percentile).
+
+    §3.2: a too-wide or too-narrow initial range collapses values onto a
+    single level; covering the observed range is a safe start that gradual
+    quantization then refines.
+    """
+    a = jnp.abs(x.astype(jnp.float32))
+    m = jnp.max(a) if percentile >= 100.0 else jnp.percentile(a, percentile)
+    return jnp.log(jnp.maximum(m, 1e-8))
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+WEIGHT_BOUND = -1.0  # b for weights / conv outputs / network inputs
+RELU_BOUND = 0.0     # b for quantized ReLUs
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Bitwidths for one gradual-quantization ladder stage.
+
+    ``None`` means full precision (the FP stages of the ladder). ``bits_out``
+    controls quantization of the linear/conv *output* (the MAC result) in FQ
+    mode; in pre-FQ training mode outputs are left FP and BN+ReLU follow.
+    """
+
+    bits_w: Optional[int] = None
+    bits_a: Optional[int] = None
+    bits_out: Optional[int] = None
+    # FQ mode: norm folded into input scale, quantizer acts as nonlinearity.
+    fq: bool = False
+
+    @property
+    def is_fp(self) -> bool:
+        return self.bits_w is None and self.bits_a is None
+
+    def label(self) -> str:
+        def f(v):
+            return "32" if v is None else str(v)
+
+        base = f"W{f(self.bits_w)}A{f(self.bits_a)}"
+        return ("FQ" if self.fq else "Q") + base
+
+
+# The paper's ladders (Tables 1, 4, 6), selectable by name.
+LADDERS = {
+    # Table 1 — ResNet-20 / CIFAR-10: FP0 -> Q88 -> ... -> Q22
+    "cifar10": [
+        QuantConfig(),
+        QuantConfig(8, 8),
+        QuantConfig(6, 6),
+        QuantConfig(5, 5),
+        QuantConfig(4, 4),
+        QuantConfig(3, 3),
+        QuantConfig(2, 2),
+    ],
+    # Table 4 — KWS: FP -> Q66 -> Q45 -> Q35 -> Q24 -> FQ24
+    "kws": [
+        QuantConfig(),
+        QuantConfig(6, 6),
+        QuantConfig(4, 5),
+        QuantConfig(3, 5),
+        QuantConfig(2, 4),
+        QuantConfig(2, 4, 4, fq=True),
+    ],
+    # Table 6 — ResNet-32 / CIFAR-100: FP0 -> Q88 -> Q66 -> ... -> Q25 -> FQ25
+    "cifar100": [
+        QuantConfig(),
+        QuantConfig(8, 8),
+        QuantConfig(6, 6),
+        QuantConfig(5, 5),
+        QuantConfig(4, 5),
+        QuantConfig(3, 5),
+        QuantConfig(2, 5),
+        QuantConfig(2, 5, 5, fq=True),
+    ],
+    # Table 3 — DarkNet-19 / ImageNet
+    "imagenet": [
+        QuantConfig(),
+        QuantConfig(8, 8),
+        QuantConfig(7, 7),
+        QuantConfig(6, 6),
+        QuantConfig(5, 5),
+        QuantConfig(4, 5),
+        QuantConfig(3, 5),
+        QuantConfig(2, 5),
+    ],
+}

@@ -1,0 +1,111 @@
+"""Deterministic synthetic datasets with matched shapes/statistics.
+
+The paper's datasets (CIFAR-10/100, ImageNet, Google speech commands) are
+not downloadable in this offline container (DESIGN.md §7.3), so benchmarks
+and examples train on structured synthetic data that preserves the *shape*
+of the learning problem:
+
+  * images:  class templates + Gaussian noise, normalized to ~[-1, 1] —
+    learnable by a CNN, separable but not trivially so (noise scale knob).
+  * MFCC-like: per-class frequency signatures over time + deltas.
+  * token streams: a class-conditional bigram process — an LM can reduce
+    loss well below uniform, so train-loss-decreases tests are meaningful.
+
+Everything is generated from jax.random with fixed seeds — fully
+reproducible across hosts (critical for the deterministic index-based
+sharding in ``loader.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Vision (CIFAR-like)
+# ---------------------------------------------------------------------------
+
+
+def make_image_dataset(key, *, n: int, shape: Tuple[int, int, int],
+                       num_classes: int, noise: float = 0.35,
+                       template_seed: int = 7):
+    """Returns (images (N, H, W, C) in ~[-1,1], labels (N,)).
+
+    Class templates come from ``template_seed`` (FIXED, so train/test splits
+    drawn with different ``key``s share the same classes); ``key`` varies
+    only labels and per-sample noise.
+    """
+    k2, k3 = jax.random.split(key, 2)
+    templates = jax.random.normal(jax.random.key(template_seed),
+                                  (num_classes,) + shape) * 0.8
+    labels = jax.random.randint(k2, (n,), 0, num_classes)
+    base = templates[labels]
+    x = base + noise * jax.random.normal(k3, (n,) + shape)
+    return jnp.clip(x, -2.0, 2.0) * 0.5, labels
+
+
+# ---------------------------------------------------------------------------
+# Audio (MFCC-like)
+# ---------------------------------------------------------------------------
+
+
+def make_mfcc_dataset(key, *, n: int, seq_len: int, n_mfcc: int,
+                      num_classes: int, noise: float = 0.4,
+                      template_seed: int = 11):
+    """Returns (features (N, T, F), labels (N,)). Per-class time-frequency
+    signature + white noise — mimics the paper's KWS inputs. Signatures are
+    pinned to ``template_seed`` so different splits share classes."""
+    kt1, kt2 = jax.random.split(jax.random.key(template_seed))
+    k2, k3 = jax.random.split(key, 2)
+    sig = jax.random.normal(kt1, (num_classes, 1, n_mfcc))
+    drift = jax.random.normal(kt2, (num_classes, seq_len, 1)) * 0.3
+    labels = jax.random.randint(k2, (n,), 0, num_classes)
+    x = sig[labels] + drift[labels] + noise * jax.random.normal(
+        k3, (n, seq_len, n_mfcc))
+    return x, labels
+
+
+# ---------------------------------------------------------------------------
+# Token streams (LM)
+# ---------------------------------------------------------------------------
+
+
+def make_bigram_stream(key, *, n_seqs: int, seq_len: int, vocab: int,
+                       branch: int = 4, table_seed: int = 42):
+    """Class-conditional bigram token streams.
+
+    Each token deterministically maps to ``branch`` plausible successors;
+    the chain picks among them randomly. Cross-entropy floor ~= log(branch),
+    far below log(vocab) — so a learning LM shows visible loss reduction.
+
+    The successor table comes from ``table_seed`` (FIXED across batches —
+    the "language" must be stable or there is nothing to learn); ``key``
+    varies only the starting tokens and branch choices per batch.
+
+    Returns tokens (n_seqs, seq_len + 1) int32 (inputs = [:, :-1],
+    labels = [:, 1:]).
+    """
+    k2, k3 = jax.random.split(key, 2)
+    succ = jax.random.randint(jax.random.key(table_seed), (vocab, branch),
+                              0, vocab)
+    first = jax.random.randint(k2, (n_seqs,), 0, vocab)
+    choices = jax.random.randint(k3, (n_seqs, seq_len), 0, branch)
+
+    def step(tok, choice):
+        nxt = succ[tok, choice]
+        return nxt, nxt
+
+    def gen(t0, ch):
+        _, toks = jax.lax.scan(step, t0, ch)
+        return jnp.concatenate([t0[None], toks])
+
+    return jax.vmap(gen)(first, choices).astype(jnp.int32)
+
+
+def lm_batch(key, *, batch: int, seq_len: int, vocab: int):
+    """One {tokens, labels} batch of bigram data."""
+    toks = make_bigram_stream(key, n_seqs=batch, seq_len=seq_len, vocab=vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fully-quantized integer matmul (paper eq. 4).
+
+    w . a = (s^w s^a / n^w n^a) * sum_i w_i^int a_i^int
+
+TPU adaptation of the paper's analog "integer MAC + ADC binning": int8 codes
+stream HBM->VMEM in 128-aligned tiles, the MXU accumulates int8 x int8 into an
+int32 VMEM scratch across the K grid, and the requantization "bin" (the ADC in
+the analog design) is a fused epilogue — a single rescale + round + clip that
+produces the next layer's int8 codes before the tile ever leaves VMEM. The
+float factor  e^(s_a + s_w - s_out) * n_out / (n_a n_w)  folds into one scalar.
+
+Epilogue modes:
+  * ``requant``  -> int8 codes for the next FQ layer (the common case),
+  * ``dequant``  -> f32  alpha * acc  (final layer, feeds FP pooling/softmax).
+
+Grid is (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics) so the
+accumulator tile stays resident in VMEM for the whole K reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scale_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+            epilogue: str, n_out: int, lo: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        scale = scale_ref[0, 0]
+        if epilogue == "requant":
+            # codes = clip(round(acc * rescale), lo, n_out)  — bit-exact with
+            # the float path: round/clip commute because lo, n_out are ints.
+            y = jnp.round(acc.astype(jnp.float32) * scale)
+            o_ref[...] = jnp.clip(y, lo, n_out).astype(jnp.int8)
+        else:  # dequant
+            o_ref[...] = acc.astype(jnp.float32) * scale
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("epilogue", "n_out", "lo", "bm", "bn", "bk", "interpret"),
+)
+def fq_matmul(
+    a_codes: jax.Array,   # (M, K) int8
+    b_codes: jax.Array,   # (K, N) int8
+    scale: jax.Array,     # scalar f32: rescale (requant) or alpha (dequant)
+    *,
+    epilogue: str = "requant",
+    n_out: int = 7,
+    lo: int = 0,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled int8 matmul with fused requantization. Pads to block multiples."""
+    assert epilogue in ("requant", "dequant")
+    m, k = a_codes.shape
+    k2, n = b_codes.shape
+    assert k == k2, (a_codes.shape, b_codes.shape)
+
+    mp, np_, kp = (-m % bm), (-n % bn), (-k % bk)
+    if mp or kp:
+        a_codes = jnp.pad(a_codes, ((0, mp), (0, kp)))
+    if kp or np_:
+        b_codes = jnp.pad(b_codes, ((0, kp), (0, np_)))
+    pm, pn, pk = m + mp, n + np_, k + kp
+    k_steps = pk // bk
+
+    out_dtype = jnp.int8 if epilogue == "requant" else jnp.float32
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, k_steps=k_steps, epilogue=epilogue, n_out=n_out, lo=lo
+        ),
+        grid=(pm // bm, pn // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),      # scale
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A tile
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # B tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scale.reshape(1, 1).astype(jnp.float32), a_codes, b_codes)
+    return out[:m, :n]

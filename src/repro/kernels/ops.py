@@ -1,0 +1,112 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs as traced jnp ops, validating the exact TPU program logic.
+On TPU backends the same calls compile to Mosaic.
+
+Also provides the composite inference ops used by FQ layers:
+  * rescale/alpha folding (paper eq. 4's scalar factor),
+  * im2col-based FQ conv1d/conv2d that reuse the matmul kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import quant
+from .fq_matmul import fq_matmul
+from .quantize import quantize_codes
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fold_rescale(s_a, s_w, s_out, *, bits_a: int, bits_w: int, bits_out: int):
+    """rescale = e^(s_a + s_w - s_out) * n_out / (n_a * n_w) — one scalar.
+
+    Maps raw int32 accumulators directly onto the next layer's integer bins
+    (the "ADC" of the analog design, a single fused multiply on TPU).
+    """
+    n_a, n_w, n_o = (quant.n_levels(b) for b in (bits_a, bits_w, bits_out))
+    return jnp.exp(s_a + s_w - s_out) * (n_o / (n_a * n_w))
+
+
+def fold_alpha(s_a, s_w, *, bits_a: int, bits_w: int):
+    """alpha = e^(s_a + s_w) / (n_a n_w): int32 accumulator -> real value."""
+    n_a, n_w = quant.n_levels(bits_a), quant.n_levels(bits_w)
+    return jnp.exp(s_a + s_w) / (n_a * n_w)
+
+
+def int_matmul(a_codes, b_codes, scale, *, epilogue="requant", n_out=7, lo=0,
+               bm=128, bn=128, bk=128):
+    return fq_matmul(
+        a_codes, b_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo,
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+
+
+def quantize_to_codes(x, s, *, bits: int, b: float, block_rows=256):
+    n = quant.n_levels(bits)
+    flat = x.reshape(-1, x.shape[-1])
+    codes = quantize_codes(
+        flat, jnp.exp(-s), n=n, b=b, block_rows=block_rows,
+        interpret=_interpret(),
+    )
+    return codes.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Convolution via im2col -> fq_matmul (the FQ-Conv inference path)
+# ---------------------------------------------------------------------------
+
+
+def _im2col_1d(x, ksize: int, dilation: int):
+    """(B, T, C) -> (B, T_out, ksize*C); valid padding (paper's KWS net)."""
+    b, t, c = x.shape
+    t_out = t - dilation * (ksize - 1)
+    cols = [x[:, i * dilation : i * dilation + t_out, :] for i in range(ksize)]
+    return jnp.concatenate(cols, axis=-1), t_out
+
+
+def fq_conv1d_int(a_codes, w_codes, scale, *, ksize: int, dilation: int = 1,
+                  epilogue="requant", n_out=7, lo=0):
+    """int8 1-D convolution: im2col then the fq_matmul kernel.
+
+    a_codes: (B, T, Cin) int8; w_codes: (ksize*Cin, Cout) int8.
+    """
+    b = a_codes.shape[0]
+    patches, t_out = _im2col_1d(a_codes, ksize, dilation)
+    flat = patches.reshape(b * t_out, -1)
+    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
+    return y.reshape(b, t_out, -1)
+
+
+def _im2col_2d(x, ksize: int, stride: int, padding: int):
+    """(B, H, W, C) -> (B, Ho, Wo, ksize*ksize*C)."""
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    b, h, w, c = x.shape
+    ho = (h - ksize) // stride + 1
+    wo = (w - ksize) // stride + 1
+    cols = []
+    for di in range(ksize):
+        for dj in range(ksize):
+            cols.append(
+                x[:, di : di + (ho - 1) * stride + 1 : stride,
+                  dj : dj + (wo - 1) * stride + 1 : stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1), ho, wo
+
+
+def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
+                  padding: int = 0, epilogue="requant", n_out=7, lo=0):
+    """int8 2-D convolution (NHWC): im2col then the fq_matmul kernel.
+
+    w_codes: (ksize*ksize*Cin, Cout) int8.
+    """
+    b = a_codes.shape[0]
+    patches, ho, wo = _im2col_2d(a_codes, ksize, stride, padding)
+    flat = patches.reshape(b * ho * wo, -1)
+    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
+    return y.reshape(b, ho, wo, -1)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_fq_matmul(
+    a_codes: jax.Array,
+    b_codes: jax.Array,
+    scale: jax.Array,
+    *,
+    epilogue: str = "requant",
+    n_out: int = 7,
+    lo: int = 0,
+) -> jax.Array:
+    acc = jnp.dot(
+        a_codes.astype(jnp.int32),
+        b_codes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if epilogue == "requant":
+        y = jnp.round(acc.astype(jnp.float32) * scale)
+        return jnp.clip(y, lo, n_out).astype(jnp.int8)
+    return acc.astype(jnp.float32) * scale
+
+
+def ref_quantize_codes(
+    x: jax.Array, inv_scale: jax.Array, *, n: int, b: float
+) -> jax.Array:
+    u = x.astype(jnp.float32) * inv_scale
+    return jnp.round(jnp.clip(u, b, 1.0) * n).astype(jnp.int8)

@@ -1,0 +1,182 @@
+"""Analytic per-device HBM-traffic model for the roofline memory term.
+
+Why analytic: XLA:CPU's ``cost_analysis()['bytes accessed']`` over-counts
+HBM traffic even for a single matmul (5.0x measured — CPU counts per-use
+operand bytes around dtype-conversion rewrites and fuses less than TPU), so
+the dry-run's HLO bytes are recorded but NOT used as the memory term.
+Instead this module models the as-compiled program's HBM traffic from the
+architecture + sharding, term by term (the standard way production MFU /
+roofline analyses account memory):
+
+  * weights: each device reads its TP shard of every layer's weights
+    (FSDP's gathered copy is the same bytes; the gather itself is wire
+    traffic, counted in the collective term);
+  * activations: per-layer tensor writes+reads at B_local x S, width
+    factors per mixer/FFN kind; flash attention re-reads K/V once per
+    512-token query chunk; the logits/CE pass reads/writes (B, S, vocab);
+  * scan carries: XLA keeps lax.scan carries in HBM between iterations —
+    the RWKV time-scan state (B, H, N, N) r/w per token is counted (and is
+    exactly the motivation for the chunked Pallas WKV kernel in §Perf);
+  * train multiplies activation traffic by 4 (forward + full-remat
+    recompute + ~2x backward) and adds gradient + optimizer-moment traffic
+    (int8 moments cut the optimizer term 4x);
+  * decode reads the whole KV cache + TP weight shard per token.
+
+All numbers are bytes PER DEVICE per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..models.transformer import TransformerConfig, count_params
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshDims:
+    chips: int
+    tp: int            # model-axis degree
+    dp: int            # data (x pod) degree
+
+
+def mesh_dims(mesh, mode: str = "fsdp_tp") -> MeshDims:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if mode == "fsdp_pure":        # no TP: every axis is data parallelism
+        return MeshDims(mesh.devices.size, 1, mesh.devices.size)
+    tp = shape.get("model", 1)
+    dp = shape.get("data", 1) * shape.get("pod", 1)
+    return MeshDims(mesh.devices.size, tp, dp)
+
+
+def _layer_act_width(spec, cfg: TransformerConfig, seq: int):
+    """Unique major intermediate ELEMENTS per token per layer, assuming
+    TPU-grade fusion (elementwise chains fuse into the producing matmul).
+    Traffic = width x 2 bytes x 2 (write+read) per pass."""
+    d = cfg.d_model
+    dh = cfg.head_dim_
+    if spec.mixer == "attn":
+        kv = cfg.n_kv_heads * dh
+        qc = min(512, seq)
+        nq = max(seq // qc, 1)
+        # q,k,v,attn-out,resid; flash re-reads K+V per query chunk
+        # (read-only: /2 in rw units).
+        mix = 3 * d + 2 * kv + (nq - 1) * kv
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        lat = m.kv_lora + m.qk_rope_dim
+        qdim = cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+        qc = min(512, seq)
+        nq = max(seq // qc, 1)
+        kvdim = cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+        mix = 2 * d + qdim + lat + kvdim + (nq - 1) * kvdim // 2
+    elif spec.mixer == "rglru":
+        dr = cfg.rnn_width or d
+        mix = 2 * d + 4 * dr           # x/y proj, conv, gate tensors
+    elif spec.mixer == "rwkv":
+        n = cfg.rwkv_head_dim
+        h = d // n
+        # r,k,v,g,w projections + the time-scan carry (B,H,N,N) f32
+        # read+written EVERY token (elements x2 for f32 vs bf16).
+        mix = 6 * d + 4 * h * n * n
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.mixer == "rwkv":
+        ffn = 2 * (cfg.d_ff if spec.d_ff is None else spec.d_ff)
+    elif spec.moe is not None:
+        m = spec.moe
+        # dispatch/combine gathers + routed expert intermediates at
+        # k x capacity_factor tokens + always-on shared experts.
+        routed = m.top_k * m.capacity_factor * (2 * cfg.d_model
+                                                + 2 * m.d_expert)
+        shared = m.n_shared * 2 * m.d_expert
+        ffn = routed + shared + d
+    else:
+        f = spec.d_ff or cfg.d_ff
+        ffn = 2 * f + d
+    return mix + ffn
+
+
+def _cache_bytes_per_token_full(cfg: TransformerConfig, seq: int):
+    """Decode: bytes of cache READ per generated token (global, all layers)."""
+    prefix, n_groups, rem = cfg.layer_specs()
+    specs = list(prefix) + list(cfg.pattern) * n_groups + list(rem)
+    dt = 1 if cfg.kv_bits == 8 else 2
+    total = 0.0
+    for spec in specs:
+        if spec.mixer == "attn":
+            w = min(spec.window, seq) if spec.window else seq
+            total += 2 * w * cfg.n_kv_heads * cfg.head_dim_ * dt
+        elif spec.mixer == "mla":
+            total += seq * (cfg.mla.kv_lora + cfg.mla.qk_rope_dim) * dt
+        elif spec.mixer == "rglru":
+            total += 2 * (cfg.rnn_width or cfg.d_model) * 4
+        elif spec.mixer == "rwkv":
+            n = cfg.rwkv_head_dim
+            total += 2 * (cfg.d_model // n) * n * n * 4
+    if cfg.enc_dec:
+        total += (cfg.frontend.n_positions * 2 * cfg.n_kv_heads
+                  * cfg.head_dim_ * dt) * cfg.n_layers
+    return total
+
+
+def memory_bytes(cfg: TransformerConfig, shape, md: MeshDims, *,
+                 mode: str = "fsdp_tp", moment_bits: Optional[int] = None,
+                 serve_bits_w: Optional[int] = 8) -> dict:
+    """Per-device HBM bytes for one step of ``shape.kind``. Returns the
+    breakdown so §Perf can attack the dominant component."""
+    b, s = shape.global_batch, shape.seq_len
+    n = count_params(cfg)
+    prefix, n_groups, rem = cfg.layer_specs()
+    specs = list(prefix) + list(cfg.pattern) * n_groups + list(rem)
+    b_loc = max(b / md.dp, 1)
+
+    if shape.kind == "train":
+        wbytes = 2                                  # bf16 weights
+        # weight reads: fwd + remat recompute + bwd, on the TP shard
+        w_read = 3 * n * wbytes / (md.tp if mode == "fsdp_tp" else 1)
+        # grads (bf16 write+read) + fp32 accum for clip
+        g_rw = 2 * n * 2 / md.chips * (2 if mode == "fsdp_tp" else 1)
+        mom = 2 if moment_bits == 8 else 8
+        opt = n * (2 * mom + 2 * wbytes) / md.chips
+        act_per_tok = sum(_layer_act_width(sp, cfg, s) for sp in specs)
+        # passes: fwd + remat recompute + bwd = 3; write+read = x2; bf16 x2
+        act = 3 * 2 * act_per_tok * b_loc * s * 2
+        if cfg.enc_dec:
+            te = cfg.frontend.n_positions
+            act += 3 * 2 * cfg.n_enc_layers * (4 * cfg.d_model
+                                               + 2 * cfg.d_ff) * b_loc * te * 2
+        v_loc = cfg.vocab / (md.tp if mode == "fsdp_tp" else 1)
+        logits = 3 * b_loc * s * v_loc * 2 * 2      # fwd f32-ish + bwd
+        total = w_read + g_rw + opt + act + logits
+        parts = {"weights": w_read, "grads": g_rw, "optimizer": opt,
+                 "activations": act, "logits": logits}
+    elif shape.kind == "prefill":
+        wbytes = 1 if serve_bits_w == 8 else 2
+        w_read = n * wbytes / (md.tp if mode == "fsdp_tp" else 1)
+        act_per_tok = sum(_layer_act_width(sp, cfg, s) for sp in specs)
+        act = 2 * act_per_tok * b_loc * s * 2       # fwd only, write+read
+        # cache write: the filled cache is written exactly once, and its
+        # size equals one full read of it.
+        cache_w = _cache_bytes_per_token_full(cfg, s) * b_loc
+        logits = b_loc * 1 * cfg.vocab * 2
+        total = w_read + act + cache_w + logits
+        parts = {"weights": w_read, "activations": act,
+                 "cache_write": cache_w, "logits": logits}
+    else:  # decode
+        wbytes = 1 if serve_bits_w == 8 else 2
+        # each device reads only its own 2-D shard (partial-sum combine,
+        # no weight gather — §Perf C3); "tp" mode replicates over data.
+        w_shard = md.chips if mode in ("fsdp_tp", "fsdp_pure") else md.tp
+        w_read = n * wbytes / w_shard
+        # cache: sharded over batch AND (for long KV) the model axis
+        cache_shard = md.dp * (md.tp if s >= 8192 else 1)
+        cache = _cache_bytes_per_token_full(cfg, s) * b / cache_shard
+        act = sum(_layer_act_width(sp, cfg, 1) for sp in specs) \
+            * b_loc * 2
+        logits = b_loc * cfg.vocab * 2
+        total = w_read + cache + act + logits
+        parts = {"weights": w_read, "cache_read": cache,
+                 "activations": act, "logits": logits}
+    parts["total"] = total
+    return parts

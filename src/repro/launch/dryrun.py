@@ -1,0 +1,482 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(**specs)
+.compile()`` must SUCCEED on the 16x16 single-pod mesh AND the 2x16x16
+multi-pod mesh for every assigned cell; ``memory_analysis()`` proves the
+per-device footprint and ``cost_analysis()`` + the HLO collective parse feed
+the roofline tables (launch/roofline.py).
+
+The 512 placeholder host devices exist ONLY here (the env line above runs
+before any jax import); smoke tests and benchmarks see 1 device.
+
+One cell per process (use --all to orchestrate subprocesses): XLA:CPU
+compilation of a 405B-scale SPMD program holds multi-GB of compiler state —
+process isolation keeps cells independent and restartable.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --mesh single --out benchmarks/dryrun_results
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 2]
+  # hillclimb variants:
+  python -m repro.launch.dryrun --arch ... --shape ... --tag opt1 \
+      --model-overrides '{"kv_bits": 8, "loss_chunk": 512}' \
+      --train-overrides '{"pod_compress": true}' --moment-bits 8
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, SHAPE_ORDER, ARCH_IDS, get_arch, applicable, \
+    input_specs
+from ..models import transformer as T
+from ..models import sharding as shd
+from ..optim import adam, schedules
+from ..serve import decode as serve_decode
+from ..train import trainer
+from . import analytic, hlo_stats
+from .mesh import batch_axes, dp_degree, make_production_mesh
+
+HW = {  # TPU v5e-class constants (roofline)
+    "peak_flops_bf16": 197e12,
+    "peak_flops_int8": 394e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+
+def _attach(mesh, struct, spec_tree):
+    """ShapeDtypeStructs with NamedShardings attached (for .lower)."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        struct, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_specs(mesh, batch_struct, mode="fsdp_tp"):
+    ba = batch_axes(mesh, mode)
+    dp = dp_degree(mesh, mode)
+
+    def spec(x):
+        if x.ndim >= 1 and x.shape[0] % dp == 0 and x.shape[0] >= dp:
+            return P(ba, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(spec, batch_struct)
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    fixed = {}
+    for k, v in overrides.items():
+        fixed[k] = v
+    return dataclasses.replace(cfg, **fixed)
+
+
+def _build_step(arch, model_cfg, qcfg, shape, mesh, *, accum, moment_bits,
+                serve_bits_w, zero1, mode=None):
+    """(jit_step, lower_args) for one cell or probe configuration."""
+    mode = mode or arch.mode
+    specs = input_specs(model_cfg, shape)
+    if shape.kind == "train":
+        tc = trainer.TrainConfig(grad_accum=accum)
+        opt = adam.make(schedules.cosine(3e-4, 100_000), weight_decay=0.1,
+                        moment_bits=moment_bits)
+        jit_step, _ = trainer.jit_train_step(
+            model_cfg, qcfg, opt, tc, mesh, mode, zero1=zero1)
+        params_struct = T.param_struct(model_cfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        batch_struct = _attach(mesh, specs["batch"],
+                               _batch_specs(mesh, specs["batch"], mode))
+        return jit_step, (params_struct, opt_struct, batch_struct,
+                          jax.ShapeDtypeStruct((), jnp.int32))
+    if shape.kind == "prefill":
+        params_struct = T.param_struct(model_cfg)
+        if serve_bits_w:
+            params_struct = jax.eval_shape(
+                lambda p: T.quantize_params_for_serving(p, serve_bits_w),
+                params_struct)
+        pspecs = shd.param_specs(params_struct, mode, mesh)
+
+        def pf(params, batch):
+            return T.prefill(params, batch, model_cfg, qcfg)
+
+        jit_step = jax.jit(pf, in_shardings=(shd.named(pspecs, mesh), None))
+        batch_struct = _attach(mesh, specs["batch"],
+                               _batch_specs(mesh, specs["batch"], mode))
+        return jit_step, (params_struct, batch_struct)
+    # decode
+    jit_step, _ = serve_decode.jit_serve_step(
+        model_cfg, qcfg, mesh, mode, serve_bits_w=serve_bits_w)
+    params_struct = T.param_struct(model_cfg)
+    if serve_bits_w:
+        params_struct = jax.eval_shape(
+            lambda p: T.quantize_params_for_serving(p, serve_bits_w),
+            params_struct)
+    cspecs = serve_decode.cache_specs(specs["caches"], mesh)
+    cache_struct = _attach(mesh, specs["caches"], cspecs)
+    tok_struct = _attach(mesh, specs["tokens"],
+                         _batch_specs(mesh, specs["tokens"]))
+    return jit_step, (params_struct, cache_struct, tok_struct)
+
+
+def _probe_cfg(model_cfg, g: int):
+    """Truncated UNROLLED config with g pattern groups, for cost probes.
+
+    XLA's cost_analysis counts a lax.scan body ONCE regardless of trip
+    count, so the main (scanned) compile undercounts flops/bytes by ~the
+    layer count. Probes unroll g=1 and g=2 groups; the true per-group cost
+    is the difference and the full-depth cost extrapolates linearly
+    (groups are identical by construction). MoE seq-chunking is disabled in
+    probes for the same reason.
+    """
+    prefix, _, rem = model_cfg.layer_specs()
+    p = len(model_cfg.pattern)
+    # All probe layers go in ``prefix`` (unstacked, per-layer param trees):
+    # indexing scan-stacked params with x[g] lowers to a gather that GSPMD
+    # can only handle by replicating the whole stack — unstacked layers
+    # keep the production sharding per layer.
+    kw = dict(
+        n_layers=len(prefix) + g * p + len(rem),
+        prefix=tuple(prefix) + tuple(model_cfg.pattern) * g + tuple(rem),
+        scan_layers=False,
+        moe_seq_chunk=10 ** 9,
+    )
+    if model_cfg.enc_dec:
+        kw["n_enc_layers"] = g
+    return dataclasses.replace(model_cfg, **kw)
+
+
+def _cost_triple(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_stats.collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": float(coll["collective_wire_bytes"]),
+    }
+
+
+def _chunk_scan_corrections(model_cfg, shape, chips: int):
+    """Analytic per-device corrections for INNER lax.scans the probes still
+    contain (flash-attention q/kv chunk scans; rwkv time scan) — their
+    bodies are also counted once. Matmul flops are exact; flash KV-reread
+    bytes use the tile math of models/attention.py. Train steps multiply by
+    4 (forward + full-remat recompute + ~2x backward)."""
+    t = shape.seq_len
+    b = shape.global_batch
+    if shape.kind == "decode" or t <= 512:
+        return {"flops": 0.0, "bytes": 0.0, "wire": 0.0}
+    mult = 4.0 if shape.kind == "train" else 1.0
+    qc, kc = min(512, t), min(1024, t)
+    nq = t // qc
+    prefix, n_groups, rem = model_cfg.layer_specs()
+    specs_all = (list(prefix) + list(model_cfg.pattern) * n_groups
+                 + list(rem))
+    dtype_b = 2  # bf16
+    df = db = 0.0
+    for spec in specs_all:
+        if spec.mixer in ("attn", "mla"):
+            if spec.mixer == "mla":
+                dh = model_cfg.mla.qk_nope_dim + model_cfg.mla.qk_rope_dim
+                hkv = model_cfg.n_heads
+            else:
+                dh = model_cfg.head_dim_
+                hkv = model_cfg.n_kv_heads
+            hq = model_cfg.n_heads
+            # scores + pv matmuls, full T x T (window masks don't shrink
+            # the chunk sweep in this flash implementation — a recorded
+            # perf-iteration opportunity for the hybrid archs).
+            df += mult * 4.0 * b * hq * dh * t * t
+            # flash re-reads K,V once per q chunk.
+            db += mult * (nq - 1) * 2.0 * b * hkv * t * dh * dtype_b
+        elif spec.mixer == "rwkv":
+            n = model_cfg.rwkv_head_dim
+            h = model_cfg.d_model // n
+            df += mult * (t - 1) * 8.0 * b * h * n * n
+    if model_cfg.enc_dec:
+        te = model_cfg.frontend.n_positions
+        hq = model_cfg.n_heads
+        dh = model_cfg.head_dim_
+        df += mult * model_cfg.n_enc_layers * 4.0 * b * hq * dh * te * te
+    return {"flops": df / chips, "bytes": db / chips, "wire": 0.0}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *,
+             model_overrides=None, train_overrides=None, moment_bits=None,
+             serve_bits_w=8, zero1=False, tag="", probes=True,
+             mode=None, mesh_shape=None) -> dict:
+    t0 = time.time()
+    if mesh_shape:  # logical re-factorization of the same chips (§Perf B2)
+        from .mesh import make_mesh
+        axes = ("pod", "data", "model")[-len(mesh_shape):]
+        mesh = make_mesh(mesh_shape, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    arch = get_arch(arch_id)
+    model_cfg = _apply_overrides(arch.model, model_overrides)
+    shape = SHAPES[shape_name]
+    res = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape),
+           "kind": shape.kind, "chips": int(chips), "tag": tag,
+           "model_overrides": model_overrides or {},
+           "train_overrides": train_overrides or {},
+           "moment_bits": moment_bits, "serve_bits_w": serve_bits_w}
+
+    ok, reason = applicable(model_cfg, shape)
+    if not ok:
+        res.update(status="skipped", reason=reason)
+        return res
+
+    n_total = T.count_params(model_cfg)
+    n_active = T.count_active_params(model_cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6 * n_active * b * s
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * b * s
+    else:
+        model_flops = 2 * n_active * b
+    res.update(params_total=n_total, params_active=n_active,
+               model_flops_global=model_flops)
+
+    qcfg = arch.qcfg
+    tkw = dict(train_overrides or {})
+    dp = dp_degree(mesh, mode or arch.mode)
+    accum = min(arch.grad_accum, max(shape.global_batch // dp, 1))
+    accum = tkw.pop("grad_accum", accum)
+    if shape.kind == "train":
+        res["grad_accum"] = accum
+
+    # ---- main compile: the sharded, scanned, remat'd PRODUCTION program —
+    # this is the pass/fail proof + memory analysis source.
+    mode = mode or arch.mode
+    res["mode"] = mode
+    jit_step, args = _build_step(arch, model_cfg, qcfg, shape, mesh,
+                                 accum=accum, moment_bits=moment_bits,
+                                 serve_bits_w=serve_bits_w, zero1=zero1,
+                                 mode=mode)
+    # shd.use_mesh activates the model's with_sharding_constraint calls
+    # during tracing (without it every activation constraint is a no-op
+    # and GSPMD free-propagates from param/batch shardings only).
+    with mesh, shd.use_mesh(mesh, batch_axes(mesh, mode)):
+        lowered = jit_step.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    raw = _cost_triple(compiled)
+    hist = hlo_stats.op_histogram(compiled.as_text())
+    coll_full = hlo_stats.collective_stats(compiled.as_text())
+    del compiled, lowered
+
+    # ---- cost probes: unrolled g=1/g=2 groups -> linear extrapolation.
+    prefix, n_groups, rem = model_cfg.layer_specs()
+    cost = dict(raw)
+    probe_info = {"used": False}
+    if probes and n_groups >= 2:
+        try:
+            pm = []
+            for g in (1, 2):
+                pcfg = _probe_cfg(model_cfg, g)
+                js, pargs = _build_step(
+                    arch, pcfg, qcfg, shape, mesh, accum=1,
+                    moment_bits=moment_bits, serve_bits_w=serve_bits_w,
+                    zero1=zero1, mode=mode)
+                with mesh, shd.use_mesh(mesh, batch_axes(mesh, mode)):
+                    pc = js.lower(*pargs).compile()
+                pm.append(_cost_triple(pc))
+                del pc
+            cost = {k: pm[0][k] + (n_groups - 1) * (pm[1][k] - pm[0][k])
+                    for k in pm[0]}
+            probe_info = {"used": True, "g1": pm[0], "g2": pm[1],
+                          "n_groups": n_groups}
+        except Exception as e:  # probe failure leaves raw costs + a note
+            probe_info = {"used": False, "error": repr(e)[:300]}
+    corr = _chunk_scan_corrections(model_cfg, shape, chips)
+    cost = {k: cost[k] + corr[k] for k in cost}
+    t3 = time.time()
+
+    # Memory term from the analytic HBM-traffic model (launch/analytic.py):
+    # XLA:CPU's bytes-accessed over-counts real HBM traffic ~5x even for a
+    # single matmul (dtype-rewrite + weaker fusion), so the HLO number is
+    # recorded (hlo_bytes) but the roofline uses the model.
+    mem_parts = analytic.memory_bytes(
+        model_cfg, shape, analytic.mesh_dims(mesh, mode), mode=mode,
+        moment_bits=moment_bits,
+        serve_bits_w=serve_bits_w if shape.kind != "train" else None)
+
+    compute_s = cost["flops"] / HW["peak_flops_bf16"]
+    memory_s = mem_parts["total"] / HW["hbm_bw"]
+    coll_s = cost["wire"] / HW["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu = (model_flops / chips / HW["peak_flops_bf16"]) / step_s \
+        if step_s > 0 else 0.0
+
+    res.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        probe_s=round(t3 - t2, 2),
+        flops_per_device=cost["flops"],
+        bytes_per_device=mem_parts["total"],
+        hlo_bytes_per_device=cost["bytes"],
+        memory_breakdown=mem_parts,
+        raw_scan_counted=raw,
+        probe=probe_info,
+        chunk_corrections=corr,
+        memory_analysis={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        collectives=coll_full, op_histogram=hist,
+        roofline={**terms, "dominant": dominant, "step_s": step_s,
+                  "roofline_fraction": mfu,
+                  "useful_flops_ratio":
+                      (model_flops / chips) / cost["flops"]
+                      if cost["flops"] else 0.0},
+    )
+    return res
+
+
+def cell_path(out_dir, arch, shape, mesh_kind, tag=""):
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--all", action="store_true",
+                    help="orchestrate all cells as subprocesses")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--timeout", type=float, default=3600.0,
+                    help="per-cell compile timeout (orchestrator mode)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--model-overrides", default=None)
+    ap.add_argument("--train-overrides", default=None)
+    ap.add_argument("--moment-bits", type=int, default=None)
+    ap.add_argument("--serve-bits-w", type=int, default=8)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "tp", "fsdp_tp", "fsdp_pure"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="logical re-factorization, e.g. '64,4' (data,model)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        return _orchestrate(args)
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    rc = 0
+    for mk in meshes:
+        path = cell_path(args.out, args.arch, args.shape, mk, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"[dryrun] exists, skip: {path}")
+            continue
+        try:
+            res = run_cell(
+                args.arch, args.shape, mk,
+                model_overrides=json.loads(args.model_overrides)
+                if args.model_overrides else None,
+                train_overrides=json.loads(args.train_overrides)
+                if args.train_overrides else None,
+                moment_bits=args.moment_bits,
+                serve_bits_w=args.serve_bits_w,
+                zero1=args.zero1, tag=args.tag, mode=args.mode,
+                mesh_shape=tuple(int(x) for x in args.mesh_shape.split(","))
+                if args.mesh_shape else None)
+        except Exception:
+            res = {"arch": args.arch, "shape": args.shape, "mesh": mk,
+                   "tag": args.tag, "status": "error",
+                   "error": traceback.format_exc()}
+            rc = 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        st = res["status"]
+        extra = ""
+        if st == "ok":
+            r = res["roofline"]
+            extra = (f" dom={r['dominant']} step={r['step_s']:.4f}s "
+                     f"frac={r['roofline_fraction']:.3f} "
+                     f"compile={res['compile_s']}s")
+        print(f"[dryrun] {args.arch} x {args.shape} x {mk}: {st}{extra}")
+    return rc
+
+
+def _orchestrate(args):
+    import subprocess
+    meshes = ["single", "multi"] if args.mesh in ("both",) else [args.mesh]
+    cells = [(a, s, m) for a in ARCH_IDS for s in SHAPE_ORDER
+             for m in meshes]
+    pending = []
+    for a, s, m in cells:
+        path = cell_path(args.out, a, s, m, args.tag)
+        if os.path.exists(path) and not args.force:
+            continue
+        pending.append((a, s, m))
+    print(f"[dryrun] {len(pending)} cells to run", flush=True)
+    procs = []
+    failures = 0
+    while pending or procs:
+        while pending and len(procs) < args.jobs:
+            a, s, m = pending.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m,
+                   "--out", args.out]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.force:
+                cmd += ["--force"]
+            procs.append(((a, s, m), subprocess.Popen(cmd), time.time()))
+        done = [i for i, (_, p, _) in enumerate(procs)
+                if p.poll() is not None]
+        for i, (cell, p, t0) in enumerate(procs):
+            if i not in done and time.time() - t0 > args.timeout:
+                p.kill()
+                a, s, m = cell
+                with open(cell_path(args.out, a, s, m, args.tag), "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": m,
+                               "tag": args.tag, "status": "error",
+                               "error": f"timeout>{args.timeout}s"}, f)
+                done.append(i)
+        for i in sorted(set(done), reverse=True):
+            (a, s, m), p, _ = procs.pop(i)
+            if p.returncode != 0:
+                failures += 1
+                print(f"[dryrun] FAILED: {a} x {s} x {m}", flush=True)
+        time.sleep(1.0)
+    print(f"[dryrun] complete, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

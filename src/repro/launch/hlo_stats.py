@@ -1,0 +1,106 @@
+"""Parse collective traffic out of compiled/optimized HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we sum the
+result-shape bytes of every collective op in the per-device optimized HLO:
+
+    %all-reduce.1 = f32[128,128]{1,0} all-reduce(%dot), ...,
+        replica_groups=[2,4]<=[8], ...
+
+Async pairs (all-reduce-start / all-reduce-done) are counted once (the
+-start op). Tuple results count every element. Bytes are per-device (the
+module is the SPMD per-device program); for ring algorithms the wire cost
+per device is ~2(n-1)/n x bytes for all-reduce and (n-1)/n for
+all-gather/reduce-scatter — we record both raw output bytes and the
+ring-adjusted wire bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+# one shape token: dtype[d0,d1,...]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op line:  %name = <result-type> <opname>(
+_OP_RE = re.compile(
+    r"=\s+(?P<rtype>\([^)]*\)|\S+)\s+(?P<op>" + "|".join(_COLL) +
+    r")(?P<variant>-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str, *, cap_bytes_per_el: int = 0) -> int:
+    """Bytes of a result type. ``cap_bytes_per_el=2`` computes the
+    bf16-equivalent size: XLA:CPU rewrites bf16 dots as f32 (convert-in/out),
+    so partial-sum all-reduces appear as f32 on the host backend even though
+    the same program all-reduces bf16 on TPU — wire estimates cap large
+    collectives at 2 bytes/element (verified: all activation/gradient
+    tensors in this framework are bf16-native)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = _DTYPE_BYTES[dt]
+        if cap_bytes_per_el and n > 65536:
+            b = min(b, cap_bytes_per_el)
+        total += n * b
+    return total
+
+
+def _ring_factor(op: str, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if op in ("all-gather", "reduce-scatter"):
+        return (group - 1) / group
+    if op == "all-to-all":
+        return (group - 1) / group
+    return 1.0  # collective-permute & friends: one hop
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Returns {"ops": {op: {count, bytes, wire_bytes}}, totals...}."""
+    per_op = defaultdict(lambda: {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if (m.group("op") + (m.group("variant") or "")).endswith("-done"):
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("rtype"))
+        nbytes_bf16 = _shape_bytes(m.group("rtype"), cap_bytes_per_el=2)
+        gm = _GROUPS_RE.search(line)
+        group = int(gm.group(2)) if gm else 2
+        d = per_op[op]
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["wire_bytes"] += nbytes_bf16 * _ring_factor(op, group)
+    total = sum(d["bytes"] for d in per_op.values())
+    wire = sum(d["wire_bytes"] for d in per_op.values())
+    return {"ops": {k: dict(v) for k, v in per_op.items()},
+            "collective_bytes": total, "collective_wire_bytes": wire}
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                     "copy", "transpose", "reshape")) -> Dict:
+    """Rough opcode histogram of the optimized module (perf iteration aid)."""
+    hist = defaultdict(int)
+    for line in hlo_text.splitlines():
+        mm = re.search(r"=\s+(?:\([^)]*\)|\S+)\s+([\w-]+)\(", line)
+        if mm and mm.group(1) in ops:
+            hist[mm.group(1)] += 1
+    return dict(hist)

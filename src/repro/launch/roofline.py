@@ -1,0 +1,115 @@
+"""Roofline reporting: dryrun_results/*.json -> EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh) cell, from the compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197T bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective term = collective_wire_bytes_per_device / link_bw  (50 GB/s)
+
+``cost_analysis()`` is the per-device SPMD program (verified empirically:
+flops scale 1/chips), so terms are per-device directly. MODEL_FLOPS uses
+6*N_active*D (train) / 2*N_active*D (inference); the ratio
+MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch overhead ("useful" fraction).
+
+Usage:
+  python -m repro.launch.roofline --dir benchmarks/dryrun_results [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(out_dir: str, tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("tag", "") == tag:
+            cells.append(c)
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def cell_row(c: Dict) -> str:
+    if c.get("status") == "skipped":
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — "
+                f"| skipped: {c['reason'][:40]}… | — |")
+    if c.get("status") != "ok":
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — "
+                f"| ERROR | — |")
+    r = c["roofline"]
+    m = c["memory_analysis"]
+    return ("| {arch} | {shape} | {mesh} | {c} | {mem} | {coll} | "
+            "**{dom}** | {frac:.1%} / {useful:.2f} | {peak} |").format(
+        arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+        c=fmt_s(r["compute_s"]), mem=fmt_s(r["memory_s"]),
+        coll=fmt_s(r["collective_s"]),
+        dom=r["dominant"].replace("_s", ""),
+        frac=r["roofline_fraction"], useful=r["useful_flops_ratio"],
+        peak=fmt_b(m["peak_bytes_est"]))
+
+
+HEADER = ("| arch | shape | mesh | compute | memory | collective | dominant "
+          "| roofline frac / useful | bytes/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    lines = [HEADER]
+    for c in cells:
+        lines.append(cell_row(c))
+    return "\n".join(lines)
+
+
+def summarize(cells: List[Dict]) -> Dict:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    err = [c for c in cells if c.get("status") not in ("ok", "skipped")]
+    by_dom = {}
+    for c in ok:
+        d = c["roofline"]["dominant"]
+        by_dom[d] = by_dom.get(d, 0) + 1
+    return {"ok": len(ok), "skipped": len(skipped), "errors": len(err),
+            "dominant_histogram": by_dom,
+            "error_cells": [(c["arch"], c["shape"], c["mesh"]) for c in err]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun_results")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.dir, args.tag)
+    if args.md:
+        print(markdown_table(cells))
+    else:
+        for c in cells:
+            print(cell_row(c))
+    print()
+    print(json.dumps(summarize(cells), indent=1))
+
+
+if __name__ == "__main__":
+    main()

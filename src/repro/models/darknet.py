@@ -1,0 +1,92 @@
+"""DarkNet-19 (paper §4.1 Table 3; Redmon & Farhadi 2016).
+
+19 conv layers (3x3 / 1x1 alternating), BN + leaky-ReLU(0.1) after each,
+maxpool between stages, 1x1xC classifier conv, global average pool. In FQ
+mode the BN+leaky-ReLU pairs become quantized ReLUs (b=0); first and last
+layers stay full precision per the paper's ImageNet protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fq_layers as fql
+from ..core.noise import NoiseConfig
+from ..core.quant import QuantConfig, RELU_BOUND, WEIGHT_BOUND
+
+# (ksize, cout) per conv; "M" = 2x2 maxpool stride 2.
+_DARKNET19 = [
+    (3, 32), "M", (3, 64), "M", (3, 128), (1, 64), (3, 128), "M",
+    (3, 256), (1, 128), (3, 256), "M",
+    (3, 512), (1, 256), (3, 512), (1, 256), (3, 512), "M",
+    (3, 1024), (1, 512), (3, 1024), (1, 512), (3, 1024),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DarkNetConfig:
+    layers: Tuple = tuple(_DARKNET19)
+    num_classes: int = 1000
+    in_channels: int = 3
+
+    @classmethod
+    def reduced(cls):
+        return cls(layers=((3, 8), "M", (3, 16), "M", (3, 16), (1, 8), (3, 16)),
+                   num_classes=16)
+
+
+def init(key, cfg: DarkNetConfig):
+    params, state = {}, {}
+    convs = [l for l in cfg.layers if l != "M"]
+    keys = jax.random.split(key, len(convs) + 1)
+    cin = cfg.in_channels
+    for i, (ks, cout) in enumerate(convs):
+        params[f"conv{i}"] = fql.init_fq_conv2d(keys[i], ks, cin, cout)
+        p, s = fql.init_batchnorm(cout)
+        params[f"bn{i}"], state[f"bn{i}"] = p, s
+        cin = cout
+    params["head"] = fql.init_fq_conv2d(keys[-1], 1, cin, cfg.num_classes)
+    return params, state
+
+
+def apply(params, state, x, qcfg: QuantConfig, cfg: DarkNetConfig, *,
+          train: bool = False, rng=None,
+          noise: Optional[NoiseConfig] = None):
+    """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    new_state = dict(state)
+    convs = [l for l in cfg.layers if l != "M"]
+    rngs = iter(jax.random.split(rng, len(convs))) if rng is not None else None
+    h, ci = x, 0
+    fp = QuantConfig(fq=qcfg.fq)
+    for layer in cfg.layers:
+        if layer == "M":
+            h = -jax.lax.reduce_window(-h, jnp.inf, jax.lax.min, (1, 2, 2, 1),
+                                       (1, 2, 2, 1), "VALID")
+            continue
+        lq = fp if ci == 0 else qcfg  # first conv stays FP (paper protocol)
+        b_in = WEIGHT_BOUND if ci == 0 else RELU_BOUND
+        h = fql.fq_conv2d(params[f"conv{ci}"], h, lq, padding="SAME",
+                          b_in=b_in, relu_out=True, noise=noise,
+                          rng=next(rngs) if rngs is not None else None)
+        if not lq.fq:
+            h, new_state[f"bn{ci}"] = fql.batchnorm(
+                params[f"bn{ci}"], state[f"bn{ci}"], h, train=train)
+            h = jax.nn.leaky_relu(h, 0.1)
+        ci += 1
+    # Last (classifier) conv stays FP; GAP + softmax head outside.
+    h = fql.fq_conv2d(params["head"], h, QuantConfig(), padding="SAME",
+                      b_in=RELU_BOUND)
+    return jnp.mean(h, axis=(1, 2)), new_state
+
+
+def to_fq(params, state, cfg: DarkNetConfig):
+    new = dict(params)
+    for name in list(params):
+        if f"bn{name[4:]}" in params and name.startswith("conv"):
+            i = name[4:]
+            new[name] = fql.fold_bn(params[name], params[f"bn{i}"],
+                                    state[f"bn{i}"])
+    return new

@@ -1,0 +1,68 @@
+"""Modality frontend STUBS for the [audio] / [vlm] architectures.
+
+Per the assignment spec, the transformer BACKBONE is the implemented system;
+the modality frontend is a stub whose ``input_specs()`` provides precomputed
+frame/patch embeddings. These stubs define the *shape contract* of those
+embeddings and a tiny learned adapter (an FQ projection, so the paper's
+quantization applies from the very first matmul) mapping frontend features
+into the backbone's d_model.
+
+  * Whisper conv frontend  -> precomputed log-mel *frame embeddings*
+    (B, n_frames, feat) standing in for the two strided conv1d layers.
+  * InternViT / llama4 early-fusion -> precomputed *patch embeddings*
+    (B, n_patches, feat).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import QuantConfig
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    kind: str = "none"          # "none" | "audio" | "vision"
+    feat_dim: int = 0           # frontend feature dim (80 mel / ViT width)
+    n_positions: int = 0        # frames (audio) or patches (vision)
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+
+AUDIO_WHISPER_TINY = FrontendConfig("audio", feat_dim=80, n_positions=1500)
+VISION_INTERNVL = FrontendConfig("vision", feat_dim=1024, n_positions=256)
+VISION_LLAMA4 = FrontendConfig("vision", feat_dim=1408, n_positions=144)
+
+
+def init_adapter(key, cfg: FrontendConfig, d_model: int, dtype=jnp.float32):
+    """Learned adapter: frontend features -> backbone d_model (FQ layer)."""
+    if not cfg.enabled:
+        return {}
+    return {"adapter": L.init_proj(key, cfg.feat_dim, d_model, dtype)}
+
+
+def apply_adapter(p, feats, cfg: FrontendConfig, qcfg: QuantConfig):
+    """feats: (B, n_positions, feat_dim) precomputed embeddings -> (B, n, d)."""
+    return L.proj(p["adapter"], feats, qcfg)
+
+
+def feature_spec(cfg: FrontendConfig, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for the precomputed frontend features (dry-run)."""
+    if not cfg.enabled:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.n_positions, cfg.feat_dim), dtype)
+
+
+def synthetic_features(key, cfg: FrontendConfig, batch: int,
+                       dtype=jnp.float32):
+    """Deterministic stand-in features for smoke tests / examples."""
+    if not cfg.enabled:
+        return None
+    return jax.random.normal(
+        key, (batch, cfg.n_positions, cfg.feat_dim), dtype)

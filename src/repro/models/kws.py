@@ -1,0 +1,91 @@
+"""Keyword-spotting network (paper §4.2, Figure 2).
+
+MFCC frames -> small FP fully-connected embedding (N=100) -> BN -> 4-bit
+quantize -> 7 dilated FQ-Conv1d layers (45 filters, k=3, VALID padding,
+exponential dilation) -> global average pool -> FP softmax head.
+~50K params / 3.5M MACs at the paper's input length.
+
+Note: the paper's 1 s clips give ~99 MFCC frames but its dilation ladder
+implies a receptive field of 129; we keep the ladder and default the
+(synthetic) input length to 140 frames so VALID padding stays well-defined.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fq_layers as fql
+from ..core.noise import NoiseConfig
+from ..core.quant import QuantConfig, RELU_BOUND
+
+
+@dataclasses.dataclass(frozen=True)
+class KWSConfig:
+    n_mfcc: int = 39
+    embed: int = 100
+    filters: int = 45
+    ksize: int = 3
+    dilations: Tuple[int, ...] = (1, 1, 2, 4, 8, 16, 32)
+    num_classes: int = 12
+    seq_len: int = 140
+
+    @classmethod
+    def reduced(cls):
+        return cls(n_mfcc=8, embed=16, filters=8,
+                   dilations=(1, 1, 2), num_classes=4, seq_len=24)
+
+
+def init(key, cfg: KWSConfig):
+    keys = jax.random.split(key, 3 + len(cfg.dilations))
+    params = {"embed": fql.init_dense(keys[0], cfg.n_mfcc, cfg.embed)}
+    bn_p, bn_s = fql.init_batchnorm(cfg.embed)
+    params["embed_bn"] = bn_p
+    state = {"embed_bn": bn_s}
+    cin = cfg.embed
+    for i, _ in enumerate(cfg.dilations):
+        params[f"conv{i}"] = fql.init_fq_conv1d(keys[1 + i], cfg.ksize, cin,
+                                                cfg.filters)
+        bn_p, bn_s = fql.init_batchnorm(cfg.filters)
+        params[f"bn{i}"] = bn_p
+        state[f"bn{i}"] = bn_s
+        cin = cfg.filters
+    params["head"] = fql.init_dense(keys[-1], cfg.filters, cfg.num_classes)
+    return params, state
+
+
+def apply(params, state, x, qcfg: QuantConfig, cfg: KWSConfig, *,
+          train: bool = False, rng=None,
+          noise: Optional[NoiseConfig] = None):
+    """x: (B, T, n_mfcc) -> logits (B, num_classes)."""
+    new_state = dict(state)
+    # FP expansive embedding (paper keeps this layer full precision).
+    h = fql.dense(params["embed"], x)
+    h, new_state["embed_bn"] = fql.batchnorm(
+        params["embed_bn"], state["embed_bn"], h, train=train)
+    rngs = jax.random.split(rng, len(cfg.dilations)) if rng is not None else \
+        [None] * len(cfg.dilations)
+    for i, dil in enumerate(cfg.dilations):
+        # Input quantization of the conv (4-bit entry quantize in Fig 2 is
+        # the first conv's input quantizer).
+        h = fql.fq_conv1d(
+            params[f"conv{i}"], h, qcfg, dilation=dil, padding="VALID",
+            b_in=RELU_BOUND, relu_out=True, noise=noise, rng=rngs[i])
+        if not qcfg.fq:
+            # Pre-FQ training: BN + ReLU after each quantized conv.
+            h, new_state[f"bn{i}"] = fql.batchnorm(
+                params[f"bn{i}"], state[f"bn{i}"], h, train=train)
+            h = jax.nn.relu(h)
+    h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
+    return fql.dense(params["head"], h), new_state
+
+
+def to_fq(params, state, cfg: KWSConfig):
+    """Fold per-conv BN into conv weights for FQ retraining (paper §3.4)."""
+    new = dict(params)
+    for i, _ in enumerate(cfg.dilations):
+        new[f"conv{i}"] = fql.fold_bn(params[f"conv{i}"], params[f"bn{i}"],
+                                      state[f"bn{i}"])
+    return new

@@ -1,0 +1,83 @@
+"""Shared transformer building blocks with the FQ quantization contract.
+
+Every projection is an FQ layer (paper technique generalized from conv to
+matmul — eq. 4 is stated for dot products): learned-quantized input + weights
+in Q mode; in FQ mode the pre-projection RMSNorm is *removed* (its per-channel
+gain folded into the weights, the normalizing role taken over by the
+saturating learned quantizer, exactly the paper's BN-removal move §3.4) and
+the projection output is bounded by the b=-1 quantizer. Softmax, SiLU gates
+and recurrent state updates stay higher precision (the paper keeps softmax
+and pooling FP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fq_layers as fql
+from ..core.quant import QuantConfig, WEIGHT_BOUND, init_scale
+from . import sharding as shd
+
+
+def init_proj(key, din: int, dout: int, dtype=jnp.float32):
+    return fql.init_fq_linear(key, din, dout, dtype)
+
+
+def proj(p, x, qcfg: QuantConfig, *, b_in: float = WEIGHT_BOUND, rng=None,
+         noise=None):
+    if "w_codes" in p:
+        # Deployed serving path (paper §3.4 eq. 4): weights stored as int8
+        # codes, real value = e^s/n * code. XLA folds the dequant into the
+        # matmul operand load — weight HBM traffic is 1 byte/param, and on
+        # TPU the scaled int8 load feeds the MXU directly.
+        w = p["w_codes"].astype(x.dtype) * p["w_scale"].astype(x.dtype)
+        return jnp.matmul(x, w)
+    return fql.fq_linear(p, x, qcfg, b_in=b_in, relu_out=False, noise=noise,
+                         rng=rng)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * p["scale"]
+
+
+def maybe_norm(np_, x, qcfg: QuantConfig):
+    """RMSNorm in FP/Q mode; identity in FQ mode (norm folded, quantizer
+    normalizes — paper §3.4)."""
+    return x if qcfg.fq else rmsnorm(np_, x)
+
+
+def fold_rmsnorm(norm_p, proj_p):
+    """Fold an RMSNorm gain into the following projection's weights (exact:
+    W·diag(g)) before FQ retraining; re-init the weight quant scale."""
+    w = norm_p["scale"][:, None] * proj_p["w"]
+    new = dict(proj_p)
+    new["w"] = w
+    new["s_w"] = init_scale(w)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., T, D) with D even; positions: (T,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def shard_activations(x):
+    """(B, T, d) hidden-state constraint: batch over DP axes."""
+    return shd.constrain(x, "batch", None, None)

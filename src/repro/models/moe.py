@@ -1,0 +1,174 @@
+"""Mixture-of-Experts (GShard/Switch-style capacity dispatch) with FQ experts.
+
+Routing stays full precision (like the paper's softmax); each expert is an FQ
+layer with its *own* learned quant scales — the paper's per-layer scale maps
+to per-expert here because each expert is a layer. Expert weights are sharded
+over the ``model`` axis (expert parallelism); pjit turns the dispatch einsums
+into the all-to-alls of a classic EP implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import QuantConfig, WEIGHT_BOUND, learned_quantize
+from . import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN width
+    n_shared: int = 0          # shared (always-on) experts, deepseek-style
+    capacity_factor: float = 1.25
+
+
+def init_moe(key, d: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_expert
+    lim = (2.0 / d) ** 0.5
+    wg = jax.random.normal(ks[1], (e, d, f), dtype) * lim
+    wu = jax.random.normal(ks[2], (e, d, f), dtype) * lim
+    wd = jax.random.normal(ks[3], (e, f, d), dtype) * lim
+
+    def s_of(w):  # per-expert log-scale covering max|w| (quant.init_scale)
+        m = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=(1, 2),
+                    keepdims=True)
+        return jnp.log(jnp.maximum(m, 1e-8))
+
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), dtype) * 0.02},
+        "experts": {
+            "w_gate": wg,
+            "w_up": wu,
+            "w_down": wd,
+            "s_w": jnp.stack([s_of(wg), s_of(wu), s_of(wd)]),
+            "s_in": jnp.float32(0.0),
+            "s_out": jnp.float32(0.0),
+        },
+    }
+    if cfg.n_shared:
+        from . import layers as L
+        kk = jax.random.split(ks[0], 3)
+        fs = cfg.d_expert * cfg.n_shared
+        p["shared"] = {
+            "gate": L.init_proj(kk[0], d, fs, dtype),
+            "up": L.init_proj(kk[1], d, fs, dtype),
+            "down": L.init_proj(kk[2], fs, d, dtype),
+        }
+    return p
+
+
+def _qw(w, s, qcfg: QuantConfig):
+    return learned_quantize(w, s, bits=qcfg.bits_w, b=WEIGHT_BOUND).astype(w.dtype)
+
+
+def apply_moe(p, x, cfg: MoEConfig, qcfg: QuantConfig,
+              seq_chunk: int = 4096):
+    """x: (B, S, d) -> (y, aux).
+
+    Tokens are REGROUPED into ~``seq_chunk``-token dispatch groups before
+    the one-hot capacity dispatch, independent of the (B, S) shape:
+
+      * the dispatch tensor is O(group * E * cap) — regrouping bounds it at
+        32k-prefill shapes without a lax.scan (so dry-run cost probes count
+        it exactly);
+      * decode (S=1) would otherwise dispatch per batch ROW — group size 1,
+        capacity >= top_k each — making the expert einsums compute
+        E x B slots for B tokens (a measured 128x FLOP waste on
+        llama4-maverick decode, §Perf iteration C2). Regrouped, all B
+        decode tokens share one dispatch group.
+
+    Capacity is per group (a tighter, never looser, balance constraint).
+    """
+    b, s, d = x.shape
+    n = b * s
+    ng = min(seq_chunk, n)
+    while n % ng:
+        ng -= 1
+    if (b, s) != (n // ng, ng):
+        xg = x.reshape(n // ng, ng, d)
+        y, aux = _moe_dense(p, xg, cfg, qcfg)
+        return y.reshape(b, s, d), aux
+    return _moe_dense(p, x, cfg, qcfg)
+
+
+def _moe_dense(p, x, cfg: MoEConfig, qcfg: QuantConfig):
+    """One-hot capacity dispatch (GShard). x: (B, S, d) -> (y, aux)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = math.ceil(s * k * cfg.capacity_factor / e) if s > 1 else k
+    cap = max(cap, 1)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]["w"].astype(x.dtype))
+    logits32 = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits32, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)            # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Capacity assignment: position of each (token, choice) in its expert.
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)        # (B,S,K,E)
+    flat = oh.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                  # (B,S*K,E)
+    pos = pos.reshape(b, s, k, e)
+    pos_tok = jnp.sum(pos * oh, -1)                     # (B,S,K)
+    keep = (pos_tok < cap).astype(x.dtype)
+    ohc = jax.nn.one_hot(pos_tok, cap, dtype=x.dtype)   # (B,S,K,C)
+    disp = jnp.einsum("bske,bskc->bsec", oh.astype(x.dtype) * keep[..., None],
+                      ohc)                              # (B,S,E,C)
+    comb = jnp.einsum("bsec,bsk,bske->bsec", disp, gate_vals.astype(x.dtype),
+                      oh.astype(x.dtype))
+
+    ep = p["experts"]
+    xin = x
+    if qcfg.bits_a is not None:
+        xin = learned_quantize(xin, ep["s_in"], bits=qcfg.bits_a,
+                               b=WEIGHT_BOUND)
+    xe = jnp.einsum("bsec,bsd->becd", disp, xin)
+    if shd.dp_size() > 1 and b % shd.dp_size() == 0:
+        xe = shd.constrain(xe, "batch", "model", None, None)
+    else:
+        # Decode-style dispatch (one global group): shard the CONTRACTION
+        # dim over data so the expert matmuls partial-sum against the
+        # weights' own d-shard — without this GSPMD all-gathers every
+        # expert weight over data, 1.26 GB/layer/token on llama4 decode
+        # (§Perf iteration C3).
+        xe = shd.constrain(xe, None, "model", None, "data")
+    if "w_gate_codes" in ep:
+        # Deployed int8 experts (paper eq. 4): real = e^s/n * code; the
+        # per-expert dequant scale folds into the matmul operand load.
+        sc = ep["w_scale"].astype(x.dtype)            # (3, E, 1, 1)
+        wg = ep["w_gate_codes"].astype(x.dtype) * sc[0]
+        wu = ep["w_up_codes"].astype(x.dtype) * sc[1]
+        wd = ep["w_down_codes"].astype(x.dtype) * sc[2]
+    else:
+        wg, wu, wd = ep["w_gate"], ep["w_up"], ep["w_down"]
+        if qcfg.bits_w is not None:
+            wg = _qw(wg, ep["s_w"][0], qcfg)
+            wu = _qw(wu, ep["s_w"][1], qcfg)
+            wd = _qw(wd, ep["s_w"][2], qcfg)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg.astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xe, wu.astype(x.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, wd.astype(x.dtype))
+    if qcfg.fq and qcfg.bits_out is not None:
+        ye = learned_quantize(ye, ep["s_out"], bits=qcfg.bits_out,
+                              b=WEIGHT_BOUND)
+    y = jnp.einsum("becd,bsec->bsd", ye, comb)
+
+    if "shared" in p:
+        from . import layers as L
+        sp = p["shared"]
+        hs = jax.nn.silu(L.proj(sp["gate"], x, qcfg)) * L.proj(sp["up"], x, qcfg)
+        y = y + L.proj(sp["down"], hs, qcfg)
+
+    # Aux losses: Switch load-balance + router z-loss.
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], e), axis=(0, 1))
+    lb = e * jnp.sum(me * ce)
+    zl = jnp.mean(jax.nn.logsumexp(logits32, -1) ** 2)
+    return y, {"load_balance": lb, "router_z": zl}

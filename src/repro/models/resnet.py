@@ -1,0 +1,135 @@
+"""CIFAR ResNets (paper §4.1 ResNet-20, §4.3 ResNet-32 / Figure 4).
+
+Pre-FQ mode (Fig 4A): conv -> BN -> ReLU -> conv -> BN, +shortcut, ReLU.
+FQ mode (Fig 4B): BN+ReLU -> quantized ReLU (b=0); isolated BN -> learned
+quantization with b=-1; the residual add stays higher precision (like the
+paper's pooling/softmax). 1x1 downsample convs in the shortcut are quantized
+too; the input image is quantized by the first conv's input quantizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fq_layers as fql
+from ..core.noise import NoiseConfig
+from ..core.quant import QuantConfig, RELU_BOUND, WEIGHT_BOUND
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    widths: Tuple[int, ...] = (16, 32, 64)       # ResNet-20 (CIFAR-10)
+    blocks_per_stage: int = 3
+    num_classes: int = 10
+    quantize_first_last: bool = True             # paper §4.1 uses False
+
+    @classmethod
+    def resnet20(cls, quantize_first_last=False):
+        return cls((16, 32, 64), 3, 10, quantize_first_last)
+
+    @classmethod
+    def resnet32(cls):
+        # Paper Fig 4: 3 ResBlocks of five subblocks, widths 64 -> 256.
+        return cls((64, 128, 256), 5, 100, True)
+
+    @classmethod
+    def reduced(cls):
+        return cls((8, 16), 1, 10, True)
+
+
+def init(key, cfg: ResNetConfig):
+    params, state = {}, {}
+    k = iter(jax.random.split(key, 4 + 6 * len(cfg.widths) * cfg.blocks_per_stage))
+
+    def bn(name, c):
+        p, s = fql.init_batchnorm(c)
+        params[name + "_bn"], state[name + "_bn"] = p, s
+
+    params["stem"] = fql.init_fq_conv2d(next(k), 3, 3, cfg.widths[0])
+    bn("stem", cfg.widths[0])
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}b{bi}"
+            params[pre + "_c1"] = fql.init_fq_conv2d(next(k), 3, cin, w)
+            bn(pre + "_c1", w)
+            params[pre + "_c2"] = fql.init_fq_conv2d(next(k), 3, w, w)
+            bn(pre + "_c2", w)
+            if cin != w:  # downsample shortcut: 1x1 conv + BN (quantized too)
+                params[pre + "_sc"] = fql.init_fq_conv2d(next(k), 1, cin, w)
+                bn(pre + "_sc", w)
+            cin = w
+    params["head"] = fql.init_dense(next(k), cin, cfg.num_classes)
+    return params, state
+
+
+def _maybe_fp(qcfg: QuantConfig, quantize: bool) -> QuantConfig:
+    return qcfg if quantize else QuantConfig(fq=qcfg.fq)
+
+
+def apply(params, state, x, qcfg: QuantConfig, cfg: ResNetConfig, *,
+          train: bool = False, rng=None,
+          noise: Optional[NoiseConfig] = None):
+    """x: (B, 32, 32, 3) images in [-1, 1] -> logits."""
+    new_state = dict(state)
+    n_layers = 1 + 3 * len(cfg.widths) * cfg.blocks_per_stage
+    rngs = iter(jax.random.split(rng, n_layers)) if rng is not None else None
+
+    def nxt():
+        return next(rngs) if rngs is not None else None
+
+    def conv_bn(name, h, lq, *, stride=1, relu=True, b_in=WEIGHT_BOUND):
+        h = fql.fq_conv2d(params[name], h, lq, stride=stride, padding="SAME",
+                          b_in=b_in, relu_out=relu, noise=noise, rng=nxt())
+        if not lq.fq:
+            h, new_state[name + "_bn"] = fql.batchnorm(
+                params[name + "_bn"], state[name + "_bn"], h, train=train)
+            if relu:
+                h = jax.nn.relu(h)
+        return h
+
+    stem_q = _maybe_fp(qcfg, cfg.quantize_first_last)
+    # Input images quantized by the stem's input quantizer (b=-1, §4.3).
+    h = conv_bn("stem", x, stem_q, b_in=WEIGHT_BOUND)
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (cin != w) else 1
+            shortcut = h
+            h1 = conv_bn(pre + "_c1", h, qcfg, stride=stride, relu=True,
+                         b_in=RELU_BOUND)
+            # Second conv: isolated BN (no ReLU) -> FQ uses b=-1 quantizer.
+            h2 = fql.fq_conv2d(params[pre + "_c2"], h1, qcfg, padding="SAME",
+                               b_in=RELU_BOUND, relu_out=False, noise=noise,
+                               rng=nxt())
+            if not qcfg.fq:
+                h2, new_state[pre + "_c2_bn"] = fql.batchnorm(
+                    params[pre + "_c2_bn"], state[pre + "_c2_bn"], h2,
+                    train=train)
+            if pre + "_sc" in params:
+                shortcut = fql.fq_conv2d(
+                    params[pre + "_sc"], shortcut, qcfg, stride=stride,
+                    padding="SAME", b_in=RELU_BOUND, relu_out=False,
+                    noise=noise, rng=nxt())
+                if not qcfg.fq:
+                    shortcut, new_state[pre + "_sc_bn"] = fql.batchnorm(
+                        params[pre + "_sc_bn"], state[pre + "_sc_bn"],
+                        shortcut, train=train)
+            h = jax.nn.relu(h2 + shortcut)  # FP add + ReLU between blocks
+            cin = w
+    h = jnp.mean(h, axis=(1, 2))  # FP global average pool
+    return fql.dense(params["head"], h), new_state
+
+
+def to_fq(params, state, cfg: ResNetConfig):
+    """Fold every BN into its conv for FQ retraining (paper §3.4/Fig 4B)."""
+    new = dict(params)
+    for name in list(params):
+        if name + "_bn" in params:
+            new[name] = fql.fold_bn(params[name], params[name + "_bn"],
+                                    state[name + "_bn"])
+    return new

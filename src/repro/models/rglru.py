@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: norm -> {x-branch: proj -> causal conv1d(w=4) -> RG-LRU;
+                y-branch: proj -> GeLU} -> x*y -> out proj.
+
+    r_t = sigmoid(W_r u_t);  i_t = sigmoid(W_i u_t)
+    log a_t = -c * softplus(L) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is a first-order linear scan -> ``lax.associative_scan``
+(log-depth, TPU-friendly) for train/prefill, O(1) state update for decode.
+Projections are FQ layers; the elementwise recurrence stays full precision
+(DESIGN.md §Arch-applicability — quantizing the state feeds back error over
+500k decode steps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.quant import QuantConfig
+from . import layers as L
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru_block(key, d: int, dr: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) spans ~[0.9, 0.999].
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, dr)) / _C)).astype(dtype)
+    return {
+        "x_proj": L.init_proj(ks[0], d, dr, dtype),
+        "y_proj": L.init_proj(ks[1], d, dr, dtype),
+        "out": L.init_proj(ks[2], dr, d, dtype),
+        "conv1d_w": jax.random.normal(ks[3], (_CONV_W, dr), dtype) * 0.1,
+        "rglru_wr": jax.random.normal(ks[4], (dr, dr), dtype) * (dr ** -0.5),
+        "rglru_wi": jax.random.normal(ks[5], (dr, dr), dtype) * (dr ** -0.5),
+        "rglru_lam": lam,
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["rglru_wr"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["rglru_wi"].astype(u.dtype))
+    log_a = (-_C * jax.nn.softplus(p["rglru_lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def _conv1d(p, x):
+    """Causal depthwise conv, width 4. x: (B, T, dr)."""
+    w = p["conv1d_w"].astype(x.dtype)
+    y = x * w[-1]
+    for j in range(1, _CONV_W):
+        y = y + jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j] * w[-1 - j]
+    return y
+
+
+def apply_rglru_seq(p, x, qcfg: QuantConfig, return_state: bool = False):
+    """Full-sequence path. x: (B, T, d) -> (B, T, d)."""
+    u_raw = L.proj(p["x_proj"], x, qcfg)
+    u = _conv1d(p, u_raw)
+    a, b = _gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    y = jax.nn.gelu(L.proj(p["y_proj"], x, qcfg))
+    out = h.astype(x.dtype) * y
+    res = L.proj(p["out"], out, qcfg)
+    if return_state:
+        # Decode state: final recurrent h + the last CONV_W-1 raw u values
+        # (the causal-conv history the step path consumes).
+        t = x.shape[1]
+        if t >= _CONV_W - 1:
+            tail = u_raw[:, t - (_CONV_W - 1):]
+        else:
+            tail = jnp.pad(u_raw, ((0, 0), (_CONV_W - 1 - t, 0), (0, 0)))
+        state = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": tail.astype(x.dtype)}
+        return res, state
+    return res
+
+
+def init_rglru_state(batch: int, dr: int, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, dr), dtype)}
+
+
+def apply_rglru_step(p, x, state, qcfg: QuantConfig):
+    """One-token decode. x: (B, 1, d) -> (out (B,1,d), new_state)."""
+    u = L.proj(p["x_proj"], x, qcfg)[:, 0]              # (B, dr)
+    w = p["conv1d_w"].astype(u.dtype)
+    hist = state["conv"]                                # (B, 3, dr)
+    u_conv = u * w[-1] + jnp.einsum("bjd,jd->bd", hist, w[:-1])
+    new_conv = jnp.concatenate([hist[:, 1:], u[:, None]], 1)
+    a, b = _gates(p, u_conv)
+    h = a * state["h"] + b
+    y = jax.nn.gelu(L.proj(p["y_proj"], x, qcfg))[:, 0]
+    out = L.proj(p["out"], (h.astype(x.dtype) * y)[:, None], qcfg)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,173 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mix with
+data-dependent decay, matrix-valued per-head state.
+
+Time-mix (per head, head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x~_t))) data-dependent, token-shift mixing
+via learned interpolation + low-rank ddlerp. Channel-mix is the squared-ReLU
+two-layer MLP. Projections are FQ layers; the elementwise state recurrence
+stays FP (DESIGN.md §Arch-applicability).
+
+Train/prefill scan over time; decode is an O(1) state update — this is why
+rwkv6 runs the ``long_500k`` cell that full attention cannot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.quant import QuantConfig
+from . import layers as L
+
+_LORA = 32
+
+
+def init_rwkv_block(key, d: int, head_dim: int = 64, dtype=jnp.float32,
+                    d_ff: int | None = None):
+    h = d // head_dim
+    if d_ff is None:
+        d_ff = int(3.5 * d)
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    p = {
+        "time_mu": jnp.full((5, d), 0.5, dtype),          # r,k,v,g,w shifts
+        "lora_A": jax.random.normal(ks[0], (d, _LORA * 5), dtype) * 0.01,
+        "lora_B": jnp.zeros((5, _LORA, d), dtype),
+        "w0": jnp.full((d,), -6.0, dtype),                # decay bias
+        "lora_wA": jax.random.normal(ks[1], (d, _LORA), dtype) * 0.01,
+        "lora_wB": jnp.zeros((_LORA, d), dtype),
+        "u": jax.random.normal(ks[2], (h, head_dim), dtype) * 0.1,
+        "wr": L.init_proj(ks[3], d, d, dtype),
+        "wk": L.init_proj(ks[4], d, d, dtype),
+        "wv": L.init_proj(ks[5], d, d, dtype),
+        "wg": L.init_proj(ks[6], d, d, dtype),
+        "wo": L.init_proj(ks[7], d, d, dtype),
+        "ln_g": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mu": jnp.full((2, d), 0.5, dtype),
+        "cm_k": L.init_proj(ks[8], d, d_ff, dtype),
+        "cm_v": L.init_proj(ks[9], d_ff, d, dtype),
+        "cm_r": L.init_proj(ks[10], d, d, dtype),
+    }
+    return p
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1}; ``prev`` (B, d) seeds t=0 for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], 1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent interpolation (v6): five mixed inputs r,k,v,g,w."""
+    base = x + (xs - x) * p["time_mu"][:, None, None, :]  # (5,B,T,d)
+    lora = jnp.tanh((x + (xs - x) * 0.5) @ p["lora_A"].astype(x.dtype))
+    lora = lora.reshape(x.shape[:-1] + (5, _LORA))
+    adj = jnp.einsum("btfl,fld->fbtd", lora, p["lora_B"].astype(x.dtype))
+    return base + adj * (xs - x)
+
+
+def _wkv_inputs(p, x, xs, qcfg, head_dim):
+    b, t, d = x.shape
+    h = d // head_dim
+    mr, mk, mv, mg, mw = _ddlerp(p, x, xs)
+    r = L.proj(p["wr"], mr, qcfg).reshape(b, t, h, head_dim)
+    k = L.proj(p["wk"], mk, qcfg).reshape(b, t, h, head_dim)
+    v = L.proj(p["wv"], mv, qcfg).reshape(b, t, h, head_dim)
+    g = jax.nn.silu(L.proj(p["wg"], mg, qcfg))
+    ww = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(mw @ p["lora_wA"].astype(x.dtype))
+        @ p["lora_wB"].astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, t, h, head_dim)  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _groupnorm(x, gamma, head_dim):
+    b, t, d = x.shape
+    xg = x.reshape(b, t, d // head_dim, head_dim).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * lax.rsqrt(var + 1e-5)
+    return xg.reshape(b, t, d).astype(x.dtype) * gamma
+
+
+def apply_timemix_seq(p, x, qcfg: QuantConfig, head_dim: int = 64,
+                      return_state: bool = False, S0=None):
+    """x: (B, T, d) -> (B, T, d); scan over time with (B,H,N,N) state."""
+    b, t, d = x.shape
+    h = d // head_dim
+    r, k, v, g, w = _wkv_inputs(p, x, _shift(x), qcfg, head_dim)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (B,H,N) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    seq = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(w, 1, 0).astype(jnp.float32))
+    if S0 is None:
+        S0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    S_fin, outs = lax.scan(step, S0, seq)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    out = _groupnorm(out, p["ln_g"].astype(x.dtype), head_dim) * g
+    y = L.proj(p["wo"], out, qcfg)
+    if return_state:
+        return y, S_fin
+    return y
+
+
+def apply_channelmix_seq(p, x, qcfg: QuantConfig, prev=None):
+    xs = _shift(x, prev)
+    mk = x + (xs - x) * p["cm_mu"][0]
+    mr = x + (xs - x) * p["cm_mu"][1]
+    kk = jnp.square(jax.nn.relu(L.proj(p["cm_k"], mk, qcfg)))
+    return jax.nn.sigmoid(L.proj(p["cm_r"], mr, qcfg)) * \
+        L.proj(p["cm_v"], kk, qcfg)
+
+
+def init_rwkv_state(batch: int, d: int, head_dim: int = 64,
+                    dtype=jnp.float32):
+    return {
+        "S": jnp.zeros((batch, d // head_dim, head_dim, head_dim),
+                       jnp.float32),
+        "x_tm": jnp.zeros((batch, d), dtype),
+        "x_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def apply_block_step(p, x, state, qcfg: QuantConfig, head_dim: int = 64):
+    """One-token decode for a full rwkv block (time-mix + channel-mix).
+
+    x: (B, 1, d) post-norm input to time-mix. Returns (tm_out, cm_fn, state).
+    """
+    b, _, d = x.shape
+    h = d // head_dim
+    xs = state["x_tm"][:, None]
+    r, k, v, g, w = _wkv_inputs(p, x, xs, qcfg, head_dim)
+    rt, kt, vt, wt = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, state["S"] + u[None, :, :, None] * kv)
+    S = wt[..., None] * state["S"] + kv
+    out = out.reshape(b, 1, d).astype(x.dtype)
+    out = _groupnorm(out, p["ln_g"].astype(x.dtype), head_dim) * g
+    tm_out = L.proj(p["wo"], out, qcfg)
+    new_state = dict(state)
+    new_state["S"] = S
+    new_state["x_tm"] = x[:, 0]
+    return tm_out, new_state
+
+
+def apply_channelmix_step(p, x, state, qcfg: QuantConfig):
+    out = apply_channelmix_seq(p, x, qcfg, prev=state["x_cm"])
+    new_state = dict(state)
+    new_state["x_cm"] = x[:, 0]
+    return out, new_state

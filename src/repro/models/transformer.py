@@ -1,0 +1,957 @@
+"""Unified FQ transformer covering all ten assigned architectures.
+
+One config dataclass + one forward/prefill/decode implementation handles:
+
+  * dense GQA decoders        (codeqwen1.5-7b, minicpm-2b, minitron-4b,
+                               llama3-405b, internvl2-1b backbone)
+  * MoE decoders              (llama4-maverick: alternating dense/MoE,
+                               deepseek-v2-lite: MLA + dense-first-layer MoE)
+  * encoder–decoder           (whisper-tiny, audio frontend stub)
+  * hybrid recurrent          (recurrentgemma-2b: RG-LRU ×2 : local-attn ×1)
+  * attention-free SSM        (rwkv6-7b)
+
+Every projection is an FQ layer (paper's technique, conv -> matmul — eq. 4 is
+stated for dot products). Layer stacking is a ``lax.scan`` over parameter-
+stacked pattern groups (MaxText-style) so the 126-layer llama3-405b HLO stays
+one block body; ``jax.checkpoint`` on the group gives full activation remat.
+
+Layer layout: ``prefix`` layers (unscanned, e.g. deepseek's dense layer 0),
+then ``pattern`` repeated ``(n_layers - len(prefix)) // len(pattern)`` times
+(scanned), then the remainder ``pattern[:rem]`` (unscanned) — this represents
+recurrentgemma's 26 = (R,R,A)×8 + R,R exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.ad_checkpoint import checkpoint_name
+
+from ..core.quant import QuantConfig, WEIGHT_BOUND, n_levels, quantize_to_int
+from . import attention as attn
+from . import frontends
+from . import layers as L
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv as rwkv_mod
+from . import sharding as shd
+from .frontends import FrontendConfig
+from .mla import MLAConfig
+from .moe import MoEConfig
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer's shape: a mixer plus a channel/FFN sub-block."""
+
+    mixer: str = "attn"          # "attn" | "mla" | "rglru" | "rwkv"
+    window: Optional[int] = None  # sliding-window size for local attention
+    ffn: str = "swiglu"          # "swiglu" | "mlp" (gelu) | "channelmix" | "none"
+    moe: Optional[MoEConfig] = None  # MoE FFN replaces the dense FFN
+    d_ff: Optional[int] = None   # per-layer FFN width override (deepseek L0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    prefix: Tuple[LayerSpec, ...] = ()
+    head_dim: Optional[int] = None
+    mla: Optional[MLAConfig] = None
+    rnn_width: Optional[int] = None      # RG-LRU recurrence width
+    rwkv_head_dim: int = 64
+    rope_theta: float = 10000.0
+    pos: str = "rope"                    # "rope" | "abs"
+    # remat policy: "full" (nothing saveable) or "save_tp" (keep the
+    # TP-combined wo/FFN-down outputs — the backward then skips re-running
+    # those matmuls AND their per-layer all-reduces; §Perf iteration A4).
+    remat_policy: str = "full"
+    max_seq: int = 8192                  # abs-pos table length / cache bound
+    # encoder–decoder
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: FrontendConfig = FrontendConfig()
+    tie_embeddings: bool = False
+    quantize_first_last: bool = False    # paper protocol: embed/head stay FP
+    # numerics / memory
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True
+    seq_shard: bool = False              # sequence parallelism on hidden state
+    loss_chunk: Optional[int] = None     # chunked cross-entropy
+    kv_bits: Optional[int] = None        # int8 KV cache ("8" = quantized)
+    moe_seq_chunk: int = 4096
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_specs(self):
+        """(prefix_specs, n_groups, remainder_specs)."""
+        n_main = self.n_layers - len(self.prefix)
+        p = len(self.pattern)
+        return self.prefix, n_main // p, self.pattern[: n_main % p]
+
+    @property
+    def attention_free(self) -> bool:
+        specs = self.prefix + self.pattern
+        return all(s.mixer in ("rglru", "rwkv") for s in specs)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is O(1) or O(window) — eligible for 500k."""
+        specs = self.prefix + self.pattern
+        return all(s.mixer in ("rglru", "rwkv")
+                   or (s.mixer == "attn" and s.window is not None)
+                   for s in specs)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: TransformerConfig, dt):
+    dh = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_proj(ks[0], cfg.d_model, cfg.n_heads * dh, dt),
+        "wk": L.init_proj(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dt),
+        "wv": L.init_proj(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dt),
+        "wo": L.init_proj(ks[3], cfg.n_heads * dh, cfg.d_model, dt),
+    }
+
+
+def _init_ffn(key, spec: LayerSpec, cfg: TransformerConfig, dt):
+    d, f = cfg.d_model, spec.d_ff or cfg.d_ff
+    if spec.moe is not None:
+        return {"moe": moe_mod.init_moe(key, d, spec.moe, dt)}
+    ks = jax.random.split(key, 3)
+    if spec.ffn == "mlp":
+        return {"up": L.init_proj(ks[0], d, f, dt),
+                "down": L.init_proj(ks[1], f, d, dt)}
+    return {"gate": L.init_proj(ks[0], d, f, dt),
+            "up": L.init_proj(ks[1], d, f, dt),
+            "down": L.init_proj(ks[2], f, d, dt)}
+
+
+def _init_block(key, spec: LayerSpec, cfg: TransformerConfig, *,
+                cross: bool = False):
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, dt)
+    elif spec.mixer == "mla":
+        p["attn"] = mla_mod.init_mla(ks[0], cfg.d_model, cfg.n_heads,
+                                     cfg.mla, dt)
+    elif spec.mixer == "rglru":
+        p["attn"] = rglru_mod.init_rglru_block(
+            ks[0], cfg.d_model, cfg.rnn_width or cfg.d_model, dt)
+    elif spec.mixer == "rwkv":
+        p["attn"] = rwkv_mod.init_rwkv_block(
+            ks[0], cfg.d_model, cfg.rwkv_head_dim, dt, d_ff=cfg.d_ff)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["lnx"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xattn"] = _init_attn(ks[1], cfg, dt)
+    if spec.mixer != "rwkv":  # rwkv bundles its own channel-mix
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = _init_ffn(ks[2], spec, cfg, dt)
+    return p
+
+
+def make_params(key, cfg: TransformerConfig):
+    """Concrete parameter tree (use jax.eval_shape(...) for the dry-run)."""
+    dt = cfg.param_dtype
+    ks = iter(jax.random.split(key, 16))
+    params: dict = {
+        "embed": {"w": jax.random.normal(next(ks), (cfg.vocab, cfg.d_model),
+                                         dt) * 0.02},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_proj(next(ks), cfg.d_model, cfg.vocab, dt)
+    if cfg.pos == "abs":
+        params["pos_embed"] = jax.random.normal(
+            next(ks), (cfg.max_seq, cfg.d_model), dt) * 0.02
+    if cfg.frontend.enabled:
+        params["frontend"] = frontends.init_adapter(next(ks), cfg.frontend,
+                                                    cfg.d_model, dt)
+    prefix, n_groups, rem = cfg.layer_specs()
+    cross = cfg.enc_dec
+
+    def stacked(key, spec, n, **kw):
+        return jax.vmap(lambda k: _init_block(k, spec, cfg, **kw))(
+            jax.random.split(key, n))
+
+    params["prefix"] = tuple(
+        _init_block(next(ks), s, cfg, cross=cross) for s in prefix)
+    if n_groups:
+        params["blocks"] = tuple(
+            stacked(next(ks), s, n_groups, cross=cross) for s in cfg.pattern)
+    else:
+        params["blocks"] = ()
+    params["rem"] = tuple(
+        _init_block(next(ks), s, cfg, cross=cross) for s in rem)
+
+    if cfg.enc_dec:
+        enc_spec = LayerSpec(mixer="attn", ffn="mlp")
+        params["enc_blocks"] = stacked(next(ks), enc_spec, cfg.n_enc_layers)
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+        params["enc_pos_embed"] = jax.random.normal(
+            next(ks), (cfg.frontend.n_positions, cfg.d_model), dt) * 0.02
+    return params
+
+
+def param_struct(cfg: TransformerConfig):
+    """ShapeDtypeStruct tree — no allocation (dry-run / mesh planning)."""
+    return jax.eval_shape(
+        lambda: make_params(jax.random.key(0), cfg))
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    tree = param_struct(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def count_active_params(cfg: TransformerConfig) -> int:
+    """Active params per token (MoE: only top-k + shared experts count)."""
+    total = count_params(cfg)
+    prefix, n_groups, rem = cfg.layer_specs()
+    specs = list(prefix) + list(cfg.pattern) * n_groups + list(rem)
+    inactive = 0
+    for s in specs:
+        if s.moe is not None:
+            m = s.moe
+            per_expert = 3 * cfg.d_model * m.d_expert
+            inactive += (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Per-kind apply (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _heads(x, n, dh):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, dh).transpose(0, 2, 1, 3)  # (B, H, T, Dh)
+
+
+def _unheads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _chunk_of(t: int, target: int) -> int:
+    c = min(target, t)
+    while t % c:
+        c -= 1
+    return c
+
+
+def _apply_rope(q, k, positions, cfg):
+    if cfg.pos != "rope":
+        return q, k
+    b, h, t, dh = q.shape
+    qf = L.rope(q.reshape(b * h, t, dh), positions, theta=cfg.rope_theta)
+    kf = L.rope(k.reshape(b * k.shape[1], k.shape[2], dh),
+                positions if k.shape[2] == t else positions[: k.shape[2]],
+                theta=cfg.rope_theta)
+    return qf.reshape(q.shape), kf.reshape(k.shape)
+
+
+def _self_attn_seq(p, h, spec, cfg, qcfg, positions, *, causal=True,
+                   return_kv=False):
+    dh = cfg.head_dim_
+    q = _heads(L.proj(p["wq"], h, qcfg), cfg.n_heads, dh)
+    k = _heads(L.proj(p["wk"], h, qcfg), cfg.n_kv_heads, dh)
+    v = _heads(L.proj(p["wv"], h, qcfg), cfg.n_kv_heads, dh)
+    q, k = _apply_rope(q, k, positions, cfg)
+    q = shd.constrain(q, "batch", "model", None, None)
+    k = shd.constrain(k, "batch", None, None, None)
+    t = h.shape[1]
+    out = attn.flash_attention(
+        q, k, v, causal=causal, window=spec.window,
+        q_chunk=_chunk_of(t, 512), kv_chunk=_chunk_of(t, 1024))
+    y = L.proj(p["wo"], _unheads(out), qcfg)
+    if return_kv:
+        return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return y
+
+
+def _cross_attn_seq(p, h, enc_out, cfg, qcfg):
+    dh = cfg.head_dim_
+    q = _heads(L.proj(p["wq"], h, qcfg), cfg.n_heads, dh)
+    k = _heads(L.proj(p["wk"], enc_out, qcfg), cfg.n_kv_heads, dh)
+    v = _heads(L.proj(p["wv"], enc_out, qcfg), cfg.n_kv_heads, dh)
+    q = shd.constrain(q, "batch", "model", None, None)
+    tq, tk = h.shape[1], enc_out.shape[1]
+    out = attn.flash_attention(
+        q, k, v, causal=False, q_chunk=_chunk_of(tq, 512),
+        kv_chunk=_chunk_of(tk, 1024))
+    return L.proj(p["wo"], _unheads(out), qcfg)
+
+
+def _ffn(p, h, spec, cfg, qcfg):
+    """Channel block. Returns (y, aux)."""
+    zero_aux = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+    if spec.moe is not None:
+        y, aux = moe_mod.apply_moe(p["moe"], h, spec.moe, qcfg,
+                                   seq_chunk=cfg.moe_seq_chunk)
+        return y, aux
+    if spec.ffn == "mlp":
+        z = jax.nn.gelu(L.proj(p["up"], h, qcfg))
+        z = shd.constrain(z, "batch", None, "model")
+        return L.proj(p["down"], z, qcfg), zero_aux
+    z = jax.nn.silu(L.proj(p["gate"], h, qcfg)) * L.proj(p["up"], h, qcfg)
+    z = shd.constrain(z, "batch", None, "model")
+    return L.proj(p["down"], z, qcfg), zero_aux
+
+
+def _hidden_constrain(h, cfg):
+    if h.ndim == 3 and h.shape[1] > 1 and cfg.seq_shard:
+        return shd.constrain(h, "batch", "model", None)
+    return shd.constrain(h, "batch", None, None)
+
+
+ZERO_AUX = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "save_tp":
+        return jax.checkpoint_policies.save_only_these_names("tp_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _block_maybe_remat(bp, h, spec, cfg, qcfg, positions, enc_out=None):
+    """Unscanned (prefix/remainder/probe) blocks get the SAME remat policy
+    as the scanned groups — without this, cost probes (which unroll all
+    layers into prefix) silently omit the recompute traffic that the
+    production scanned program pays."""
+    def f(bp_, h_):
+        return _apply_block(bp_, h_, spec, cfg, qcfg, positions, enc_out)
+    if cfg.remat:
+        f = jax.checkpoint(f, policy=_remat_policy(cfg))
+    return f(bp, h)
+
+
+def _apply_block(bp, h, spec: LayerSpec, cfg, qcfg, positions, enc_out=None,
+                 *, causal=True):
+    """One residual layer (mixer + channel block). Returns (h, aux)."""
+    hn = L.maybe_norm(bp["ln1"], h, qcfg)
+    if spec.mixer == "attn":
+        mix = _self_attn_seq(bp["attn"], hn, spec, cfg, qcfg, positions,
+                             causal=causal)
+        aux = dict(ZERO_AUX)
+    elif spec.mixer == "mla":
+        mix, _ = mla_mod.mla_attention(
+            bp["attn"], hn, positions, cfg.n_heads, cfg.mla, qcfg,
+            causal=causal, q_chunk=_chunk_of(hn.shape[1], 512),
+            kv_chunk=_chunk_of(hn.shape[1], 1024))
+        aux = dict(ZERO_AUX)
+    elif spec.mixer == "rglru":
+        mix = rglru_mod.apply_rglru_seq(bp["attn"], hn, qcfg)
+        aux = dict(ZERO_AUX)
+    elif spec.mixer == "rwkv":
+        mix = rwkv_mod.apply_timemix_seq(bp["attn"], hn, qcfg,
+                                         cfg.rwkv_head_dim)
+        aux = dict(ZERO_AUX)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.remat_policy == "save_tp":
+        mix = checkpoint_name(mix, "tp_out")
+    h = h + mix
+    if enc_out is not None and "xattn" in bp:
+        hx = L.maybe_norm(bp["lnx"], h, qcfg)
+        h = h + _cross_attn_seq(bp["xattn"], hx, enc_out, cfg, qcfg)
+    if spec.mixer == "rwkv":
+        h = h + rwkv_mod.apply_channelmix_seq(
+            bp["attn"], L.maybe_norm(bp["ln1"], h, qcfg), qcfg)
+        return _hidden_constrain(h, cfg), aux
+    hn2 = L.maybe_norm(bp["ln2"], h, qcfg)
+    y, aux2 = _ffn(bp["ffn"], hn2, spec, cfg, qcfg)
+    if cfg.remat_policy == "save_tp":
+        y = checkpoint_name(y, "tp_out")
+    aux = {k: aux[k] + aux2[k] for k in aux}
+    return _hidden_constrain(h + y, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / evaluation, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens, cfg, *, offset: int = 0):
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if cfg.pos == "abs":
+        pe = lax.dynamic_slice_in_dim(params["pos_embed"], offset,
+                                      tokens.shape[1], 0)
+        h = h + pe[None]
+    return h
+
+
+def _encode(params, feats, cfg: TransformerConfig, qcfg):
+    """Whisper-style encoder over precomputed frontend features."""
+    h = frontends.apply_adapter(params["frontend"], feats, cfg.frontend, qcfg)
+    h = h + params["enc_pos_embed"][None].astype(h.dtype)
+    enc_spec = LayerSpec(mixer="attn", ffn="mlp")
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, bp):
+        out, _ = _apply_block(bp, carry, enc_spec, cfg, qcfg, positions,
+                              causal=False)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, _ = lax.scan(body, h, params["enc_blocks"])
+    else:
+        for gi in range(cfg.n_enc_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[gi],
+                                        params["enc_blocks"]))
+    return L.rmsnorm(params["enc_norm"], h)
+
+
+def _input_hidden(params, batch, cfg, qcfg):
+    """Token embeddings (+ frontend patch embeddings for VLM archs)."""
+    tokens = batch["tokens"]
+    if cfg.frontend.enabled and not cfg.enc_dec and "feats" in batch:
+        vis = frontends.apply_adapter(params["frontend"], batch["feats"],
+                                      cfg.frontend, qcfg)
+        txt = _embed_tokens(params, tokens, cfg,
+                            offset=cfg.frontend.n_positions
+                            if cfg.pos == "abs" else 0)
+        return jnp.concatenate([vis.astype(txt.dtype), txt], axis=1)
+    return _embed_tokens(params, tokens, cfg)
+
+
+def forward(params, batch, cfg: TransformerConfig, qcfg: QuantConfig):
+    """Full-sequence forward. batch: {"tokens": (B,S) [, "feats", "labels"]}.
+
+    Returns (logits (B, S_total, vocab), aux dict of scalar MoE losses).
+    """
+    h = _input_hidden(params, batch, cfg, qcfg)
+    h = _hidden_constrain(h, cfg)
+    positions = jnp.arange(h.shape[1])
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch["feats"], cfg, qcfg)
+
+    prefix, n_groups, rem = cfg.layer_specs()
+    aux = dict(ZERO_AUX)
+    for bp, spec in zip(params["prefix"], prefix):
+        h, a = _block_maybe_remat(bp, h, spec, cfg, qcfg, positions, enc_out)
+        aux = {k: aux[k] + a[k] for k in aux}
+
+    if n_groups:
+        def group(carry, xs):
+            hh, acc = carry
+            for i, spec in enumerate(cfg.pattern):
+                hh, a = _apply_block(xs[i], hh, spec, cfg, qcfg, positions,
+                                     enc_out)
+                acc = {k: acc[k] + a[k] for k in acc}
+            return (hh, acc), None
+
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=_remat_policy(cfg))
+        if cfg.scan_layers:
+            (h, aux), _ = lax.scan(group, (h, aux), params["blocks"])
+        else:
+            # Unrolled path (dry-run cost probes: XLA cost_analysis counts
+            # a scan body once regardless of trip count, so probes compile
+            # unrolled and the roofline extrapolates per-group costs).
+            for gi in range(n_groups):
+                xs = jax.tree.map(lambda x: x[gi], params["blocks"])
+                (h, aux), _ = group((h, aux), xs)
+
+    for bp, spec in zip(params["rem"], rem):
+        h, a = _block_maybe_remat(bp, h, spec, cfg, qcfg, positions, enc_out)
+        aux = {k: aux[k] + a[k] for k in aux}
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = _lm_logits(params, h, cfg, qcfg)
+    return logits, aux
+
+
+def _lm_logits(params, h, cfg, qcfg):
+    head_q = qcfg if cfg.quantize_first_last else QuantConfig(fq=qcfg.fq)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"]
+        return jnp.einsum("bsd,vd->bsv", h, w.astype(h.dtype))
+    return L.proj(params["lm_head"], h, head_q)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _ce(logits, labels):
+    """Mean CE over positions with label >= 0."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, qcfg: QuantConfig, *,
+            lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Returns (loss, metrics). batch must contain "labels" (B, S_text).
+
+    With ``cfg.loss_chunk`` the final hidden states are split along the
+    sequence and logits+CE are computed per chunk — the (B, S, vocab) logits
+    tensor never materializes (memory-roofline optimization for huge-vocab
+    archs; mathematically identical to the unchunked loss).
+    """
+    labels = batch["labels"]
+    if cfg.loss_chunk:
+        h, aux = _hidden_forward(params, batch, cfg, qcfg)
+        n_vis = h.shape[1] - labels.shape[1]
+        if n_vis:
+            h = h[:, n_vis:]
+        c = _chunk_of(h.shape[1], cfg.loss_chunk)
+        nc = h.shape[1] // c
+        hc = jnp.moveaxis(h.reshape(h.shape[0], nc, c, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(labels.shape[0], nc, c), 1, 0)
+
+        def step(acc, xs):
+            hh, ll = xs
+            logits = _lm_logits(params, hh, cfg, qcfg).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+            m = (ll >= 0).astype(jnp.float32)
+            return (acc[0] + jnp.sum((lse - gold) * m), acc[1] + jnp.sum(m)), None
+
+        (tot, cnt), _ = lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+        ce = tot / jnp.maximum(cnt, 1.0)
+    else:
+        logits, aux = forward(params, batch, cfg, qcfg)
+        n_vis = logits.shape[1] - labels.shape[1]
+        if n_vis:
+            logits = logits[:, n_vis:]
+        ce = _ce(logits, labels)
+    loss = ce + lb_coef * aux["load_balance"] + z_coef * aux["router_z"]
+    return loss, {"ce": ce, **aux}
+
+
+def _hidden_forward(params, batch, cfg, qcfg):
+    """forward() minus the LM head — final hidden states + aux."""
+    h = _input_hidden(params, batch, cfg, qcfg)
+    h = _hidden_constrain(h, cfg)
+    positions = jnp.arange(h.shape[1])
+    enc_out = _encode(params, batch["feats"], cfg, qcfg) if cfg.enc_dec else None
+    prefix, n_groups, rem = cfg.layer_specs()
+    aux = dict(ZERO_AUX)
+    for bp, spec in zip(params["prefix"], prefix):
+        h, a = _block_maybe_remat(bp, h, spec, cfg, qcfg, positions, enc_out)
+        aux = {k: aux[k] + a[k] for k in aux}
+    if n_groups:
+        def group(carry, xs):
+            hh, acc = carry
+            for i, spec in enumerate(cfg.pattern):
+                hh, a = _apply_block(xs[i], hh, spec, cfg, qcfg, positions,
+                                     enc_out)
+                acc = {k: acc[k] + a[k] for k in acc}
+            return (hh, acc), None
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=_remat_policy(cfg))
+        if cfg.scan_layers:
+            (h, aux), _ = lax.scan(group, (h, aux), params["blocks"])
+        else:
+            for gi in range(n_groups):
+                xs = jax.tree.map(lambda x: x[gi], params["blocks"])
+                (h, aux), _ = group((h, aux), xs)
+    for bp, spec in zip(params["rem"], rem):
+        h, a = _block_maybe_remat(bp, h, spec, cfg, qcfg, positions, enc_out)
+        aux = {k: aux[k] + a[k] for k in aux}
+    return L.rmsnorm(params["final_norm"], h), aux
+
+
+# ---------------------------------------------------------------------------
+# KV caches / decode state
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(spec: LayerSpec, cfg: TransformerConfig, batch: int,
+                 max_len: int, enc_len: int = 0):
+    dh = cfg.head_dim_
+    dt = jnp.bfloat16 if cfg.param_dtype == jnp.bfloat16 else jnp.float32
+    if spec.mixer == "attn":
+        if spec.window is not None:
+            c = attn.init_ring_cache(batch, min(spec.window, max_len),
+                                     cfg.n_kv_heads, dh, dtype=dt)
+        else:
+            c = attn.init_cache(batch, max_len, cfg.n_kv_heads, dh,
+                                kv_bits=cfg.kv_bits, dtype=dt)
+    elif spec.mixer == "mla":
+        c = mla_mod.init_mla_cache(batch, max_len, cfg.mla, dt)
+    elif spec.mixer == "rglru":
+        c = rglru_mod.init_rglru_state(batch, cfg.rnn_width or cfg.d_model, dt)
+    elif spec.mixer == "rwkv":
+        c = rwkv_mod.init_rwkv_state(batch, cfg.d_model, cfg.rwkv_head_dim, dt)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.enc_dec and enc_len:
+        c = dict(c)
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, dh), dt)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, dh), dt)
+    return c
+
+
+def init_caches(cfg: TransformerConfig, batch: int, max_len: int):
+    """Cache pytree parallel to the block layout (stacked for scanned)."""
+    enc_len = cfg.frontend.n_positions if cfg.enc_dec else 0
+    prefix, n_groups, rem = cfg.layer_specs()
+
+    def stacked(spec):
+        return jax.vmap(
+            lambda _: _block_cache(spec, cfg, batch, max_len, enc_len)
+        )(jnp.arange(n_groups))
+
+    return {
+        "prefix": tuple(_block_cache(s, cfg, batch, max_len, enc_len)
+                        for s in prefix),
+        "blocks": tuple(stacked(s) for s in cfg.pattern) if n_groups else (),
+        "rem": tuple(_block_cache(s, cfg, batch, max_len, enc_len)
+                     for s in rem),
+    }
+
+
+def cache_struct(cfg: TransformerConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _prefill_block(bp, h, cache, spec, cfg, qcfg, positions, enc_out,
+                   max_len):
+    """Sequence forward that also fills this layer's cache."""
+    hn = L.maybe_norm(bp["ln1"], h, qcfg)
+    s_len = h.shape[1]
+    new_cache = dict(cache)
+    if spec.mixer == "attn":
+        mix, (k, v) = _self_attn_seq(bp["attn"], hn, spec, cfg, qcfg,
+                                     positions, return_kv=True)
+        if spec.window is not None:
+            ring = {k2: cache[k2] for k2 in ("k", "v", "slot_pos", "pos")}
+            new_cache.update(attn.ring_fill(ring, k, v))
+        else:
+            full = {k2: cache[k2] for k2 in cache if k2 in
+                    ("k", "v", "pos", "k_scale", "v_scale")}
+            full = dict(full, pos=jnp.zeros((), jnp.int32))
+            new_cache.update(attn.cache_update(full, k, v))
+    elif spec.mixer == "mla":
+        mix, (ckv, k_rope) = mla_mod.mla_attention(
+            bp["attn"], hn, positions, cfg.n_heads, cfg.mla, qcfg,
+            q_chunk=_chunk_of(s_len, 512), kv_chunk=_chunk_of(s_len, 1024))
+        new_cache["ckv"] = lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+        new_cache["k_rope"] = lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0))
+        new_cache["pos"] = jnp.asarray(s_len, jnp.int32)
+    elif spec.mixer == "rglru":
+        mix, st = rglru_mod.apply_rglru_seq(bp["attn"], hn, qcfg,
+                                            return_state=True)
+        new_cache.update(st)
+    elif spec.mixer == "rwkv":
+        mix, S = rwkv_mod.apply_timemix_seq(bp["attn"], hn, qcfg,
+                                            cfg.rwkv_head_dim,
+                                            return_state=True)
+        new_cache["S"] = S
+        new_cache["x_tm"] = hn[:, -1]
+    h = h + mix
+    if enc_out is not None and "xattn" in bp:
+        hx = L.maybe_norm(bp["lnx"], h, qcfg)
+        h = h + _cross_attn_seq(bp["xattn"], hx, enc_out, cfg, qcfg)
+        dh = cfg.head_dim_
+        xp = bp["xattn"]
+        new_cache["xk"] = L.proj(xp["wk"], enc_out, qcfg).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads, dh).astype(cache["xk"].dtype)
+        new_cache["xv"] = L.proj(xp["wv"], enc_out, qcfg).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads, dh).astype(cache["xv"].dtype)
+    if spec.mixer == "rwkv":
+        hn2 = L.maybe_norm(bp["ln1"], h, qcfg)
+        h = h + rwkv_mod.apply_channelmix_seq(bp["attn"], hn2, qcfg)
+        new_cache["x_cm"] = hn2[:, -1]
+        return _hidden_constrain(h, cfg), new_cache
+    hn2 = L.maybe_norm(bp["ln2"], h, qcfg)
+    y, _ = _ffn(bp["ffn"], hn2, spec, cfg, qcfg)
+    return _hidden_constrain(h + y, cfg), new_cache
+
+
+def prefill(params, batch, cfg: TransformerConfig, qcfg: QuantConfig, *,
+            max_len: Optional[int] = None):
+    """Process the prompt; returns (last-token logits, filled caches)."""
+    h = _input_hidden(params, batch, cfg, qcfg)
+    h = _hidden_constrain(h, cfg)
+    s_total = h.shape[1]
+    max_len = max_len or s_total
+    positions = jnp.arange(s_total)
+    enc_out = _encode(params, batch["feats"], cfg, qcfg) if cfg.enc_dec else None
+    caches = init_caches(cfg, h.shape[0], max_len)
+    prefix, n_groups, rem = cfg.layer_specs()
+
+    new_prefix = []
+    for bp, c, spec in zip(params["prefix"], caches["prefix"], prefix):
+        h, nc = _prefill_block(bp, h, c, spec, cfg, qcfg, positions, enc_out,
+                               max_len)
+        new_prefix.append(nc)
+
+    new_blocks = caches["blocks"]
+    if n_groups:
+        def group(hh, xs):
+            bps, cs = xs
+            ncs = []
+            for i, spec in enumerate(cfg.pattern):
+                hh, nc = _prefill_block(bps[i], hh, cs[i], spec, cfg, qcfg,
+                                        positions, enc_out, max_len)
+                ncs.append(nc)
+            return hh, tuple(ncs)
+
+        if cfg.remat:
+            group = jax.checkpoint(group, policy=_remat_policy(cfg))
+        if cfg.scan_layers:
+            h, new_blocks = lax.scan(group, h,
+                                     (params["blocks"], caches["blocks"]))
+        else:
+            ys = []
+            for gi in range(n_groups):
+                xs = jax.tree.map(lambda x: x[gi],
+                                  (params["blocks"], caches["blocks"]))
+                h, nc = group(h, xs)
+                ys.append(nc)
+            new_blocks = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+    new_rem = []
+    for bp, c, spec in zip(params["rem"], caches["rem"], rem):
+        h, nc = _prefill_block(bp, h, c, spec, cfg, qcfg, positions, enc_out,
+                               max_len)
+        new_rem.append(nc)
+
+    h_last = L.rmsnorm(params["final_norm"], h[:, -1:])
+    logits = _lm_logits(params, h_last, cfg, qcfg)
+    return logits, {"prefix": tuple(new_prefix), "blocks": new_blocks,
+                    "rem": tuple(new_rem)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def _decode_block(bp, h, cache, spec, cfg, qcfg):
+    """One-token step. h: (B, 1, d). Returns (h, new_cache)."""
+    hn = L.maybe_norm(bp["ln1"], h, qcfg)
+    new_cache = dict(cache)
+    dh = cfg.head_dim_
+    if spec.mixer == "attn":
+        pos = cache["pos"]
+        q = _heads(L.proj(bp["attn"]["wq"], hn, qcfg), cfg.n_heads, dh)
+        k = _heads(L.proj(bp["attn"]["wk"], hn, qcfg), cfg.n_kv_heads, dh)
+        v = _heads(L.proj(bp["attn"]["wv"], hn, qcfg), cfg.n_kv_heads, dh)
+        if cfg.pos == "rope":
+            b_, hq_, _, _ = q.shape
+            posv = pos[None]
+            q = L.rope(q.reshape(-1, 1, dh), posv,
+                       theta=cfg.rope_theta).reshape(q.shape)
+            k = L.rope(k.reshape(-1, 1, dh), posv,
+                       theta=cfg.rope_theta).reshape(k.shape)
+        kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        if spec.window is not None:
+            ring = {k2: cache[k2] for k2 in ("k", "v", "slot_pos", "pos")}
+            upd = attn.ring_update(ring, kt, vt)
+            new_cache.update(upd)
+            out = attn.ring_decode_attention(q, upd)
+        else:
+            keys = [k2 for k2 in ("k", "v", "pos", "k_scale", "v_scale")
+                    if k2 in cache]
+            full = {k2: cache[k2] for k2 in keys}
+            upd = attn.cache_update(full, kt, vt)
+            new_cache.update(upd)
+            out = attn.decode_attention(q, upd)
+        mix = L.proj(bp["attn"]["wo"], _unheads(out), qcfg)
+    elif spec.mixer == "mla":
+        sub_keys = ("ckv", "k_rope", "pos")
+        sub = {k2: cache[k2] for k2 in sub_keys}
+        mix, upd = mla_mod.mla_decode(bp["attn"], hn, sub, cfg.n_heads,
+                                      cfg.mla, qcfg)
+        new_cache.update(upd)
+    elif spec.mixer == "rglru":
+        sub = {"h": cache["h"], "conv": cache["conv"]}
+        mix, upd = rglru_mod.apply_rglru_step(bp["attn"], hn, sub, qcfg)
+        new_cache.update(upd)
+    elif spec.mixer == "rwkv":
+        sub = {"S": cache["S"], "x_tm": cache["x_tm"], "x_cm": cache["x_cm"]}
+        mix, upd = rwkv_mod.apply_block_step(bp["attn"], hn, sub, qcfg,
+                                             cfg.rwkv_head_dim)
+        new_cache.update(upd)
+    else:
+        raise ValueError(spec.mixer)
+    h = h + mix
+    if "xattn" in bp and "xk" in cache:
+        hx = L.maybe_norm(bp["lnx"], h, qcfg)
+        q = _heads(L.proj(bp["xattn"]["wq"], hx, qcfg), cfg.n_heads, dh)
+        xc = {"k": cache["xk"], "v": cache["xv"],
+              "pos": jnp.asarray(cache["xk"].shape[1], jnp.int32)}
+        out = attn.decode_attention(q, xc)
+        h = h + L.proj(bp["xattn"]["wo"], _unheads(out), qcfg)
+    if spec.mixer == "rwkv":
+        hn2 = L.maybe_norm(bp["ln1"], h, qcfg)
+        cm_sub = {"x_cm": new_cache["x_cm"]}
+        y, cm_upd = rwkv_mod.apply_channelmix_step(bp["attn"], hn2, cm_sub,
+                                                   qcfg)
+        new_cache["x_cm"] = cm_upd["x_cm"]
+        return h + y, new_cache
+    hn2 = L.maybe_norm(bp["ln2"], h, qcfg)
+    y, _ = _ffn(bp["ffn"], hn2, spec, cfg, qcfg)
+    return h + y, new_cache
+
+
+def decode_step(params, caches, tokens, cfg: TransformerConfig,
+                qcfg: QuantConfig):
+    """tokens: (B, 1) -> (logits (B, 1, vocab), new caches)."""
+    pos = _current_pos(caches, cfg)
+    h = _embed_tokens_at(params, tokens, cfg, pos)
+    prefix, n_groups, rem = cfg.layer_specs()
+
+    new_prefix = []
+    for bp, c, spec in zip(params["prefix"], caches["prefix"], prefix):
+        h, nc = _decode_block(bp, h, c, spec, cfg, qcfg)
+        new_prefix.append(nc)
+
+    new_blocks = caches["blocks"]
+    if n_groups:
+        def group(hh, xs):
+            bps, cs = xs
+            ncs = []
+            for i, spec in enumerate(cfg.pattern):
+                hh, nc = _decode_block(bps[i], hh, cs[i], spec, cfg, qcfg)
+                ncs.append(nc)
+            return hh, tuple(ncs)
+
+        if cfg.scan_layers:
+            h, new_blocks = lax.scan(group, h,
+                                     (params["blocks"], caches["blocks"]))
+        else:
+            ys = []
+            for gi in range(n_groups):
+                xs = jax.tree.map(lambda x: x[gi],
+                                  (params["blocks"], caches["blocks"]))
+                h, nc = group(h, xs)
+                ys.append(nc)
+            new_blocks = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+
+    new_rem = []
+    for bp, c, spec in zip(params["rem"], caches["rem"], rem):
+        h, nc = _decode_block(bp, h, c, spec, cfg, qcfg)
+        new_rem.append(nc)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = _lm_logits(params, h, cfg, qcfg)
+    return logits, {"prefix": tuple(new_prefix), "blocks": new_blocks,
+                    "rem": tuple(new_rem)}
+
+
+def _current_pos(caches, cfg):
+    """Absolute position of the incoming token, from any stateful cache."""
+    for c in list(caches["prefix"]) + list(caches["rem"]):
+        if "pos" in c:
+            return c["pos"]
+    for c in caches["blocks"]:
+        if "pos" in c:
+            return c["pos"][0]
+    return jnp.zeros((), jnp.int32)  # pure-SSM stacks track no position
+
+
+def _embed_tokens_at(params, tokens, cfg, pos):
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if cfg.pos == "abs":
+        pe = lax.dynamic_slice_in_dim(params["pos_embed"],
+                                      jnp.asarray(pos, jnp.int32), 1, 0)
+        h = h + pe[None].astype(h.dtype)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Serving-time parameter quantization (paper §3.4 deployment)
+# ---------------------------------------------------------------------------
+
+
+def quantize_params_for_serving(params, bits_w: int = 8):
+    """Convert every FQ projection's weights to stored int8 codes.
+
+    Real value = e^{s_w}/n * code (paper eq. 4); ``layers.proj`` and the MoE
+    path pick up the codes automatically. Embeddings / norms / small vectors
+    stay in their original dtype (the paper keeps first/last layers higher
+    precision).
+    """
+    n = n_levels(bits_w)
+
+    def codes_of(w, s):
+        """round(clip(w/e^s, -1, 1) * n) with s broadcast to w's trailing
+        matrix dims (s may carry leading stack/expert dims)."""
+        sb = jnp.exp(s).reshape(s.shape + (1,) * (w.ndim - s.ndim))
+        u = jnp.clip(w.astype(jnp.float32) / sb, WEIGHT_BOUND, 1.0)
+        return jnp.round(u * n).astype(jnp.int8)
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "w" in tree and "s_w" in tree and \
+                    getattr(tree["w"], "ndim", 0) - \
+                    getattr(tree["s_w"], "ndim", 0) == 2:
+                # FQ projection: unstacked (di, do) + scalar s, or
+                # scan-stacked (G, di, do) + (G,) s. (Conv kernels have
+                # ndim - s.ndim > 2 and keep the float path — CNNs deploy
+                # through core/integer_inference instead.)
+                w, s = tree["w"], tree["s_w"]
+                rest = {k: v for k, v in tree.items() if k != "w"}
+                return {"w_codes": codes_of(w, s),
+                        "w_scale": (jnp.exp(s) / n).astype(jnp.float32),
+                        **rest}
+            if "w_gate" in tree and "s_w" in tree:
+                # MoE experts: s_w is (3, E, 1, 1) or stacked (G, 3, E, 1, 1)
+                # — the matrix index always sits at axis -4.
+                out = {k: v for k, v in tree.items()
+                       if k not in ("w_gate", "w_up", "w_down")}
+                scales = []
+                for i, k in enumerate(("w_gate", "w_up", "w_down")):
+                    s = jnp.take(tree["s_w"], i, axis=-4)
+                    out[k + "_codes"] = codes_of(tree[k], s)
+                    scales.append(jnp.exp(s) / n)
+                out["w_scale"] = jnp.stack(
+                    scales, axis=-4).astype(jnp.float32)
+                return out
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)

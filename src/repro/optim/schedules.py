@@ -1,0 +1,64 @@
+"""Learning-rate schedules: the paper's (step decay, exponential decay) and
+the assigned archs' (WSD for minicpm, cosine for the llamas).
+
+All schedules are ``step -> lr`` functions of a traced int32 step, built
+from jnp ops so they live inside the jitted train step.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def exponential(lr: float, decay: float, steps_per_epoch: int = 1):
+    """Paper §4.2 (KWS): lr * decay^epoch."""
+    def f(step):
+        epoch = step // steps_per_epoch
+        return jnp.float32(lr) * jnp.float32(decay) ** epoch
+    return f
+
+
+def step_decay(lr: float, boundaries: Sequence[int], factor: float):
+    """Paper §4.3 (ResNet-32): decay by ``factor`` at each boundary."""
+    bs = jnp.array(boundaries)
+
+    def f(step):
+        k = jnp.sum(step >= bs)
+        return jnp.float32(lr) * jnp.float32(factor) ** k
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.1):
+    def f(step):
+        step = jnp.minimum(step, total_steps)
+        warm = jnp.where(warmup > 0, step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * jnp.minimum(warm, 1.0) * cos
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, floor_frac: float = 0.01):
+    """Warmup–Stable–Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long flat plateau, sharp final decay to a floor. The plateau makes
+    mid-run checkpoint reuse (continual pretraining) cheap — also exactly
+    what the gradual-quantization ladder wants between stages."""
+    w = max(int(total_steps * warmup_frac), 1)
+    d = max(int(total_steps * decay_frac), 1)
+    s0 = total_steps - d
+
+    def f(step):
+        step = jnp.minimum(step, total_steps)
+        warm = step / w
+        dec = 1.0 - (1.0 - floor_frac) * (step - s0) / d
+        lr_t = jnp.where(step < w, warm, jnp.where(step < s0, 1.0, dec))
+        return jnp.float32(lr) * lr_t
+    return f

@@ -1,0 +1,57 @@
+"""SGD with Nesterov momentum + decoupled weight decay (paper §4.1/4.3:
+"SGD with Nesterov Momentum (0.9), weight decay 5E-4").
+
+Minimal optimizer API shared by all optimizers in this package:
+    opt = make(...)
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    # param_specs (pytree of PartitionSpec) -> state specs pytree, so the
+    # launcher can shard optimizer state like (or beyond — ZeRO) the params.
+    state_specs: Callable = None
+
+
+def make(lr_fn, *, momentum: float = 0.9, nesterov: bool = True,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(params, grads, state, step):
+        lr = lr_fn(step)
+
+        def upd(p, g, mu):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g
+            step_dir = g + momentum * mu_new if nesterov else mu_new
+            return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), \
+                mu_new
+
+        p_flat, tdef = jax.tree.flatten(params)
+        g_flat = jax.tree.leaves(grads)
+        mu_flat = jax.tree.leaves(state["mu"])
+        results = [upd(p, g, mu)
+                   for p, g, mu in zip(p_flat, g_flat, mu_flat)]
+        new_params = tdef.unflatten([r[0] for r in results])
+        new_mu = tdef.unflatten([r[1] for r in results])
+        return new_params, {"mu": new_mu}
+
+    def state_specs(param_specs):
+        return {"mu": param_specs}
+
+    return Optimizer(init, update, state_specs)

@@ -1,0 +1,144 @@
+"""Continuous batching over fixed decode slots.
+
+The jitted ``serve_step`` has a fixed batch dimension (B slots). Requests
+queue; free slots are filled opportunistically; finished slots (EOS or
+max-tokens) retire and refill WITHOUT recompiling — slot state is masked,
+not resized. This is the standard production pattern (vLLM-style continuous
+batching adapted to jit's static shapes): throughput tracks the number of
+active slots, and one stalled request never blocks the others.
+
+The per-slot cache reset uses the prefill path on a single-slot batch and a
+scatter into the slot's cache rows — O(prompt) work, no full-batch refill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import QuantConfig
+from ..models import transformer as T
+from .decode import SampleConfig, make_serve_step, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Single-host reference implementation (CPU-testable).
+
+    For simplicity each newly admitted request's prompt is prefill'd into a
+    fresh single-slot cache then scattered into the batch cache at the slot
+    index. All slots then decode in lockstep through one jitted step.
+
+    Known simplification: position counters are per-layer scalars shared
+    across slots (jit-static cache layout), so concurrent requests must have
+    equal prompt lengths; a per-slot position vector (vLLM-style) is the
+    production extension and is sketched in DESIGN.md.
+    """
+
+    def __init__(self, params, model_cfg, qcfg: QuantConfig, *, slots: int,
+                 max_len: int, eos_id: int = -1,
+                 sc: SampleConfig = SampleConfig()):
+        self.params = params
+        self.cfg = model_cfg
+        self.qcfg = qcfg
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.sc = sc
+        self.caches = T.init_caches(model_cfg, slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.budget = jnp.zeros((slots,), jnp.int32)
+        self._step = jax.jit(make_serve_step(model_cfg, qcfg),
+                             donate_argnums=(1,))
+        self._key = jax.random.key(0)
+
+    # -- slot management ----------------------------------------------------
+
+    def _admit(self, req: Request, slot: int):
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, fresh = T.prefill(self.params, {"tokens": toks}, self.cfg,
+                                  self.qcfg, max_len=self.max_len)
+
+        # Scatter the single-slot cache into this slot of the batch cache.
+        # The batch axis is wherever batch_leaf has `slots` and the fresh
+        # leaf has 1 (scan-stacked caches carry a leading layer dim).
+        def put(batch_leaf, one_leaf):
+            if batch_leaf.shape == one_leaf.shape:
+                return one_leaf  # shared position counters — lockstep
+            for ax in range(one_leaf.ndim):
+                if (one_leaf.shape[ax] == 1
+                        and batch_leaf.shape[ax] == self.slots
+                        and one_leaf.shape[:ax] == batch_leaf.shape[:ax]
+                        and one_leaf.shape[ax + 1:]
+                        == batch_leaf.shape[ax + 1:]):
+                    idx = tuple([slice(None)] * ax + [slot])
+                    return batch_leaf.at[idx].set(jnp.squeeze(one_leaf, ax))
+            return one_leaf
+
+        self.caches = jax.tree.map(put, self.caches, fresh)
+        tok = sample(self._key, logits, self.sc)
+        self.cur_tok = self.cur_tok.at[slot].set(tok[0])
+        # The prefill logits already produced the first output token.
+        req.out.append(int(tok[0, 0]))
+        if int(tok[0, 0]) == self.eos_id or req.max_new <= 1:
+            req.done = True
+            return
+        self.budget = self.budget.at[slot].set(req.max_new - 1)
+        self.active[slot] = req
+
+    def submit(self, reqs: List[Request]):
+        self._queue = getattr(self, "_queue", [])
+        self._queue.extend(reqs)
+
+    def _fill_slots(self):
+        q = getattr(self, "_queue", [])
+        for i in range(self.slots):
+            if self.active[i] is None and q:
+                self._admit(q.pop(0), i)
+        self._queue = q
+
+    # -- main loop ----------------------------------------------------------
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._fill_slots()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.caches = self._step(self.params, self.caches,
+                                         self.cur_tok)
+        self._key = jax.random.fold_in(self._key, 1)
+        nxt = sample(self._key, logits, self.sc)
+        self.cur_tok = nxt
+        self.budget = jnp.maximum(self.budget - 1, 0)
+        n_active = 0
+        toks = jax.device_get(nxt)[:, 0]
+        budget = jax.device_get(self.budget)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(toks[i]))
+            if int(toks[i]) == self.eos_id or budget[i] <= 0:
+                req.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, reqs: List[Request], max_steps: int = 10_000
+            ) -> Dict[int, list]:
+        self.submit(reqs)
+        for _ in range(max_steps):
+            if self.step() == 0 and not getattr(self, "_queue", []):
+                break
+        return {r.rid: r.out for r in reqs}

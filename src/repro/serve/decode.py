@@ -1,0 +1,123 @@
+"""Serving: jitted prefill + decode loop with donated caches.
+
+``serve_step`` is the unit the decode-shape dry-run lowers: ONE new token
+against a seq_len KV cache. The cache is donated so XLA updates it in place
+(no per-step cache copy — at 32k x 128 batch the copy would double the
+memory-roofline term).
+
+Sampling is temperature/top-k on the last-token logits; greedy is temp=0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.quant import QuantConfig
+from ..models import sharding as shd
+from ..models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+def sample(key, logits, sc: SampleConfig):
+    """logits: (B, 1, V) -> tokens (B, 1)."""
+    lg = logits[:, -1].astype(jnp.float32)
+    if sc.temperature <= 0.0:
+        return jnp.argmax(lg, -1, keepdims=True).astype(jnp.int32)
+    lg = lg / sc.temperature
+    if sc.top_k > 0:
+        kth = jax.lax.top_k(lg, sc.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg)[:, None].astype(jnp.int32)
+
+
+def make_serve_step(model_cfg, qcfg: QuantConfig):
+    """serve_step(params, caches, tokens) -> (logits, new_caches)."""
+
+    def step(params, caches, tokens):
+        return T.decode_step(params, caches, tokens, model_cfg, qcfg)
+
+    return step
+
+
+def cache_specs(caches_struct, mesh):
+    """PartitionSpecs for the cache pytree: batch over DP axes; the cache
+    sequence dim over ``model`` for full-attention KV (flash-decode style —
+    per-device partial softmax, XLA inserts the combine), replicated for
+    small recurrent/ring states."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_size = mesh.devices.shape[mesh.axis_names.index("model")] \
+        if "model" in mesh.axis_names else 1
+
+    def spec(x):
+        if x.ndim >= 3:  # (B, S, ...) caches
+            b, s = x.shape[0], x.shape[1]
+            dp = 1
+            for a in batch_axes:
+                dp *= mesh.devices.shape[mesh.axis_names.index(a)]
+            ba = batch_axes if b % dp == 0 and b >= dp else ()
+            sa = "model" if s % model_size == 0 and s > 1024 else None
+            return P(ba if ba else None, sa, *([None] * (x.ndim - 2)))
+        if x.ndim >= 1 and x.shape and x.shape[0] > 1:
+            return P()
+        return P()
+
+    return jax.tree.map(spec, caches_struct)
+
+
+def jit_serve_step(model_cfg, qcfg, mesh, mode: str, *,
+                   serve_bits_w: Optional[int] = None):
+    """Jitted serve step + (param_specs, cache_spec_fn) for the dry-run.
+
+    ``serve_bits_w`` marks that params arrive already converted by
+    ``quantize_params_for_serving`` (int8 codes) — specs are re-derived on
+    the converted structure so the codes inherit the weight sharding.
+    """
+    params_struct = T.param_struct(model_cfg)
+    if serve_bits_w:
+        params_struct = jax.eval_shape(
+            functools.partial(T.quantize_params_for_serving,
+                              bits_w=serve_bits_w), params_struct)
+    pspecs = shd.param_specs(params_struct, mode, mesh)
+    step = make_serve_step(model_cfg, qcfg)
+
+    def named(specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    jit_step = jax.jit(step,
+                       in_shardings=(named(pspecs), None, None),
+                       donate_argnums=(1,))
+    return jit_step, pspecs
+
+
+def generate(params, model_cfg, qcfg, prompt_batch, *, max_new: int,
+             sc: SampleConfig = SampleConfig(), seed: int = 0,
+             max_len: Optional[int] = None):
+    """Host-side generate loop (prefill + greedy/sampled decode)."""
+    b = prompt_batch["tokens"].shape[0]
+    s = prompt_batch["tokens"].shape[1]
+    if model_cfg.frontend.enabled and not model_cfg.enc_dec:
+        s += model_cfg.frontend.n_positions
+    max_len = max_len or (s + max_new)
+    logits, caches = T.prefill(params, prompt_batch, model_cfg, qcfg,
+                               max_len=max_len)
+    step = jax.jit(make_serve_step(model_cfg, qcfg), donate_argnums=(1,))
+    key = jax.random.key(seed)
+    out = []
+    tok = sample(key, logits, sc)
+    for i in range(max_new):
+        out.append(tok)
+        logits, caches = step(params, caches, tok)
+        key = jax.random.fold_in(key, i)
+        tok = sample(key, logits, sc)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,88 @@
+"""Elastic scaling + straggler mitigation.
+
+Node loss / cluster resize path:
+
+  1. a heartbeat (``StepWatchdog``) detects a straggling or dead step,
+  2. the launcher falls back to checkpoint restart (train/checkpoint.py),
+  3. ``remesh`` rebuilds the mesh at the surviving (pod, data, model) size,
+  4. ``reshard`` re-places the restored (host-RAM numpy) pytrees onto the
+     new mesh with specs re-derived from the same partition rules —
+     data-parallel state is replicated so ANY data-axis resize is a pure
+     re-placement; tensor-parallel arrays re-chunk along their saved full
+     axes (checkpoints always store full arrays).
+  5. the data loader needs no coordination: batches are a pure function of
+     (seed, step), so the resumed run consumes identical data.
+
+Constraint checked here: global_batch must stay divisible by the new
+(pod x data) extent — the caller picks a new global batch or microbatch
+split otherwise.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import sharding as shd
+
+
+def remesh(shape: Sequence[int], axes: Sequence[str]):
+    """Build a mesh of any (pod, data, model) size from surviving devices."""
+    n = 1
+    for s in shape:
+        n *= s
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def check_batch(global_batch: int, mesh) -> bool:
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.devices.shape[mesh.axis_names.index(a)]
+    return global_batch % dp == 0
+
+
+def reshard(tree, mesh, mode: str):
+    """Place a host-RAM (numpy) pytree onto ``mesh`` with re-derived specs."""
+    specs = shd.param_specs(tree, mode, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: not isinstance(x, (dict, tuple, list)))
+
+
+def reshard_with_specs(tree, mesh, specs):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: not isinstance(x, (dict, tuple, list)))
+
+
+class StepWatchdog:
+    """Per-step timeout hook: detects stragglers / hangs.
+
+    The launcher calls ``tick()`` after every completed step; a monitor
+    thread (or the next tick) notices when a step exceeded ``timeout_s`` and
+    flags ``tripped`` — launch/train.py then drops to the checkpoint-restart
+    path. Deliberately simple: no daemon dependencies, works single-process,
+    and under multi-host JAX every process trips independently and re-joins
+    through the barrier in jax.distributed re-init.
+    """
+
+    def __init__(self, timeout_s: float, grace_steps: int = 3):
+        self.timeout_s = timeout_s
+        self.grace = grace_steps
+        self._last = time.monotonic()
+        self._steps = 0
+        self.tripped = False
+
+    def tick(self) -> bool:
+        now = time.monotonic()
+        self._steps += 1
+        if self._steps > self.grace and now - self._last > self.timeout_s:
+            self.tripped = True
+        self._last = now
+        return self.tripped

@@ -1,0 +1,123 @@
+"""Flash attention vs naive reference; caches; ring buffer; GQA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def naive_attention(q, k, v, *, causal=True, window=None):
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * d ** -0.5
+    qpos = jnp.arange(tq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((tq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(p.dtype)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, None)])
+def test_flash_vs_naive(hq, hkv, causal, window):
+    key = jax.random.key(hq * 10 + hkv)
+    b, t, d = 2, 32, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, t, d))
+    k = jax.random.normal(ks[1], (b, hkv, t, d))
+    v = jax.random.normal(ks[2], (b, hkv, t, d))
+    got = A.flash_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=8, kv_chunk=16)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_full_attention():
+    """Token-by-token decode through the cache == full causal attention."""
+    key = jax.random.key(0)
+    b, hq, hkv, t, d = 2, 4, 2, 10, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, t, d))
+    k = jax.random.normal(ks[1], (b, hkv, t, d))
+    v = jax.random.normal(ks[2], (b, hkv, t, d))
+    want = naive_attention(q, k, v, causal=True)
+
+    cache = A.init_cache(b, t, hkv, d, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        cache = A.cache_update(cache, k[:, :, i:i+1].transpose(0, 2, 1, 3),
+                               v[:, :, i:i+1].transpose(0, 2, 1, 3))
+        outs.append(A.decode_attention(q[:, :, i:i+1], cache))
+    got = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_int8_kv_cache_close():
+    """Quantized KV cache decode stays within int8 rounding error."""
+    key = jax.random.key(1)
+    b, hq, hkv, t, d = 1, 2, 2, 6, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, t, d))
+    k = jax.random.normal(ks[1], (b, hkv, t, d))
+    v = jax.random.normal(ks[2], (b, hkv, t, d))
+    want = naive_attention(q, k, v, causal=True)
+    cache = A.init_cache(b, t, hkv, d, kv_bits=8, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        cache = A.cache_update(cache, k[:, :, i:i+1].transpose(0, 2, 1, 3),
+                               v[:, :, i:i+1].transpose(0, 2, 1, 3))
+        outs.append(A.decode_attention(q[:, :, i:i+1], cache))
+    got = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.05, atol=0.05)
+
+
+def test_ring_buffer_matches_window_attention():
+    """Ring-cache decode == sliding-window attention at every step."""
+    key = jax.random.key(2)
+    b, hq, hkv, t, d, w = 1, 2, 1, 20, 8, 6
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, t, d))
+    k = jax.random.normal(ks[1], (b, hkv, t, d))
+    v = jax.random.normal(ks[2], (b, hkv, t, d))
+    want = naive_attention(q, k, v, causal=True, window=w)
+    cache = A.init_ring_cache(b, w, hkv, d, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        cache = A.ring_update(cache, k[:, :, i:i+1].transpose(0, 2, 1, 3),
+                              v[:, :, i:i+1].transpose(0, 2, 1, 3))
+        outs.append(A.ring_decode_attention(q[:, :, i:i+1], cache))
+    got = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s", [4, 6, 13])
+def test_ring_fill_matches_incremental(s):
+    """Prefilling a ring cache == pushing tokens one by one."""
+    key = jax.random.key(3)
+    b, hkv, d, w = 1, 2, 4, 6
+    k = jax.random.normal(key, (b, s, hkv, d))
+    v = k * 0.5
+    inc = A.init_ring_cache(b, w, hkv, d, dtype=jnp.float32)
+    for i in range(s):
+        inc = A.ring_update(inc, k[:, i:i+1], v[:, i:i+1])
+    filled = A.ring_fill(A.init_ring_cache(b, w, hkv, d, dtype=jnp.float32),
+                         k, v)
+    np.testing.assert_allclose(np.asarray(inc["k"]), np.asarray(filled["k"]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(inc["slot_pos"]),
+                                  np.asarray(filled["slot_pos"]))
+    assert int(inc["pos"]) == int(filled["pos"]) == s

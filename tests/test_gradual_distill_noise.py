@@ -1,0 +1,104 @@
+"""Gradual quantization driver, distillation losses, noise model (§3.2-§4.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distill, gradual, noise
+from repro.core.quant import LADDERS, QuantConfig
+
+
+def test_ladder_driver_initializes_from_previous():
+    seen = []
+
+    def train_stage(params, qcfg, teacher, idx):
+        seen.append((params, qcfg.label(), teacher))
+        return params + 1, float(10 - idx)  # decreasing "accuracy"
+
+    res = gradual.run_ladder(LADDERS["cifar10"], 0, train_stage)
+    # params chain 0 -> 1 -> 2 ... (each stage starts from the last)
+    assert [s[0] for s in seen] == list(range(len(LADDERS["cifar10"])))
+    # metric decreasing -> teacher stays the FIRST stage's params (best).
+    assert seen[1][2] == 1  # teacher after stage 0 = its output params
+    assert seen[2][2] == 1  # still the best (later stages were worse)
+    assert res.best.val_metric == 10.0
+
+
+def test_no_gq_baseline_jumps_straight():
+    calls = []
+
+    def train_stage(params, qcfg, teacher, idx):
+        calls.append(qcfg.label())
+        return params, 1.0
+
+    gradual.no_gq_baseline(QuantConfig(2, 2), "fp", train_stage)
+    assert calls == ["QW2A2"]
+
+
+def test_distillation_loss_at_matching_logits():
+    """Student matching the teacher minimizes the KL term."""
+    key = jax.random.key(0)
+    t = jax.random.normal(key, (4, 10))
+    labels = jnp.argmax(t, -1)
+    l_match = distill.distillation_loss(t, t, labels)
+    l_off = distill.distillation_loss(t + 2.0 * jax.random.normal(
+        jax.random.key(1), t.shape), t, labels)
+    assert float(l_match) < float(l_off)
+
+
+def test_distillation_t2_scaling():
+    """The T^2 factor keeps the soft-gradient magnitude comparable."""
+    key = jax.random.key(2)
+    s = jax.random.normal(key, (8, 5))
+    t = jax.random.normal(jax.random.key(3), (8, 5))
+    labels = jnp.zeros((8,), jnp.int32)
+
+    def kl_grad_norm(temp):
+        g = jax.grad(lambda x: distill.distillation_loss(
+            x, t, labels, temperature=temp, alpha=1.0))(s)
+        return float(jnp.linalg.norm(g))
+
+    # within ~an order of magnitude across temperatures
+    n1, n4 = kl_grad_norm(1.0), kl_grad_norm(4.0)
+    assert 0.1 < n1 / n4 < 10.0
+
+
+def test_label_refinery_loss():
+    t = jax.random.normal(jax.random.key(4), (4, 6))
+    assert float(distill.label_refinery_loss(t, t)) < \
+        float(distill.label_refinery_loss(-t, t))
+
+
+def test_noise_sigma_scales_with_lsb():
+    """sigma is % of LSB = e^s/n (paper §4.4's parameterization)."""
+    x = jnp.zeros((20_000,))
+    s = jnp.float32(1.0)
+    key = jax.random.key(5)
+    y = noise.add_lsb_noise(x, key, 0.30, s, 5)
+    lsb = float(jnp.exp(s)) / 15
+    np.testing.assert_allclose(float(jnp.std(y)), 0.30 * lsb, rtol=0.05)
+
+
+def test_noise_disabled_paths():
+    x = jnp.ones((8,))
+    s = jnp.float32(0.0)
+    assert noise.add_lsb_noise(x, None, 0.5, s, 5) is x
+    assert noise.add_lsb_noise(x, jax.random.key(0), 0.0, s, 5) is x
+    assert noise.add_lsb_noise(x, jax.random.key(0), 0.5, s, None) is x
+
+
+def test_table7_conditions():
+    assert len(noise.TABLE7_CONDITIONS) == 5
+    c = noise.TABLE7_CONDITIONS[-1]
+    assert (c.sigma_w, c.sigma_a, c.sigma_mac) == (0.30, 0.30, 1.50)
+
+
+def test_noise_in_fq_layer_changes_output():
+    from repro.core import fq_layers as fql
+    p = fql.init_fq_linear(jax.random.key(6), 8, 8)
+    x = jax.random.normal(jax.random.key(7), (4, 8))
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    clean = fql.fq_linear(p, x, qcfg)
+    noisy = fql.fq_linear(p, x, qcfg, noise=noise.NoiseConfig(0.3, 0.3, 1.5),
+                          rng=jax.random.key(8))
+    assert float(jnp.max(jnp.abs(clean - noisy))) > 0

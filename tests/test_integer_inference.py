@@ -1,0 +1,87 @@
+"""Paper eq. 4: the integer deployment path is BIT-EXACT vs the float
+Q() training path, end to end through stacked FQ layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fq_layers as fql
+from repro.core import integer_inference as ii
+from repro.core.quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND,
+                              learned_quantize, n_levels)
+
+
+def _trained_like_layer(key, din, dout, s_in=0.0, s_w=None, s_out=0.3):
+    p = fql.init_fq_linear(key, din, dout)
+    p["s_in"] = jnp.float32(s_in)
+    if s_w is not None:
+        p["s_w"] = jnp.float32(s_w)
+    p["s_out"] = jnp.float32(s_out)
+    return p
+
+
+def test_single_layer_bit_exact():
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    key = jax.random.key(0)
+    p = _trained_like_layer(key, 16, 8)
+    x = jax.random.uniform(jax.random.key(1), (5, 16))  # ReLU-domain input
+
+    # Float training path: quantized input -> Q(w) matmul -> quantized ReLU.
+    y_float = fql.fq_linear(p, x, qcfg, b_in=RELU_BOUND, relu_out=True)
+
+    # Integer path: codes in -> int MAC + folded rescale -> codes out.
+    ip = ii.convert_layer(p, qcfg, relu_out=True)
+    codes_in = ii.entry_codes(x, p, qcfg, b_in=RELU_BOUND)
+    codes_out = ii.int_linear(ip, codes_in)
+    y_int = ii.decode_output(codes_out, p["s_out"], qcfg.bits_out)
+
+    np.testing.assert_allclose(np.asarray(y_float), np.asarray(y_int),
+                               rtol=0, atol=1e-6)
+
+
+def test_two_layer_stack_bit_exact():
+    """codes flow layer-to-layer with NO float materialization between."""
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    k1, k2 = jax.random.split(jax.random.key(2))
+    p1 = _trained_like_layer(k1, 12, 10, s_out=0.1)
+    p2 = _trained_like_layer(k2, 10, 6, s_in=0.1, s_out=-0.2)
+    # Layer 2's input quantizer must equal layer 1's output quantizer for
+    # the integer hand-off (same e^s bin edges) — the FQ-mode contract.
+    x = jax.random.uniform(jax.random.key(3), (4, 12))
+
+    h = fql.fq_linear(p1, x, qcfg, b_in=RELU_BOUND, relu_out=True)
+    y_float = fql.fq_linear(p2, h, qcfg, b_in=RELU_BOUND, relu_out=True)
+
+    ip1 = ii.convert_layer(p1, qcfg, relu_out=True)
+    ip2 = ii.convert_layer(p2, qcfg, relu_out=True)
+    c = ii.entry_codes(x, p1, qcfg, b_in=RELU_BOUND)
+    c = ii.int_linear(ip1, c)
+    c = ii.int_linear(ip2, c)
+    y_int = ii.decode_output(c, p2["s_out"], qcfg.bits_out)
+
+    np.testing.assert_allclose(np.asarray(y_float), np.asarray(y_int),
+                               rtol=0, atol=1e-6)
+
+
+def test_final_layer_dequant():
+    """Final FQ layer uses the alpha (dequant) epilogue -> float output
+    matching Q(w)-matmul of the quantized operands (for FP pooling)."""
+    qcfg = QuantConfig(2, 5, 5, fq=True)
+    p = _trained_like_layer(jax.random.key(4), 8, 3)
+    x = jax.random.uniform(jax.random.key(5), (7, 8))
+    xa = learned_quantize(x, p["s_in"], bits=qcfg.bits_a, b=RELU_BOUND)
+    wq = learned_quantize(p["w"], p["s_w"], bits=qcfg.bits_w, b=WEIGHT_BOUND)
+    want = xa @ wq
+
+    ip = ii.convert_layer(p, qcfg, relu_out=True, final=True)
+    codes = ii.entry_codes(x, p, qcfg, b_in=RELU_BOUND)
+    got = ii.int_linear_final(ip, codes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ternary_weight_codes_are_ternary():
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    p = _trained_like_layer(jax.random.key(6), 32, 16)
+    ip = ii.convert_layer(p, qcfg, relu_out=True)
+    vals = set(np.unique(np.asarray(ip["w_codes"], dtype=np.int32)))
+    assert vals <= {-1, 0, 1}

@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fq_matmul import fq_matmul
+from repro.kernels.quantize import quantize_codes
+
+
+def _codes(key, shape, lo, hi):
+    return jax.random.randint(key, shape, lo, hi + 1).astype(jnp.int8)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),      # exact tile
+    (256, 384, 128),      # multi-tile K
+    (64, 100, 96),        # sub-tile + padding
+    (130, 257, 129),      # awkward padding everywhere
+    (1, 128, 128),        # single row (decode-like)
+])
+@pytest.mark.parametrize("epilogue", ["requant", "dequant"])
+def test_fq_matmul_vs_ref(m, k, n, epilogue):
+    k1, k2 = jax.random.split(jax.random.key(m * 7 + n), 2)
+    a = _codes(k1, (m, k), -15, 15)
+    b = _codes(k2, (k, n), -1, 1)          # ternary weights
+    scale = jnp.float32(0.013)
+    got = fq_matmul(a, b, scale, epilogue=epilogue, n_out=15, lo=0,
+                    interpret=True)
+    want = ref.ref_fq_matmul(a, b, scale, epilogue=epilogue, n_out=15, lo=0)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (64, 128, 256)])
+def test_fq_matmul_block_shapes(bm, bn, bk):
+    k1, k2 = jax.random.split(jax.random.key(0), 2)
+    a = _codes(k1, (256, 512), -31, 31)
+    b = _codes(k2, (512, 256), -31, 31)
+    scale = jnp.float32(1e-3)
+    got = fq_matmul(a, b, scale, epilogue="requant", n_out=7, lo=-7,
+                    bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.ref_fq_matmul(a, b, scale, epilogue="requant", n_out=7, lo=-7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fq_matmul_int32_accumulation():
+    # K large enough that int8 accumulation would overflow: verifies the
+    # int32 VMEM scratch accumulator.
+    k1, k2 = jax.random.split(jax.random.key(3), 2)
+    a = _codes(k1, (128, 2048), -127, 127)
+    b = _codes(k2, (2048, 128), -127, 127)
+    got = fq_matmul(a, b, jnp.float32(1.0), epilogue="dequant",
+                    interpret=True)
+    want = (a.astype(jnp.int32) @ b.astype(jnp.int32)).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(jnp.max(jnp.abs(want))) > 2 ** 15  # test is meaningful
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 16), (256, 64), (300, 39)])
+@pytest.mark.parametrize("bits,b", [(4, 0.0), (8, -1.0), (2, -1.0)])
+def test_quantize_codes_vs_ref(rows, cols, bits, b):
+    from repro.core.quant import n_levels
+    x = jax.random.normal(jax.random.key(rows + cols), (rows, cols)) * 2
+    n = n_levels(bits)
+    inv = jnp.float32(0.7)
+    got = quantize_codes(x, inv, n=n, b=b, interpret=True)
+    want = ref.ref_quantize_codes(x, inv, n=n, b=b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fold_rescale_places_bins():
+    """The folded rescale maps int32 accumulators onto output bins exactly
+    like the float path: quantize(e^sa/na * e^sw/nw * acc / e^so) * no."""
+    from repro.core.quant import n_levels
+    s_a, s_w, s_out = jnp.float32(0.2), jnp.float32(-0.4), jnp.float32(0.1)
+    ba, bw, bo = 4, 2, 4
+    acc = jnp.arange(-50, 50, dtype=jnp.int32)
+    rescale = ops.fold_rescale(s_a, s_w, s_out, bits_a=ba, bits_w=bw,
+                               bits_out=bo)
+    got = jnp.clip(jnp.round(acc.astype(jnp.float32) * rescale), 0,
+                   n_levels(bo))
+    # float path: real value of acc, then learned-quantized ReLU at s_out.
+    real = (jnp.exp(s_a) / n_levels(ba)) * (jnp.exp(s_w) / n_levels(bw)) \
+        * acc.astype(jnp.float32)
+    from repro.core.quant import learned_quantize
+    qf = learned_quantize(real, s_out, bits=bo, b=0.0)
+    want = qf / (jnp.exp(s_out) / n_levels(bo))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("dil", [1, 2, 4])
+def test_int_conv1d_matches_float_conv(dil):
+    """im2col int path == lax.conv on dequantized operands (dequant epi)."""
+    from repro.core.quant import dequantize_int
+    k1, k2 = jax.random.split(jax.random.key(5), 2)
+    B, T, Cin, Cout, ks = 2, 32, 8, 8, 3
+    a = _codes(k1, (B, T, Cin), 0, 15)
+    w = _codes(k2, (ks * Cin, Cout), -1, 1)
+    alpha = jnp.float32(0.01)
+    got = ops.fq_conv1d_int(a, w, alpha, ksize=ks, dilation=dil,
+                            epilogue="dequant")
+    wf = w.reshape(ks, Cin, Cout).astype(jnp.float32)
+    out = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (1,), "VALID", rhs_dilation=(dil,),
+        dimension_numbers=("NTC", "TIO", "NTC")) * alpha
+    np.testing.assert_allclose(np.asarray(got), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int_conv2d_matches_float_conv():
+    from repro.core.quant import dequantize_int
+    k1, k2 = jax.random.split(jax.random.key(6), 2)
+    B, H, W, Cin, Cout, ks = 2, 12, 12, 4, 6, 3
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -7, 7)
+    alpha = jnp.float32(0.02)
+    got = ops.fq_conv2d_int(a, w, alpha, ksize=ks, padding=1,
+                            epilogue="dequant")
+    wf = w.reshape(ks, ks, Cin, Cout).astype(jnp.float32)
+    out = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) * alpha
+    np.testing.assert_allclose(np.asarray(got), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)

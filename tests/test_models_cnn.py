@@ -1,0 +1,88 @@
+"""The paper's CNNs: ResNet (Fig 4), KWS net (Fig 2), DarkNet-19 —
+mode transitions FP -> Q -> FQ and BN folding exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fq_layers as fql
+from repro.core.quant import QuantConfig
+from repro.models import darknet, kws, resnet
+
+
+@pytest.mark.parametrize("qcfg", [QuantConfig(), QuantConfig(8, 8),
+                                  QuantConfig(2, 5, 5, fq=True)])
+def test_resnet_modes(qcfg):
+    cfg = resnet.ResNetConfig.reduced()
+    params, state = resnet.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3)) * 0.5
+    logits, _ = resnet.apply(params, state, x, qcfg, cfg, train=True)
+    assert logits.shape == (2, cfg.num_classes)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("qcfg", [QuantConfig(), QuantConfig(2, 4),
+                                  QuantConfig(2, 4, 4, fq=True)])
+def test_kws_modes(qcfg):
+    cfg = kws.KWSConfig.reduced()
+    params, state = kws.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (3, cfg.seq_len, cfg.n_mfcc))
+    logits, _ = kws.apply(params, state, x, qcfg, cfg, train=True)
+    assert logits.shape == (3, cfg.num_classes)
+    assert jnp.isfinite(logits).all()
+
+
+def test_kws_full_config_stats():
+    """Paper §4.2: ~50K params / ~3.5M MACs for the full KWS net."""
+    cfg = kws.KWSConfig()
+    params, _ = kws.init(jax.random.key(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    assert 40_000 < n < 70_000, n
+
+
+def test_darknet_reduced():
+    cfg = darknet.DarkNetConfig.reduced()
+    params, state = darknet.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    logits, _ = darknet.apply(params, state, x, QuantConfig(4, 4), cfg,
+                              train=True)
+    assert logits.shape == (2, cfg.num_classes)
+    assert jnp.isfinite(logits).all()
+
+
+def test_bn_fold_exactness():
+    """Paper §3.4 eq. 3: folding inference BN into conv weights is exact
+    (up to the dropped beta shift) for the scale part."""
+    key = jax.random.key(2)
+    p = fql.init_fq_conv2d(key, 3, 4, 8)
+    bn_p, bn_st = fql.init_batchnorm(8)
+    bn_p = {"gamma": jnp.linspace(0.5, 1.5, 8), "beta": jnp.zeros(8)}
+    bn_st = {"mean": jnp.zeros(8), "var": jnp.linspace(0.5, 2.0, 8)}
+    x = jax.random.normal(jax.random.key(3), (2, 8, 8, 4))
+
+    # FP conv -> inference BN (beta=0, mean=0).
+    y = fql.fq_conv2d(p, x, QuantConfig())
+    y_bn, _ = fql.batchnorm(bn_p, bn_st, y, train=False)
+
+    folded = fql.fold_bn(p, bn_p, bn_st)
+    y_fold = fql.fq_conv2d(folded, x, QuantConfig())
+    np.testing.assert_allclose(np.asarray(y_bn), np.asarray(y_fold),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_to_fq_roundtrip_kws():
+    cfg = kws.KWSConfig.reduced()
+    params, state = kws.init(jax.random.key(0), cfg)
+    fq_params = kws.to_fq(params, state, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, cfg.seq_len, cfg.n_mfcc))
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    logits, _ = kws.apply(fq_params, state, x, qcfg, cfg)
+    assert jnp.isfinite(logits).all()
+
+
+def test_resnet20_first_last_protocol():
+    """§4.1: first/last conv not quantized for the CIFAR-10 comparison."""
+    cfg = resnet.ResNetConfig.resnet20()
+    assert cfg.quantize_first_last is False
+    cfg32 = resnet.ResNetConfig.resnet32()
+    assert cfg32.quantize_first_last is True  # §4.3 quantizes everything

@@ -1,0 +1,94 @@
+"""MoE dispatch correctness: capacity, combine, chunking, per-expert FQ."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantConfig
+from repro.models import moe as M
+
+
+def _setup(e=4, k=2, d=8, f=16, n_shared=0, cf=2.0):
+    cfg = M.MoEConfig(n_experts=e, top_k=k, d_expert=f, n_shared=n_shared,
+                      capacity_factor=cf)
+    p = M.init_moe(jax.random.key(0), d, cfg)
+    return cfg, p
+
+
+def test_output_shape_and_finite():
+    cfg, p = _setup()
+    x = jax.random.normal(jax.random.key(1), (2, 16, 8))
+    y, aux = M.apply_moe(p, x, cfg, QuantConfig(8, 8))
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all()
+    assert float(aux["load_balance"]) > 0
+
+
+def test_manual_dispatch_equivalence():
+    """With ample capacity, MoE == explicit per-token top-k expert sum."""
+    cfg, p = _setup(e=4, k=2, cf=8.0)
+    qcfg = QuantConfig()          # FP mode to compare exactly
+    x = jax.random.normal(jax.random.key(2), (1, 8, 8))
+    y, _ = M.apply_moe(p, x, cfg, qcfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]["w"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gv, idx = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = jnp.zeros_like(x)
+    for bi in range(1):
+        for si in range(8):
+            acc = jnp.zeros((8,))
+            for kk in range(2):
+                ei = int(idx[bi, si, kk])
+                h = jax.nn.silu(x[bi, si] @ p["experts"]["w_gate"][ei]) * \
+                    (x[bi, si] @ p["experts"]["w_up"][ei])
+                acc += float(gv[bi, si, kk]) * (h @ p["experts"]["w_down"][ei])
+            want = want.at[bi, si].set(acc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_tokens():
+    """cf tiny -> tokens over capacity contribute zero (dropped, not junk)."""
+    cfg, p = _setup(e=2, k=1, cf=0.01)
+    x = jax.random.normal(jax.random.key(3), (1, 32, 8))
+    y, _ = M.apply_moe(p, x, cfg, QuantConfig())
+    # With capacity 1 per expert, at most 2 tokens can be routed.
+    nonzero = jnp.sum(jnp.any(jnp.abs(y[0]) > 1e-9, axis=-1))
+    assert int(nonzero) <= 2 + cfg.n_shared * 32
+
+
+def test_chunked_equals_unchunked():
+    cfg, p = _setup(e=4, k=1, cf=4.0)
+    x = jax.random.normal(jax.random.key(4), (2, 32, 8))
+    y1, aux1 = M.apply_moe(p, x, cfg, QuantConfig(), seq_chunk=8)
+    y2, aux2 = M._moe_dense(p, x, cfg, QuantConfig())
+    # Chunked capacity differs (per-chunk), but with generous cf both route
+    # everything -> identical outputs.
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_shared_experts_always_on():
+    cfg, p = _setup(e=2, k=1, n_shared=1, cf=0.01)
+    x = jax.random.normal(jax.random.key(5), (1, 16, 8))
+    y, _ = M.apply_moe(p, x, cfg, QuantConfig())
+    # Routed path nearly all dropped, but shared experts feed every token.
+    assert int(jnp.sum(jnp.any(jnp.abs(y[0]) > 1e-9, -1))) == 16
+
+
+def test_deploy_int8_experts_close():
+    from repro.models.transformer import quantize_params_for_serving
+    cfg, p = _setup(e=4, k=2, cf=8.0)
+    x = jax.random.normal(jax.random.key(6), (1, 8, 8)) * 0.5
+    # Fit weight scales first (init_moe leaves s_w at 0 -> e^0 = 1 covers
+    # these small random weights).
+    y_fp, _ = M.apply_moe(p, x, cfg, QuantConfig())
+    qp = quantize_params_for_serving({"moe": p}, bits_w=8)["moe"]
+    assert "w_gate_codes" in qp["experts"]
+    y_q, _ = M.apply_moe(qp, x, cfg, QuantConfig())
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_fp),
+                               rtol=0.1, atol=0.05)

@@ -1,0 +1,146 @@
+"""Unit tests for the paper's learned quantization (eq. 1 & 2) + STE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+
+
+def test_n_levels():
+    # n = 2^(nb-1) - 1: ternary has 1 positive level, 8-bit has 127.
+    assert Q.n_levels(2) == 1
+    assert Q.n_levels(3) == 3
+    assert Q.n_levels(5) == 15
+    assert Q.n_levels(8) == 127
+    with pytest.raises(ValueError):
+        Q.n_levels(1)
+
+
+def test_quantize_unit_grid():
+    # Values land exactly on the k/n grid within [b, 1].
+    x = jnp.linspace(-2, 2, 101)
+    for bits, b in [(2, -1.0), (3, -1.0), (4, 0.0), (8, 0.0)]:
+        n = Q.n_levels(bits)
+        y = Q.quantize_unit(x, b, n)
+        grid = jnp.round(y * n)
+        np.testing.assert_allclose(grid * (1.0 / n), y, rtol=0, atol=1e-7)
+        assert float(y.min()) >= b - 1e-7
+        assert float(y.max()) <= 1 + 1e-7
+
+
+def test_ternary_values():
+    # bits=2, b=-1 -> exactly {-1, 0, 1}.
+    x = jnp.array([-5.0, -0.6, -0.4, 0.0, 0.4, 0.6, 5.0])
+    y = Q.quantize_unit(x, -1.0, Q.n_levels(2))
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 0.0, 1.0}
+
+
+def test_learned_quantize_scale_equivariance():
+    # Q(x; s) = e^s * quantize(x / e^s): scaling x and s together rescales Q.
+    x = jax.random.normal(jax.random.key(0), (256,))
+    s = jnp.float32(0.3)
+    alpha = 2.5
+    q1 = Q.learned_quantize(x, s, bits=5, b=-1.0)
+    q2 = Q.learned_quantize(alpha * x, s + jnp.log(alpha), bits=5, b=-1.0)
+    np.testing.assert_allclose(np.asarray(alpha * q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fp_passthrough():
+    x = jax.random.normal(jax.random.key(1), (32,))
+    assert Q.learned_quantize(x, jnp.float32(0.0), bits=None, b=-1.0) is x
+
+
+def test_ste_gradient_wrt_x():
+    # d/dx passes through round; clip zeroes gradient outside [b, 1]*e^s.
+    s = jnp.float32(0.0)
+
+    def f(x):
+        return jnp.sum(Q.learned_quantize(x, s, bits=4, b=-1.0))
+
+    g = jax.grad(f)(jnp.array([-2.0, -0.5, 0.5, 2.0]))
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_grad_wrt_s_nonzero_inside_range():
+    # The paper's stated difference from PACT: dQ/ds != 0 for unclipped
+    # values (equals the quantization error Q(x) - x).
+    x = jnp.array([0.37, -0.61, 0.12])
+    s = jnp.float32(0.0)
+
+    def f(sv):
+        return jnp.sum(Q.learned_quantize(x, sv, bits=3, b=-1.0,
+                                          stabilize=False))
+
+    g = float(jax.grad(f)(s))
+    q = Q.learned_quantize(x, s, bits=3, b=-1.0)
+    expect = float(jnp.sum(q - x))
+    np.testing.assert_allclose(g, expect, rtol=1e-4, atol=1e-6)
+    assert abs(g) > 1e-6  # genuinely non-zero
+
+
+def test_grad_wrt_s_clipped_region():
+    # For x clipped above: Q = e^s -> dQ/ds = e^s.
+    x = jnp.array([10.0])
+    s = jnp.float32(0.5)
+
+    def f(sv):
+        return jnp.sum(Q.learned_quantize(x, sv, bits=4, b=-1.0,
+                                          stabilize=False))
+
+    g = float(jax.grad(f)(s))
+    np.testing.assert_allclose(g, float(jnp.exp(s)), rtol=1e-5)
+
+
+def test_grad_scale_lsq_default():
+    """Default path scales dL/ds by 1/sqrt(numel * n) (LSQ stabilizer);
+    forward values are identical."""
+    x = jax.random.normal(jax.random.key(0), (64,))
+    s = jnp.float32(0.0)
+    q1 = Q.learned_quantize(x, s, bits=3, b=-1.0)
+    q2 = Q.learned_quantize(x, s, bits=3, b=-1.0, stabilize=False)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    g_scaled = float(jax.grad(lambda sv: jnp.sum(
+        Q.learned_quantize(x, sv, bits=3, b=-1.0)))(s))
+    g_raw = float(jax.grad(lambda sv: jnp.sum(
+        Q.learned_quantize(x, sv, bits=3, b=-1.0, stabilize=False)))(s))
+    import math
+    np.testing.assert_allclose(g_scaled, g_raw / math.sqrt(64 * 3),
+                               rtol=1e-4)
+
+
+def test_int_codes_roundtrip():
+    x = jax.random.normal(jax.random.key(2), (64,))
+    s = Q.init_scale(x)
+    for bits in (2, 3, 5, 8):
+        codes = Q.quantize_to_int(x, s, bits=bits, b=-1.0)
+        assert codes.dtype == jnp.int8
+        n = Q.n_levels(bits)
+        assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= n
+        deq = Q.dequantize_int(codes, s, bits=bits)
+        qf = Q.learned_quantize(x, s, bits=bits, b=-1.0)
+        np.testing.assert_allclose(np.asarray(deq), np.asarray(qf),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_init_scale_covers_range():
+    x = jax.random.normal(jax.random.key(3), (128,)) * 3.0
+    s = Q.init_scale(x)
+    assert float(jnp.exp(s)) >= float(jnp.max(jnp.abs(x))) - 1e-5
+
+
+def test_lsb():
+    s = jnp.float32(1.0)
+    np.testing.assert_allclose(
+        float(Q.lsb(s, 5)), float(jnp.exp(s)) / 15, rtol=1e-6)
+
+
+def test_ladders_structure():
+    # Table 1/4/6 ladders: monotone non-increasing bitwidths, FP first.
+    for name, ladder in Q.LADDERS.items():
+        assert ladder[0].is_fp
+        bits = [c.bits_w for c in ladder if c.bits_w is not None]
+        assert bits == sorted(bits, reverse=True), name
+        if name in ("kws", "cifar100"):
+            assert ladder[-1].fq  # ends with the FQ (BN-removed) stage

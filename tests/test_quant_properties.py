@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) for the quantizer's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+
+_bits = st.sampled_from([2, 3, 4, 5, 6, 8])
+_bound = st.sampled_from([-1.0, 0.0])
+_scale = st.floats(-2.0, 2.0)
+_arrays = st.lists(st.floats(-50, 50, allow_nan=False, width=32),
+                   min_size=1, max_size=64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_arrays, _bits, _bound, _scale)
+def test_idempotent(xs, bits, b, s):
+    """Q(Q(x)) == Q(x): quantized values are fixed points."""
+    x = jnp.asarray(xs, jnp.float32)
+    s = jnp.float32(s)
+    q1 = Q.learned_quantize(x, s, bits=bits, b=b)
+    q2 = Q.learned_quantize(q1, s, bits=bits, b=b)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_arrays, _bits, _bound, _scale)
+def test_level_count(xs, bits, b, s):
+    """At most n - n*b + 1 distinct quantized values exist."""
+    x = jnp.asarray(xs, jnp.float32)
+    q = Q.learned_quantize(x, jnp.float32(s), bits=bits, b=b)
+    n = Q.n_levels(bits)
+    max_levels = n + int(-b * n) + 1
+    assert len(np.unique(np.asarray(q))) <= max_levels
+
+
+@settings(max_examples=60, deadline=None)
+@given(_arrays, _bits, _bound, _scale)
+def test_bounded_error_inside_range(xs, bits, b, s):
+    """|Q(x) - x| <= LSB/2 for values strictly inside the clip range."""
+    x = jnp.asarray(xs, jnp.float32)
+    sv = jnp.float32(s)
+    scale = float(jnp.exp(sv))
+    q = Q.learned_quantize(x, sv, bits=bits, b=b)
+    lsb = float(Q.lsb(sv, bits))
+    inside = (np.asarray(x) > b * scale) & (np.asarray(x) < scale)
+    err = np.abs(np.asarray(q) - np.asarray(x))[inside]
+    assert (err <= lsb / 2 + 1e-5).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(_arrays, _bits, _bound, _scale)
+def test_output_in_clip_range(xs, bits, b, s):
+    x = jnp.asarray(xs, jnp.float32)
+    sv = jnp.float32(s)
+    scale = float(jnp.exp(sv))
+    q = np.asarray(Q.learned_quantize(x, sv, bits=bits, b=b))
+    assert (q >= b * scale - 1e-4).all() and (q <= scale + 1e-4).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(_arrays, _bits, _scale)
+def test_monotone(xs, bits, s):
+    """Quantization preserves order (non-strict monotonicity)."""
+    x = jnp.sort(jnp.asarray(xs, jnp.float32))
+    q = np.asarray(Q.learned_quantize(x, jnp.float32(s), bits=bits, b=-1.0))
+    assert (np.diff(q) >= -1e-6).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(_arrays, _bits, _bound, _scale)
+def test_codes_match_float_path(xs, bits, b, s):
+    """int codes * e^s / n == the float quantizer output (eq. 4 premise)."""
+    x = jnp.asarray(xs, jnp.float32)
+    sv = jnp.float32(s)
+    codes = Q.quantize_to_int(x, sv, bits=bits, b=b)
+    deq = Q.dequantize_int(codes, sv, bits=bits)
+    qf = Q.learned_quantize(x, sv, bits=bits, b=b)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(qf),
+                               rtol=1e-4, atol=1e-5)
