@@ -1,0 +1,27 @@
+# FQ-Conv reproduction — developer entry points.
+#
+#   make test   — tier-1 suite (the ROADMAP verify command)
+#   make bench  — all paper-table benchmarks + kernel/conv microbenches
+#   make conv   — just the fused-conv-vs-im2col benchmark (BENCH_conv.json)
+#   make lint   — byte-compile + import-order sanity (no external deps)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench conv lint
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+conv:
+	$(PYTHON) -m benchmarks.run --only conv
+
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples
+	$(PYTHON) -c "import repro.kernels.ops, repro.kernels.fq_conv, \
+	repro.kernels.fq_matmul, repro.core.integer_inference, \
+	repro.models.kws, repro.models.darknet, repro.train.trainer; \
+	print('imports ok')"

@@ -242,6 +242,77 @@ def bench_kernels():
     print(f"kernels,ref_matmul_us,{us_r:.0f},jnp oracle")
 
 
+def _conv_bytes_model(B, H, W, cin, cout, ks, stride, padding):
+    """Analytic HBM bytes moved per conv, int8 codes (the memory roofline
+    the fused kernel attacks — compulsory traffic only, perfect caching)."""
+    hp, wp = H + 2 * padding, W + 2 * padding
+    ho = (hp - ks) // stride + 1
+    wo = (wp - ks) // stride + 1
+    x_b = B * hp * wp * cin                       # read (padded) input codes
+    w_b = ks * ks * cin * cout                    # read weight codes
+    out_b = B * ho * wo * cout                    # write output codes
+    # Both paths edge-pad first: one read of the raw input + one write of
+    # the padded copy (O(input), not the ksize**2 patch blow-up).
+    pad_copy = (B * H * W * cin + x_b) if padding else 0
+    patches = B * ho * wo * ks * ks * cin         # the im2col blow-up
+    im2col = pad_copy + x_b + patches + patches + w_b + out_b
+    fused = pad_copy + x_b + w_b + out_b          # windows gathered in VMEM
+    return dict(ho=ho, wo=wo, im2col=im2col, fused=fused,
+                blowup=round(im2col / fused, 2))
+
+
+def bench_conv():
+    """Fused implicit-GEMM conv vs im2col: HBM bytes moved + wall time +
+    bit-exactness, recorded to BENCH_conv.json (ISSUE 1 acceptance)."""
+    import json
+    import numpy as np
+    from repro.kernels import ops
+    print("# Conv — fused (implicit GEMM, no patch materialization) vs im2col")
+    shapes = [
+        # (name, B, H, W, cin, cout, ks, stride, padding)
+        ("darknet_l2", 2, 28, 28, 32, 64, 3, 1, 1),
+        ("darknet_l5", 2, 14, 14, 128, 256, 3, 1, 1),
+        ("stride2_downsample", 2, 28, 28, 64, 128, 3, 2, 1),
+        ("pointwise_1x1", 2, 14, 14, 256, 128, 1, 1, 0),
+    ]
+    rows = []
+    k1, k2 = jax.random.split(jax.random.key(0))
+    for name, B, H, W, cin, cout, ks, st, pad in shapes:
+        a = jax.random.randint(k1, (B, H, W, cin), 0, 16).astype(jnp.int8)
+        w = jax.random.randint(k2, (ks * ks * cin, cout), -7, 8
+                               ).astype(jnp.int8)
+        scale = jnp.float32(0.01)
+        kw = dict(ksize=ks, stride=st, padding=pad, n_out=15, lo=0)
+        y_f = ops.fq_conv2d_int(a, w, scale, impl="fused", **kw)
+        y_i = ops.fq_conv2d_int(a, w, scale, impl="im2col", **kw)
+        exact = bool((np.asarray(y_f) == np.asarray(y_i)).all())
+        us_f = common.timer(
+            lambda: ops.fq_conv2d_int(a, w, scale, impl="fused", **kw))
+        us_i = common.timer(
+            lambda: ops.fq_conv2d_int(a, w, scale, impl="im2col", **kw))
+        m = _conv_bytes_model(B, H, W, cin, cout, ks, st, pad)
+        backend = jax.default_backend()
+        rows.append(dict(
+            shape=name, B=B, H=H, W=W, cin=cin, cout=cout, ksize=ks,
+            stride=st, padding=pad, bit_exact=exact,
+            hbm_bytes_im2col=m["im2col"], hbm_bytes_fused=m["fused"],
+            hbm_blowup_im2col_over_fused=m["blowup"],
+            wall_us_fused=round(us_f), wall_us_im2col=round(us_i),
+            backend=backend,
+            timing_note=("interpret-mode CPU timings (correctness harness); "
+                         "HBM byte counts are analytic and backend-exact"
+                         if backend != "tpu" else "compiled TPU timings"),
+        ))
+        print(f"conv,{name}_bit_exact,{exact},fused vs im2col codes")
+        print(f"conv,{name}_hbm_bytes_fused,{m['fused']},analytic")
+        print(f"conv,{name}_hbm_bytes_im2col,{m['im2col']},"
+              f"{m['blowup']}x blow-up from patch materialization")
+    with open("BENCH_conv.json", "w") as f:
+        json.dump({"benchmark": "fq_conv_fused_vs_im2col", "rows": rows}, f,
+                  indent=2)
+    print("conv,artifact,BENCH_conv.json,written")
+
+
 def bench_dryrun_summary():
     """Roofline summary across the dry-run cells (EXPERIMENTS.md source)."""
     print("# Dry-run roofline summary")
@@ -267,6 +338,7 @@ ALL = {
     "table6": bench_table6_resnet32,
     "table7": bench_table7_noise,
     "kernels": bench_kernels,
+    "conv": bench_conv,
     "dryrun": bench_dryrun_summary,
 }
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
@@ -63,16 +64,43 @@ def int_linear_final(ip, codes):
                           epilogue="dequant")
 
 
-def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1):
+def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1, impl=None):
     return ops.fq_conv1d_int(codes, ip["w_codes"], ip["rescale"],
                              ksize=ksize, dilation=dilation,
-                             n_out=ip["n_out"], lo=ip["lo"])
+                             n_out=ip["n_out"], lo=ip["lo"], impl=impl)
 
 
-def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0):
+def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0,
+               dilation: int = 1, impl=None):
     return ops.fq_conv2d_int(codes, ip["w_codes"], ip["rescale"],
                              ksize=ksize, stride=stride, padding=padding,
-                             n_out=ip["n_out"], lo=ip["lo"])
+                             dilation=dilation,
+                             n_out=ip["n_out"], lo=ip["lo"], impl=impl)
+
+
+def int_conv1d_final(ip, codes, *, ksize: int, dilation: int = 1, impl=None):
+    return ops.fq_conv1d_int(codes, ip["w_codes"], ip["alpha"],
+                             ksize=ksize, dilation=dilation,
+                             epilogue="dequant", impl=impl)
+
+
+def int_conv2d_final(ip, codes, *, ksize: int, stride: int = 1,
+                     padding: int = 0, dilation: int = 1, impl=None):
+    return ops.fq_conv2d_int(codes, ip["w_codes"], ip["alpha"],
+                             ksize=ksize, stride=stride, padding=padding,
+                             dilation=dilation, epilogue="dequant", impl=impl)
+
+
+def int_maxpool2d(codes, *, window: int = 2, stride: int = 2):
+    """2x2 maxpool directly on int8 codes (NHWC).
+
+    Valid because the learned quantizer is monotone: Q(max(x)) == max(Q(x)),
+    so pooling commutes with requantization and the codes never need to be
+    decoded to float for the pool (paper §3.4's integer-only stack).
+    """
+    return jax.lax.reduce_window(
+        codes, jnp.int8(-128), jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
 
 
 def decode_output(codes_or_float, s_out, bits_out: Optional[int]):

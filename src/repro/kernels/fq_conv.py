@@ -1,0 +1,251 @@
+"""Pallas TPU kernel: fused fully-quantized convolution (implicit GEMM).
+
+The im2col path (kernels/ops.py) materializes every input patch in HBM — a
+``ksize**2 x`` blow-up of activation bytes that dominates the int8 memory
+roofline. This kernel never builds patches: the grid reduces over the
+``kh*kw`` kernel taps (times optional Cin blocks), each step gathering the
+input window it needs directly into VMEM via an *unblocked* (element-offset)
+BlockSpec, multiplying it against that tap's weight slice on the MXU, and
+accumulating int8 x int8 into an int32 VMEM scratch. The requantization
+"ADC" is the same fused epilogue as ``fq_matmul`` (shared code — bit-exact
+by construction), so codes never leave VMEM at higher precision.
+
+Layout contract (matches the im2col path and ``integer_inference``):
+  * activations  (B, H, W, Cin) int8 codes, NHWC,
+  * weights      (kh*kw*Cin, Cout) int8 codes, tap-major im2col layout
+                 (row  t*Cin + c  is tap (t // kw, t % kw), channel c),
+  * output       (B, Ho, Wo, Cout) int8 codes (requant) or f32 (dequant).
+
+Grid is (B, Ho/bho, Cout/bco, kh*kw*n_cin_blocks) with the reduction
+innermost ("arbitrary" semantics) so each output tile's accumulator stays
+resident in VMEM for the whole tap x channel reduction. Stride is applied
+by slicing the gathered window *after* it lands in VMEM (the window is
+contiguous in HBM; strided rows never travel twice) and dilation enters
+only the element-offset index map, i.e. it is free. Padding costs one
+edge-padded copy of the activations in HBM (jnp.pad before the kernel) —
+O(input bytes), not the O(ksize^2 * input) of im2col patches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .fq_matmul import TPUCompilerParams, apply_epilogue
+
+# ---------------------------------------------------------------------------
+# Block-size selection
+# ---------------------------------------------------------------------------
+
+# Measured-on-TPU overrides, keyed by (kh, kw, stride_h). Populated as real
+# TPU numbers land (ROADMAP "fused conv autotuning on real TPU"); absent keys
+# fall back to the VMEM-budget heuristic below — the same knob style as
+# fq_matmul's (bm, bn, bk).
+AUTOTUNE_TABLE: dict = {
+    (3, 3, 1): {"bco": 128},
+    (3, 3, 2): {"bco": 128},
+    (1, 1, 1): {"bho": 128, "bco": 128},
+}
+
+_VMEM_BUDGET = 4 * 1024 * 1024  # conservative half-ish of usable VMEM
+
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
+                stride: Tuple[int, int],
+                bho: Optional[int] = None, bco: Optional[int] = None,
+                bc: Optional[int] = None) -> Tuple[int, int, int]:
+    """(bho, bco, bc): output-row / output-channel / input-channel blocks.
+
+    Explicit arguments win, then the autotune table, then a VMEM-budget
+    heuristic that shrinks bho until x-window + w + int32 accumulator fit.
+    An explicit ``bc`` must divide ``cin`` exactly (a non-divisor block
+    would read weight rows across a tap boundary); table/heuristic values
+    are rounded down to a divisor.
+    """
+    if bc is not None and cin % bc != 0:
+        raise ValueError(f"bc={bc} must divide cin={cin}")
+    over = AUTOTUNE_TABLE.get((kh, kw, stride[0]), {})
+    bco = bco or over.get("bco")
+    bho = bho or over.get("bho")
+    bc = bc or over.get("bc")
+
+    bco = min(bco or 128, cout)
+    bc = _divisor_at_most(cin, bc or 512)
+
+    def vmem_bytes(bh):
+        bhi = (bh - 1) * stride[0] + 1
+        bwi = (wo - 1) * stride[1] + 1
+        x_b = bhi * bwi * bc          # int8 window
+        w_b = bc * bco                # int8 weight slice
+        acc = 4 * bh * wo * bco       # int32 scratch
+        out = bh * wo * bco           # int8/f32 out tile (worst: 4x)
+        return x_b + w_b + acc + 4 * out
+
+    if bho is None:
+        bho = min(ho, 128)
+        while bho > 1 and vmem_bytes(bho) > _VMEM_BUDGET:
+            bho = (bho + 1) // 2
+    return min(bho, ho), bco, bc
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+
+def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
+            stride: Tuple[int, int], bho: int, wo: int,
+            epilogue: str, n_out: int, lo: int):
+    r = pl.program_id(3)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (bhi, bwi, bc) window -> strided view (bho, wo, bc) -> (bho*wo, bc).
+    v = x_ref[0][:: stride[0], :: stride[1], :]
+    acc_ref[...] += jnp.dot(
+        v.reshape(bho * wo, -1), w_ref[...],
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(r == n_red - 1)
+    def _epilogue():
+        y = apply_epilogue(acc_ref[...], scale_ref[0, 0],
+                           epilogue=epilogue, n_out=n_out, lo=lo)
+        o_ref[...] = y.reshape(o_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "dilation", "epilogue",
+                     "n_out", "lo", "bho", "bco", "bc", "interpret"),
+)
+def fq_conv2d(
+    a_codes: jax.Array,   # (B, H, W, Cin) int8
+    w_codes: jax.Array,   # (kh*kw*Cin, Cout) int8, tap-major
+    scale: jax.Array,     # scalar f32: rescale (requant) or alpha (dequant)
+    *,
+    kh: int,
+    kw: int,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Tuple[int, int] = (0, 0),
+    dilation: Tuple[int, int] = (1, 1),
+    epilogue: str = "requant",
+    n_out: int = 7,
+    lo: int = 0,
+    bho: Optional[int] = None,
+    bco: Optional[int] = None,
+    bc: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused int8 NHWC conv2d with the requant/dequant epilogue in VMEM."""
+    assert epilogue in ("requant", "dequant")
+    b, h, w, cin = a_codes.shape
+    kcin, cout = w_codes.shape
+    assert kcin == kh * kw * cin, (w_codes.shape, (kh, kw, cin))
+    sh, sw = stride
+    dh, dw = dilation
+    ph, pw = padding
+
+    hp, wp = h + 2 * ph, w + 2 * pw
+    span_h, span_w = (kh - 1) * dh + 1, (kw - 1) * dw + 1
+    ho = (hp - span_h) // sh + 1
+    wo = (wp - span_w) // sw + 1
+    assert ho > 0 and wo > 0, (a_codes.shape, (kh, kw), stride, dilation)
+
+    bho, bco, bc = pick_blocks(ho=ho, wo=wo, cin=cin, cout=cout, kh=kh,
+                               kw=kw, stride=stride, bho=bho, bco=bco, bc=bc)
+    n_i = pl.cdiv(ho, bho)
+    ho_pad = n_i * bho
+    n_j = pl.cdiv(cout, bco)
+    cout_pad = n_j * bco
+    n_cb = cin // bc
+    n_red = kh * kw * n_cb
+
+    # Pad so every unblocked window read is in-bounds: the last row block
+    # reads up to (ho_pad-1)*sh + span_h; the widest tap reads up to
+    # (kw-1)*dw + (wo-1)*sw + 1 columns. Only edge bytes — no ksize**2
+    # patch blow-up (the whole point).
+    need_h = (ho_pad - 1) * sh + span_h
+    need_w = (kw - 1) * dw + (wo - 1) * sw + 1
+    a_codes = jnp.pad(a_codes, ((0, 0), (ph, max(need_h - hp, 0) + ph),
+                                (pw, max(need_w - wp, 0) + pw), (0, 0)))
+    if cout_pad != cout:
+        w_codes = jnp.pad(w_codes, ((0, 0), (0, cout_pad - cout)))
+
+    bhi = (bho - 1) * sh + 1
+    bwi = (wo - 1) * sw + 1
+
+    def x_index(bi, i, j, r):
+        t = r // n_cb
+        cb = r % n_cb
+        return (bi, i * (bho * sh) + (t // kw) * dh, (t % kw) * dw, cb * bc)
+
+    def w_index(bi, i, j, r):
+        t = r // n_cb
+        cb = r % n_cb
+        return (t * cin + cb * bc, j * bco)
+
+    out_dtype = jnp.int8 if epilogue == "requant" else jnp.float32
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, n_red=n_red, stride=stride, bho=bho, wo=wo,
+            epilogue=epilogue, n_out=n_out, lo=lo,
+        ),
+        grid=(b, n_i, n_j, n_red),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, i, j, r: (0, 0)),        # scale
+            pl.BlockSpec((1, bhi, bwi, bc), x_index,
+                         indexing_mode=pl.unblocked),                # window
+            pl.BlockSpec((bc, bco), w_index,
+                         indexing_mode=pl.unblocked),                # tap w
+        ],
+        out_specs=pl.BlockSpec((1, bho, wo, bco),
+                               lambda bi, i, j, r: (bi, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho_pad, wo, cout_pad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bho * wo, bco), jnp.int32)],
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scale.reshape(1, 1).astype(jnp.float32), a_codes, w_codes)
+    return out[:, :ho, :, :cout]
+
+
+def fq_conv1d(
+    a_codes: jax.Array,   # (B, T, Cin) int8
+    w_codes: jax.Array,   # (ksize*Cin, Cout) int8
+    scale: jax.Array,
+    *,
+    ksize: int,
+    dilation: int = 1,
+    epilogue: str = "requant",
+    n_out: int = 7,
+    lo: int = 0,
+    interpret: bool = False,
+    **block_kw,
+) -> jax.Array:
+    """Fused int8 1-D conv (VALID, dilated — the paper's KWS layers).
+
+    A (ksize, 1) conv2d over a width-1 spatial axis: the tap-major weight
+    layout of conv1d is exactly the kw=1 conv2d layout, so this is free.
+    """
+    y = fq_conv2d(
+        a_codes[:, :, None, :], w_codes, scale, kh=ksize, kw=1,
+        dilation=(dilation, 1), epilogue=epilogue, n_out=n_out, lo=lo,
+        interpret=interpret, **block_kw,
+    )
+    return y[:, :, 0, :]

@@ -25,6 +25,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams (<=0.4.x) to CompilerParams (>=0.5); resolve
+# whichever exists so neither pin breaks the suite.
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def apply_epilogue(acc, scale, *, epilogue: str, n_out: int, lo: int):
+    """The fused requant/dequant 'ADC' epilogue on an int32 accumulator.
+
+    Shared by fq_matmul and fq_conv so the two paths are bit-identical:
+    codes = clip(round(acc * rescale), lo, n_out) — round/clip commute
+    because lo, n_out are ints.
+    """
+    if epilogue == "requant":
+        y = jnp.round(acc.astype(jnp.float32) * scale)
+        return jnp.clip(y, lo, n_out).astype(jnp.int8)
+    return acc.astype(jnp.float32) * scale  # dequant
+
 
 def _kernel(scale_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
             epilogue: str, n_out: int, lo: int):
@@ -40,15 +59,9 @@ def _kernel(scale_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
-        acc = acc_ref[...]
-        scale = scale_ref[0, 0]
-        if epilogue == "requant":
-            # codes = clip(round(acc * rescale), lo, n_out)  — bit-exact with
-            # the float path: round/clip commute because lo, n_out are ints.
-            y = jnp.round(acc.astype(jnp.float32) * scale)
-            o_ref[...] = jnp.clip(y, lo, n_out).astype(jnp.int8)
-        else:  # dequant
-            o_ref[...] = acc.astype(jnp.float32) * scale
+        o_ref[...] = apply_epilogue(
+            acc_ref[...], scale_ref[0, 0],
+            epilogue=epilogue, n_out=n_out, lo=lo)
 
 
 @functools.partial(
@@ -96,7 +109,7 @@ def fq_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -6,20 +6,58 @@ On TPU backends the same calls compile to Mosaic.
 
 Also provides the composite inference ops used by FQ layers:
   * rescale/alpha folding (paper eq. 4's scalar factor),
-  * im2col-based FQ conv1d/conv2d that reuse the matmul kernel.
+  * FQ conv1d/conv2d behind one dispatch point: the fused implicit-GEMM
+    Pallas kernel (kernels/fq_conv.py) on TPU, the im2col + fq_matmul
+    composition as the CPU/interpret fallback and parity oracle.
 """
 from __future__ import annotations
+
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core import quant
 from .fq_matmul import fq_matmul
+from . import fq_conv
 from .quantize import quantize_codes
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Conv implementation dispatch (single choke point for all call sites)
+# ---------------------------------------------------------------------------
+
+# "fused"  -> the implicit-GEMM Pallas kernel (no patch materialization),
+# "im2col" -> patches in HBM + fq_matmul (the parity oracle),
+# None     -> auto: fused on TPU, im2col on CPU where the interpreter makes
+#            the kh*kw-step fused grid slower than one big matmul.
+def _check_impl(impl: Optional[str], source: str) -> Optional[str]:
+    if impl not in (None, "fused", "im2col"):
+        raise ValueError(
+            f"{source} must be 'fused', 'im2col' or unset, got {impl!r}")
+    return impl
+
+
+_CONV_IMPL: Optional[str] = _check_impl(
+    os.environ.get("REPRO_CONV_IMPL") or None, "REPRO_CONV_IMPL")
+
+
+def set_conv_impl(impl: Optional[str]):
+    """Override conv dispatch globally ("fused" / "im2col" / None=auto)."""
+    global _CONV_IMPL
+    _CONV_IMPL = _check_impl(impl, "set_conv_impl()")
+
+
+def conv_impl(explicit: Optional[str] = None) -> str:
+    impl = _check_impl(explicit, "impl") or _CONV_IMPL
+    if impl is None:
+        impl = "fused" if jax.default_backend() == "tpu" else "im2col"
+    return impl
 
 
 def fold_rescale(s_a, s_w, s_out, *, bits_a: int, bits_w: int, bits_out: int):
@@ -57,7 +95,8 @@ def quantize_to_codes(x, s, *, bits: int, b: float, block_rows=256):
 
 
 # ---------------------------------------------------------------------------
-# Convolution via im2col -> fq_matmul (the FQ-Conv inference path)
+# Convolution: fused Pallas kernel, with im2col -> fq_matmul as the
+# CPU fallback / parity oracle
 # ---------------------------------------------------------------------------
 
 
@@ -70,11 +109,15 @@ def _im2col_1d(x, ksize: int, dilation: int):
 
 
 def fq_conv1d_int(a_codes, w_codes, scale, *, ksize: int, dilation: int = 1,
-                  epilogue="requant", n_out=7, lo=0):
-    """int8 1-D convolution: im2col then the fq_matmul kernel.
+                  epilogue="requant", n_out=7, lo=0, impl=None):
+    """int8 1-D convolution behind the conv dispatch point.
 
     a_codes: (B, T, Cin) int8; w_codes: (ksize*Cin, Cout) int8.
     """
+    if conv_impl(impl) == "fused":
+        return fq_conv.fq_conv1d(
+            a_codes, w_codes, scale, ksize=ksize, dilation=dilation,
+            epilogue=epilogue, n_out=n_out, lo=lo, interpret=_interpret())
     b = a_codes.shape[0]
     patches, t_out = _im2col_1d(a_codes, ksize, dilation)
     flat = patches.reshape(b * t_out, -1)
@@ -82,31 +125,40 @@ def fq_conv1d_int(a_codes, w_codes, scale, *, ksize: int, dilation: int = 1,
     return y.reshape(b, t_out, -1)
 
 
-def _im2col_2d(x, ksize: int, stride: int, padding: int):
+def _im2col_2d(x, ksize: int, stride: int, padding: int, dilation: int = 1):
     """(B, H, W, C) -> (B, Ho, Wo, ksize*ksize*C)."""
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     b, h, w, c = x.shape
-    ho = (h - ksize) // stride + 1
-    wo = (w - ksize) // stride + 1
+    span = dilation * (ksize - 1) + 1
+    ho = (h - span) // stride + 1
+    wo = (w - span) // stride + 1
     cols = []
     for di in range(ksize):
         for dj in range(ksize):
+            oi, oj = di * dilation, dj * dilation
             cols.append(
-                x[:, di : di + (ho - 1) * stride + 1 : stride,
-                  dj : dj + (wo - 1) * stride + 1 : stride, :]
+                x[:, oi : oi + (ho - 1) * stride + 1 : stride,
+                  oj : oj + (wo - 1) * stride + 1 : stride, :]
             )
     return jnp.concatenate(cols, axis=-1), ho, wo
 
 
 def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
-                  padding: int = 0, epilogue="requant", n_out=7, lo=0):
-    """int8 2-D convolution (NHWC): im2col then the fq_matmul kernel.
+                  padding: int = 0, dilation: int = 1, epilogue="requant",
+                  n_out=7, lo=0, impl=None):
+    """int8 2-D convolution (NHWC) behind the conv dispatch point.
 
-    w_codes: (ksize*ksize*Cin, Cout) int8.
+    w_codes: (ksize*ksize*Cin, Cout) int8, tap-major im2col layout.
     """
+    if conv_impl(impl) == "fused":
+        return fq_conv.fq_conv2d(
+            a_codes, w_codes, scale, kh=ksize, kw=ksize,
+            stride=(stride, stride), padding=(padding, padding),
+            dilation=(dilation, dilation), epilogue=epilogue, n_out=n_out,
+            lo=lo, interpret=_interpret())
     b = a_codes.shape[0]
-    patches, ho, wo = _im2col_2d(a_codes, ksize, stride, padding)
+    patches, ho, wo = _im2col_2d(a_codes, ksize, stride, padding, dilation)
     flat = patches.reshape(b * ho * wo, -1)
     y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
     return y.reshape(b, ho, wo, -1)

@@ -16,12 +16,21 @@ from typing import Sequence, Tuple
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` (and
+    jax.sharding.AxisType) only exist on jax >= 0.5; 0.4.x meshes are
+    implicitly all-Auto, which is what we want everywhere."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
@@ -32,9 +41,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     if need > have:
         raise ValueError(f"mesh {tuple(shape)} needs {need} devices, "
                          f"have {have}")
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(tuple(shape), tuple(axes))
 
 
 def batch_axes(mesh, mode: str = "fsdp_tp") -> Tuple[str, ...]:

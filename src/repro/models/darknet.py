@@ -90,3 +90,55 @@ def to_fq(params, state, cfg: DarkNetConfig):
             new[name] = fql.fold_bn(params[name], params[f"bn{i}"],
                                     state[f"bn{i}"])
     return new
+
+
+# ---------------------------------------------------------------------------
+# Integer deployment (paper §3.4). First/last convs stay FP per the paper's
+# ImageNet protocol; everything between runs integer-in/integer-out,
+# maxpools included (the monotone quantizer commutes with max, so pooling
+# operates on int8 codes directly — integer_inference.int_maxpool2d).
+# ---------------------------------------------------------------------------
+
+
+def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
+    """Trained FQ (BN-folded) params -> integer deployment bundle."""
+    from ..core import integer_inference as ii
+    convs = [l for l in cfg.layers if l != "M"]
+    ip = {"conv0": params["conv0"], "head": params["head"],
+          "entry": {"s_in": params["conv1"]["s_in"]},
+          "s_out_last": params[f"conv{len(convs) - 1}"]["s_out"]}
+    for i in range(1, len(convs)):
+        ip[f"conv{i}"] = ii.convert_layer(params[f"conv{i}"], qcfg,
+                                          relu_out=True)
+    return ip
+
+
+def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None):
+    """x: (B, H, W, 3) -> logits; codes flow conv1 -> last conv."""
+    from ..core import integer_inference as ii
+    h, codes, ci = x, None, 0
+    for layer in cfg.layers:
+        if layer == "M":
+            if codes is None:
+                h = -jax.lax.reduce_window(
+                    -h, jnp.inf, jax.lax.min, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+            else:
+                codes = ii.int_maxpool2d(codes)
+            continue
+        ks, _ = layer
+        if ci == 0:
+            # FP first conv (BN folded into w); same fp-in-fq-mode config
+            # as apply().
+            h = fql.fq_conv2d(ip["conv0"], h, QuantConfig(fq=qcfg.fq),
+                              padding="SAME", b_in=WEIGHT_BOUND)
+        else:
+            if codes is None:
+                codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
+            codes = ii.int_conv2d(ip[f"conv{ci}"], codes, ksize=ks,
+                                  padding=ks // 2, impl=impl)
+        ci += 1
+    h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
+    h = fql.fq_conv2d(ip["head"], h, QuantConfig(), padding="SAME",
+                      b_in=RELU_BOUND)
+    return jnp.mean(h, axis=(1, 2))

@@ -89,3 +89,44 @@ def to_fq(params, state, cfg: KWSConfig):
         new[f"conv{i}"] = fql.fold_bn(params[f"conv{i}"], params[f"bn{i}"],
                                       state[f"bn{i}"])
     return new
+
+
+# ---------------------------------------------------------------------------
+# Integer deployment (paper §3.4: codes layer-to-layer, float only at edges)
+# ---------------------------------------------------------------------------
+
+
+def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
+    """Trained FQ params -> integer deployment bundle.
+
+    The conv stack collapses to int8 weight codes + one folded rescale per
+    layer (core/integer_inference.convert_layer); the FP embedding/BN/head
+    stay float. Assumes the FQ hand-off contract s_in[i+1] == s_out[i].
+    """
+    from ..core import integer_inference as ii
+    n = len(cfg.dilations)
+    ip = {
+        "embed": params["embed"],
+        "embed_bn": (params["embed_bn"], state["embed_bn"]),
+        "head": params["head"],
+        "entry": {"s_in": params["conv0"]["s_in"]},
+        "s_out_last": params[f"conv{n - 1}"]["s_out"],
+    }
+    for i in range(n):
+        ip[f"conv{i}"] = ii.convert_layer(params[f"conv{i}"], qcfg,
+                                          relu_out=True)
+    return ip
+
+
+def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None):
+    """x: (B, T, n_mfcc) -> logits, conv stack integer-in/integer-out."""
+    from ..core import integer_inference as ii
+    h = fql.dense(ip["embed"], x)
+    h, _ = fql.batchnorm(ip["embed_bn"][0], ip["embed_bn"][1], h, train=False)
+    codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
+    for i, dil in enumerate(cfg.dilations):
+        codes = ii.int_conv1d(ip[f"conv{i}"], codes, ksize=cfg.ksize,
+                              dilation=dil, impl=impl)
+    h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
+    h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
+    return fql.dense(ip["head"], h)

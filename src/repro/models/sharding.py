@@ -68,6 +68,20 @@ def dp_size() -> int:
     return n
 
 
+def _tuple_axis_constraints_ok() -> bool:
+    """jax 0.4.37's CPU SPMD backend MISCOMPILES a combined-tuple-axis
+    ``with_sharding_constraint`` (e.g. P(("pod","data"), ...)) inside a
+    ``lax.scan`` body: shards of the combined axis come back permuted
+    ((pod,data)=(0,1) swapped with (1,0)), silently corrupting the batch
+    mid-network (caught by test_sharded_train_step_subprocess: sharded
+    loss 7.05 vs 7.20 single-device). Single-axis constraints are fine.
+    Constraints are layout hints — correctness may not depend on them —
+    so on the CPU backend (tests, dry-runs) multi-axis entries are
+    dropped instead; TPU/GPU keep them (the miscompile is CPU-specific).
+    """
+    return jax.default_backend() != "cpu"
+
+
 def constrain(x, *spec):
     """with_sharding_constraint(x, P(*spec)) if a mesh is active, else x.
 
@@ -82,10 +96,14 @@ def constrain(x, *spec):
         return x
     ba = batch_axes()
     used = set(ba)
+    keep_tuples = _tuple_axis_constraints_ok()
     expanded = []
     for a in spec:
         if a == "batch":
-            expanded.append(ba)
+            if len(ba) == 1:
+                expanded.append(ba[0])
+            else:
+                expanded.append(ba if keep_tuples else None)
         elif a in used:
             expanded.append(None)
         else:

@@ -24,8 +24,24 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:  # jax >= 0.5 re-exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x: experimental only
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import PartitionSpec as P
+
+import inspect
+
+# The replication-check kwarg was renamed check_rep -> check_vma across jax
+# versions; resolve the one this jax accepts.
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check=False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
 
 
 def q8_encode(g) -> Tuple[jax.Array, jax.Array]:
@@ -86,5 +102,5 @@ def cross_pod_mean(grads, mesh, *, compress: bool = True,
         lambda t: jax.tree.map(f, t), mesh=mesh,
         in_specs=jax.tree.map(per_leaf_spec, grads),
         out_specs=jax.tree.map(per_leaf_spec, grads),
-        check_vma=False)
+        check=False)
     return fn(grads)

@@ -1,0 +1,260 @@
+"""Fused implicit-GEMM conv kernel vs the im2col path and lax.conv.
+
+Three oracles, per the FQ-Conv deployment contract:
+  * float:   lax.conv_general_dilated on the dequantized codes (dequant
+             epilogue) — validates the convolution arithmetic,
+  * im2col:  the patches + fq_matmul composition — validates BIT-EXACT
+             requant codes (the acceptance bar: both paths produce the
+             same int32 accumulators and share the epilogue),
+  * stacked: models/kws + models/darknet integer deployment end-to-end
+             against the float FQ training path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.fq_conv import fq_conv1d, fq_conv2d, pick_blocks
+
+
+def _codes(key, shape, lo, hi):
+    return jax.random.randint(key, shape, lo, hi + 1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# conv2d: fused vs float conv (dequant epilogue)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", [0, 1])
+@pytest.mark.parametrize("dilation", [1, 2])
+def test_fused_conv2d_vs_lax_conv(stride, padding, dilation):
+    B, H, W, Cin, Cout, ks = 2, 13, 11, 5, 7, 3
+    k1, k2 = jax.random.split(jax.random.key(stride * 7 + padding * 3 +
+                                             dilation))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -7, 7)
+    alpha = jnp.float32(0.02)
+    got = fq_conv2d(a, w, alpha, kh=ks, kw=ks, stride=(stride, stride),
+                    padding=(padding, padding), dilation=(dilation, dilation),
+                    epilogue="dequant", interpret=True)
+    wf = w.reshape(ks, ks, Cin, Cout).astype(jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (stride, stride),
+        [(padding, padding), (padding, padding)],
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) * alpha
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_conv2d_same_ish_padding_batch1():
+    """3x3 stride-1 pad-1 ('SAME') on batch 1, non-multiple-of-128 chans."""
+    B, H, W, Cin, Cout, ks = 1, 16, 16, 3, 45, 3
+    k1, k2 = jax.random.split(jax.random.key(9))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -1, 1)
+    alpha = jnp.float32(0.01)
+    got = fq_conv2d(a, w, alpha, kh=ks, kw=ks, padding=(1, 1),
+                    epilogue="dequant", interpret=True)
+    assert got.shape == (B, H, W, Cout)
+    wf = w.reshape(ks, ks, Cin, Cout).astype(jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) * alpha
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv2d: fused requant codes BIT-EXACT vs the im2col path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride,padding,dilation", [
+    (1, 0, 1), (1, 1, 1), (2, 0, 1), (2, 1, 1), (1, 1, 2), (2, 2, 2),
+])
+def test_fused_requant_bitexact_vs_im2col(stride, padding, dilation):
+    B, H, W, Cin, Cout, ks = 2, 14, 12, 6, 10, 3
+    k1, k2 = jax.random.split(jax.random.key(31 * stride + padding +
+                                             5 * dilation))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -7, 7)
+    scale = jnp.float32(0.013)
+    got = ops.fq_conv2d_int(a, w, scale, ksize=ks, stride=stride,
+                            padding=padding, dilation=dilation, n_out=15,
+                            lo=0, impl="fused")
+    want = ops.fq_conv2d_int(a, w, scale, ksize=ks, stride=stride,
+                             padding=padding, dilation=dilation, n_out=15,
+                             lo=0, impl="im2col")
+    assert got.dtype == want.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cin,cout", [(1, 1), (3, 129), (130, 2)])
+def test_fused_awkward_channel_counts(cin, cout):
+    """Channel counts far from the 128-lane tile, including Cin=1."""
+    B, H, W, ks = 1, 8, 9, 3
+    k1, k2 = jax.random.split(jax.random.key(cin * 1000 + cout))
+    a = _codes(k1, (B, H, W, cin), 0, 15)
+    w = _codes(k2, (ks * ks * cin, cout), -7, 7)
+    scale = jnp.float32(0.02)
+    got = ops.fq_conv2d_int(a, w, scale, ksize=ks, padding=1, n_out=15,
+                            impl="fused")
+    want = ops.fq_conv2d_int(a, w, scale, ksize=ks, padding=1, n_out=15,
+                             impl="im2col")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_1x1_and_5x5_kernels():
+    for ks, pad in [(1, 0), (5, 2)]:
+        k1, k2 = jax.random.split(jax.random.key(ks))
+        a = _codes(k1, (2, 10, 10, 4), 0, 15)
+        w = _codes(k2, (ks * ks * 4, 8), -7, 7)
+        scale = jnp.float32(0.01)
+        got = ops.fq_conv2d_int(a, w, scale, ksize=ks, padding=pad,
+                                n_out=15, impl="fused")
+        want = ops.fq_conv2d_int(a, w, scale, ksize=ks, padding=pad,
+                                 n_out=15, impl="im2col")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_int32_accumulation():
+    """Cin large enough that int8 accumulation would overflow."""
+    k1, k2 = jax.random.split(jax.random.key(3))
+    a = _codes(k1, (1, 6, 6, 512), -127, 127)
+    w = _codes(k2, (9 * 512, 8), -127, 127)
+    got = fq_conv2d(a, w, jnp.float32(1.0), kh=3, kw=3, padding=(1, 1),
+                    epilogue="dequant", interpret=True)
+    wf = w.reshape(3, 3, 512, 8).astype(jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(jnp.max(jnp.abs(want))) > 2 ** 20  # test is meaningful
+
+
+def test_block_knobs_dont_change_codes():
+    """Explicit (bho, bco, bc) overrides tile differently, same codes."""
+    k1, k2 = jax.random.split(jax.random.key(11))
+    a = _codes(k1, (2, 12, 12, 8), 0, 15)
+    w = _codes(k2, (9 * 8, 12), -7, 7)
+    scale = jnp.float32(0.015)
+    base = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), n_out=15,
+                     interpret=True)
+    for bho, bco, bc in [(4, 4, 8), (12, 12, 4), (5, 3, 2)]:
+        got = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), n_out=15,
+                        bho=bho, bco=bco, bc=bc, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_pick_blocks_respects_divisibility():
+    bho, bco, bc = pick_blocks(ho=224, wo=224, cin=96, cout=256, kh=3, kw=3,
+                               stride=(1, 1))
+    assert 96 % bc == 0 and bho >= 1 and bco <= 256
+
+
+# ---------------------------------------------------------------------------
+# conv1d: fused vs im2col, all KWS dilations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dil", [1, 2, 4, 8])
+def test_fused_conv1d_bitexact_vs_im2col(dil):
+    B, T, Cin, Cout, ks = 2, 40, 8, 8, 3
+    k1, k2 = jax.random.split(jax.random.key(dil))
+    a = _codes(k1, (B, T, Cin), 0, 15)
+    w = _codes(k2, (ks * Cin, Cout), -1, 1)
+    scale = jnp.float32(0.01)
+    got = ops.fq_conv1d_int(a, w, scale, ksize=ks, dilation=dil, n_out=15,
+                            impl="fused")
+    want = ops.fq_conv1d_int(a, w, scale, ksize=ks, dilation=dil, n_out=15,
+                             impl="im2col")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_conv1d_batch1_dequant():
+    a = _codes(jax.random.key(0), (1, 24, 5), 0, 15)
+    w = _codes(jax.random.key(1), (3 * 5, 9), -7, 7)
+    alpha = jnp.float32(0.03)
+    got = fq_conv1d(a, w, alpha, ksize=3, dilation=2, epilogue="dequant",
+                    interpret=True)
+    wf = w.reshape(3, 5, 9).astype(jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        a.astype(jnp.float32), wf, (1,), "VALID", rhs_dilation=(2,),
+        dimension_numbers=("NTC", "TIO", "NTC")) * alpha
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch point
+# ---------------------------------------------------------------------------
+
+
+def test_conv_dispatch_auto_and_override():
+    assert ops.conv_impl(None) in ("fused", "im2col")
+    assert ops.conv_impl("fused") == "fused"
+    ops.set_conv_impl("fused")
+    try:
+        assert ops.conv_impl(None) == "fused"
+        assert ops.conv_impl("im2col") == "im2col"  # explicit wins
+    finally:
+        ops.set_conv_impl(None)
+
+
+# ---------------------------------------------------------------------------
+# integer model stacks: fused kernel end-to-end vs the float FQ path
+# ---------------------------------------------------------------------------
+
+
+def _chain_scales(params, names):
+    """Enforce the FQ hand-off contract s_in[i+1] == s_out[i] in-place."""
+    for a, b in zip(names, names[1:]):
+        params[b]["s_in"] = params[a]["s_out"]
+    return params
+
+
+@pytest.mark.parametrize("impl", ["im2col", "fused"])
+def test_kws_int_apply_bit_exact(impl):
+    from repro.core.quant import QuantConfig
+    from repro.models import kws
+    cfg = kws.KWSConfig.reduced()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    params, state = kws.init(jax.random.key(0), cfg)
+    params = kws.to_fq(params, state, cfg)
+    names = [f"conv{i}" for i in range(len(cfg.dilations))]
+    for n in names:  # trained-like scales in a sane range
+        params[n]["s_out"] = jnp.float32(0.1)
+    _chain_scales(params, names)
+    x = jax.random.normal(jax.random.key(1), (3, cfg.seq_len, cfg.n_mfcc))
+
+    y_float, _ = kws.apply(params, state, x, qcfg, cfg, train=False)
+    ip = kws.convert_int(params, state, qcfg, cfg)
+    y_int = kws.int_apply(ip, x, qcfg, cfg, impl=impl)
+    np.testing.assert_allclose(np.asarray(y_float), np.asarray(y_int),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["im2col", "fused"])
+def test_darknet_int_apply_bit_exact(impl):
+    from repro.core.quant import QuantConfig
+    from repro.models import darknet
+    cfg = darknet.DarkNetConfig.reduced()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    params, state = darknet.init(jax.random.key(0), cfg)
+    params = darknet.to_fq(params, state, cfg)
+    convs = [l for l in cfg.layers if l != "M"]
+    names = [f"conv{i}" for i in range(len(convs))]
+    for n in names:
+        params[n]["s_out"] = jnp.float32(0.2)
+    _chain_scales(params, names)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, cfg.in_channels))
+
+    y_float, _ = darknet.apply(params, state, x, qcfg, cfg, train=False)
+    ip = darknet.convert_int(params, state, qcfg, cfg)
+    y_int = darknet.int_apply(ip, x, qcfg, cfg, impl=impl)
+    np.testing.assert_allclose(np.asarray(y_float), np.asarray(y_int),
+                               rtol=0, atol=1e-5)
