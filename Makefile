@@ -1,14 +1,18 @@
 # FQ-Conv reproduction — developer entry points.
 #
-#   make test   — tier-1 suite (the ROADMAP verify command)
-#   make bench  — all paper-table benchmarks + kernel/conv microbenches
-#   make conv   — just the fused-conv-vs-im2col benchmark (BENCH_conv.json)
-#   make lint   — byte-compile + import-order sanity (no external deps)
+#   make test        — tier-1 suite (the ROADMAP verify command)
+#   make bench       — all paper-table benchmarks + kernel/conv microbenches
+#   make conv        — fused-conv-vs-im2col benchmark (BENCH_conv.json)
+#   make bench-serve — batched integer-CNN serving bench (BENCH_serve_cnn.json)
+#   make autotune    — measured (bho, bco, bc) sweep; rewrites
+#                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
+#   make lint        — byte-compile + import sanity (no external deps)
+#   make check       — lint + tier-1 tests: the full pre-PR loop
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench conv lint
+.PHONY: test bench conv bench-serve autotune lint check
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -19,9 +23,17 @@ bench:
 conv:
 	$(PYTHON) -m benchmarks.run --only conv
 
+bench-serve:
+	$(PYTHON) -m benchmarks.run --only serve_cnn
+
+autotune:
+	$(PYTHON) -m benchmarks.autotune_conv
+
 lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
 	$(PYTHON) -c "import repro.kernels.ops, repro.kernels.fq_conv, \
 	repro.kernels.fq_matmul, repro.core.integer_inference, \
-	repro.models.kws, repro.models.darknet, repro.train.trainer; \
-	print('imports ok')"
+	repro.models.kws, repro.models.darknet, repro.serve.cnn_batching, \
+	repro.train.trainer; print('imports ok')"
+
+check: lint test

@@ -1,0 +1,162 @@
+"""Measured-sweep autotuner for the fused Pallas conv kernel.
+
+    PYTHONPATH=src python -m benchmarks.autotune_conv [--full] [--no-persist]
+
+Replaces the placeholder AUTOTUNE_TABLE entries with *measured* winners:
+for each benchmark shape the harness sweeps the kernel's (bho, bco, bc)
+block knobs, times each candidate (compiled on TPU; interpret mode on CPU,
+which validates the pipeline but says nothing about Mosaic — the loader in
+kernels/fq_conv.py therefore only applies entries whose recorded backend
+matches the running one), verifies the winner's codes against the default
+blocking, and persists:
+
+  * ``src/repro/kernels/autotune_table.json`` — the winners, keyed
+    (kh, kw, stride), loaded by ``kernels.fq_conv`` at import,
+  * ``BENCH_autotune.json`` — the full sweep record (every candidate's
+    wall time), so a regression in the table is diagnosable.
+
+Run this once per backend family; re-run after kernel changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.kernels import fq_conv
+from benchmarks import common
+
+# One canonical shape per (kh, kw, stride) table key. B=2 matches the
+# batch-folded serving grid; pooled variants ride the same key (the pool
+# only changes the epilogue, not the blocking trade-off).
+SHAPES = [
+    # name,            B, H,  W,  cin, cout, ks, stride, pad, pool
+    ("darknet_3x3_s1", 2, 28, 28, 32,  64,   3,  1,      1,   None),
+    ("darknet_3x3_pool", 2, 28, 28, 32, 64,  3,  1,      1,   2),
+    ("downsample_3x3_s2", 2, 28, 28, 64, 128, 3,  2,      1,   None),
+    ("pointwise_1x1",  2, 14, 14, 128, 128,  1,  1,      0,   None),
+]
+
+
+def _candidates(*, ho, cin, cout, pool, full: bool):
+    bhos = [8, 16, 32, 64, 128] if full else [8, 32, 128]
+    bcos = [32, 64, 128, 256] if full else [64, 128]
+    bcs = [d for d in (8, 16, 32, 64, 128, 256) if cin % d == 0] or [cin]
+    if not full:
+        bcs = bcs[-2:]
+    seen, out = set(), []
+    for bho in bhos:
+        for bco in bcos:
+            for bc in bcs:
+                # normalize to what pick_blocks will actually use, so the
+                # sweep doesn't time the same effective blocking twice
+                eff = fq_conv.pick_blocks(
+                    ho=ho, wo=ho, cin=cin, cout=cout, kh=3, kw=3,
+                    stride=(1, 1), pool=(pool, pool) if pool else None,
+                    bho=bho, bco=bco, bc=bc)
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                out.append(eff)
+    return out
+
+
+def _time_one(a, w, scale, *, ks, stride, pad, pool, bho, bco, bc, interpret):
+    def call():
+        return fq_conv.fq_conv2d(
+            a, w, scale, kh=ks, kw=ks, stride=(stride, stride),
+            padding=(pad, pad), pool=(pool, pool) if pool else None,
+            n_out=15, lo=0, bho=bho, bco=bco, bc=bc, interpret=interpret)
+    return call, common.timer(call, reps=2)
+
+
+def sweep(full: bool = False):
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    rows, winners = [], {}
+    k1, k2 = jax.random.split(jax.random.key(0))
+    for name, B, H, W, cin, cout, ks, stride, pad, pool in SHAPES:
+        a = jax.random.randint(k1, (B, H, W, cin), 0, 16).astype(jnp.int8)
+        w = jax.random.randint(k2, (ks * ks * cin, cout), -7, 8
+                               ).astype(jnp.int8)
+        scale = jnp.float32(0.01)
+        ho = (H + 2 * pad - ks) // stride + 1
+        ref_call, _ = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
+                                pool=pool, bho=None, bco=None, bc=None,
+                                interpret=interpret)
+        ref = np.asarray(ref_call())
+        best = None
+        for bho, bco, bc in _candidates(ho=ho, cin=cin, cout=cout, pool=pool,
+                                        full=full):
+            call, us = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
+                                 pool=pool, bho=bho, bco=bco, bc=bc,
+                                 interpret=interpret)
+            rows.append(dict(shape=name, kh=ks, kw=ks, stride=stride,
+                             pool=pool, bho=bho, bco=bco, bc=bc,
+                             wall_us=round(us, 1)))
+            if best is None or us < best[0]:
+                best = (us, (bho, bco, bc), call)
+            print(f"autotune,{name},bho={bho} bco={bco} bc={bc},{us:.0f}us")
+        us, (bho, bco, bc), call = best
+        # blocking must never change the codes — verify the winner
+        np.testing.assert_array_equal(np.asarray(call()), ref)
+        key = (ks, ks, stride)
+        # the unpooled canonical shape owns the key; pooled variant only
+        # claims it if nothing else has
+        if key not in winners or pool is None:
+            winners[key] = dict(kh=ks, kw=ks, stride=stride, bho=bho,
+                                bco=bco, bc=bc, wall_us=round(us, 1),
+                                shape=name, ho=ho)
+            # a bho that equals the sweep shape's (pool-rounded) output
+            # plane was clipped, not chosen — persisting it would cap row
+            # blocking on larger planes that were never measured
+            plane = ho - (ho % pool) if pool else ho
+            if bho >= plane:
+                winners[key].pop("bho")
+        print(f"autotune,{name}_winner,bho={bho} bco={bco} bc={bc},{us:.0f}us")
+    return backend, rows, winners
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="wider candidate grid (slower)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="sweep and report only; don't rewrite the table")
+    ap.add_argument("--table", default=fq_conv.AUTOTUNE_TABLE_PATH)
+    ap.add_argument("--record", default="BENCH_autotune.json")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    backend, rows, winners = sweep(full=args.full)
+    doc = {
+        "format": 1,
+        "backend": backend,
+        "generated_by": "benchmarks/autotune_conv.py",
+        "note": ("interpret-mode timings; kernels/fq_conv.py ignores these "
+                 "entries on other backends" if backend != "tpu"
+                 else "compiled Mosaic timings"),
+        "entries": sorted(winners.values(),
+                          key=lambda e: (e["kh"], e["kw"], e["stride"])),
+    }
+    with open(args.record, "w") as f:
+        json.dump({"benchmark": "fq_conv_autotune_sweep", "backend": backend,
+                   "rows": rows, "winners": doc["entries"]}, f, indent=2)
+    print(f"autotune,record,{args.record},{len(rows)} candidates")
+    if not args.no_persist:
+        with open(args.table, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"autotune,table,{args.table},{len(winners)} keys")
+    print(f"autotune,done,{time.time()-t0:.1f}s,")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

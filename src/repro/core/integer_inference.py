@@ -91,16 +91,32 @@ def int_conv2d_final(ip, codes, *, ksize: int, stride: int = 1,
                              dilation=dilation, epilogue="dequant", impl=impl)
 
 
+def int_conv2d_pool(ip, codes, *, ksize: int, stride: int = 1,
+                    padding: int = 0, dilation: int = 1, pool: int = 2,
+                    impl=None):
+    """Conv + non-overlapping maxpool as ONE integer op (conv+pool pairs).
+
+    Behind the kernels/ops dispatch point: on the fused path the maxpool
+    runs on the int32 accumulator inside the conv kernel's VMEM epilogue —
+    the unpooled activation plane never reaches HBM; the im2col path keeps
+    the unfused conv + code-domain pool composition as the parity oracle.
+    """
+    return ops.fq_conv2d_pool_int(codes, ip["w_codes"], ip["rescale"],
+                                  ksize=ksize, stride=stride, padding=padding,
+                                  dilation=dilation, pool=pool,
+                                  n_out=ip["n_out"], lo=ip["lo"], impl=impl)
+
+
 def int_maxpool2d(codes, *, window: int = 2, stride: int = 2):
     """2x2 maxpool directly on int8 codes (NHWC).
 
     Valid because the learned quantizer is monotone: Q(max(x)) == max(Q(x)),
     so pooling commutes with requantization and the codes never need to be
     decoded to float for the pool (paper §3.4's integer-only stack).
+    Prefer ``int_conv2d_pool`` when the pool directly follows a conv — it
+    fuses the pool into the conv epilogue and skips this HBM round-trip.
     """
-    return jax.lax.reduce_window(
-        codes, jnp.int8(-128), jax.lax.max,
-        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return ops.maxpool2d(codes, window=window, stride=stride)
 
 
 def decode_output(codes_or_float, s_out, bits_out: Optional[int]):

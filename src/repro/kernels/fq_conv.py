@@ -14,20 +14,38 @@ Layout contract (matches the im2col path and ``integer_inference``):
   * activations  (B, H, W, Cin) int8 codes, NHWC,
   * weights      (kh*kw*Cin, Cout) int8 codes, tap-major im2col layout
                  (row  t*Cin + c  is tap (t // kw, t % kw), channel c),
-  * output       (B, Ho, Wo, Cout) int8 codes (requant) or f32 (dequant).
+  * output       (B, Ho, Wo, Cout) int8 codes (requant) or f32 (dequant);
+                 with ``pool`` set, (B, Ho//ph, Wo//pw, Cout).
 
-Grid is (B, Ho/bho, Cout/bco, kh*kw*n_cin_blocks) with the reduction
-innermost ("arbitrary" semantics) so each output tile's accumulator stays
-resident in VMEM for the whole tap x channel reduction. Stride is applied
-by slicing the gathered window *after* it lands in VMEM (the window is
-contiguous in HBM; strided rows never travel twice) and dilation enters
-only the element-offset index map, i.e. it is free. Padding costs one
-edge-padded copy of the activations in HBM (jnp.pad before the kernel) —
-O(input bytes), not the O(ksize^2 * input) of im2col patches.
+Grid is (B * Ho/bho, Cout/bco, kh*kw*n_cin_blocks): the batch dimension is
+*folded* into the output-row axis (small serving batches B=1..4 otherwise
+burn a whole grid dimension on 1-4 steps), and the reduction is innermost
+("arbitrary" semantics) so each output tile's accumulator stays resident in
+VMEM for the whole tap x channel reduction. Stride is applied by slicing
+the gathered window *after* it lands in VMEM and dilation enters only the
+element-offset index map, i.e. it is free. Padding costs one edge-padded
+copy of the activations in HBM (jnp.pad before the kernel) — O(input
+bytes), not the O(ksize^2 * input) of im2col patches.
+
+Fused maxpool epilogue: FQ-Conv's learned quantizer is monotone, so
+requantization commutes with max (Q(max x) == max Q(x) — the same fact
+``integer_inference.int_maxpool2d`` exploits on codes). With ``pool=(2,2)``
+the non-overlapping maxpool therefore runs on the *int32 accumulator tile*
+inside VMEM, before requant: a pooled layer writes Ho*Wo/4 output bytes to
+HBM instead of Ho*Wo plus a second full read+write pooling pass.
+
+Block sizes: explicit knobs win, then ``AUTOTUNE_TABLE`` — measured-sweep
+winners persisted by ``benchmarks/autotune_conv.py`` to the checked-in
+``autotune_table.json`` next to this file, loaded once on first use
+(entries measured on a different backend family are ignored;
+interpret-mode timings say nothing about Mosaic) — then a VMEM-budget
+heuristic.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -41,15 +59,51 @@ from .fq_matmul import TPUCompilerParams, apply_epilogue
 # Block-size selection
 # ---------------------------------------------------------------------------
 
-# Measured-on-TPU overrides, keyed by (kh, kw, stride_h). Populated as real
-# TPU numbers land (ROADMAP "fused conv autotuning on real TPU"); absent keys
-# fall back to the VMEM-budget heuristic below — the same knob style as
-# fq_matmul's (bm, bn, bk).
-AUTOTUNE_TABLE: dict = {
+# Hand defaults, keyed by (kh, kw, stride_h); measured sweep entries from
+# autotune_table.json override these when their backend matches.
+_BUILTIN_TABLE: dict = {
     (3, 3, 1): {"bco": 128},
     (3, 3, 2): {"bco": 128},
     (1, 1, 1): {"bho": 128, "bco": 128},
 }
+
+AUTOTUNE_TABLE_PATH = os.path.join(os.path.dirname(__file__),
+                                   "autotune_table.json")
+
+
+def load_autotune_table(path: str = AUTOTUNE_TABLE_PATH) -> dict:
+    """Builtin defaults overlaid with measured winners for *this* backend.
+
+    The JSON is written by ``benchmarks/autotune_conv.py`` and records the
+    backend it was measured on; winners from another backend family are
+    skipped (a block shape that wins in CPU interpret mode is meaningless
+    for Mosaic, and vice versa), leaving the builtin defaults in force.
+    """
+    table = {k: dict(v) for k, v in _BUILTIN_TABLE.items()}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return table
+    if doc.get("format") != 1 or doc.get("backend") != jax.default_backend():
+        return table
+    for e in doc.get("entries", []):
+        key = (int(e["kh"]), int(e["kw"]), int(e["stride"]))
+        table[key] = {k: int(e[k]) for k in ("bho", "bco", "bc") if e.get(k)}
+    return table
+
+
+# Memoized on first use rather than at module import: load_autotune_table
+# asks jax for the backend, and forcing backend initialization as an import
+# side effect would break callers that configure platforms after import.
+AUTOTUNE_TABLE: Optional[dict] = None
+
+
+def _autotune_table() -> dict:
+    global AUTOTUNE_TABLE
+    if AUTOTUNE_TABLE is None:
+        AUTOTUNE_TABLE = load_autotune_table()
+    return AUTOTUNE_TABLE
 
 _VMEM_BUDGET = 4 * 1024 * 1024  # conservative half-ish of usable VMEM
 
@@ -62,7 +116,7 @@ def _divisor_at_most(n: int, cap: int) -> int:
 
 
 def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
-                stride: Tuple[int, int],
+                stride: Tuple[int, int], pool: Optional[Tuple[int, int]] = None,
                 bho: Optional[int] = None, bco: Optional[int] = None,
                 bc: Optional[int] = None) -> Tuple[int, int, int]:
     """(bho, bco, bc): output-row / output-channel / input-channel blocks.
@@ -71,11 +125,14 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
     heuristic that shrinks bho until x-window + w + int32 accumulator fit.
     An explicit ``bc`` must divide ``cin`` exactly (a non-divisor block
     would read weight rows across a tap boundary); table/heuristic values
-    are rounded down to a divisor.
+    are rounded down to a divisor. With a fused ``pool``, bho is rounded
+    down to a multiple of the pool height so pool windows never straddle a
+    row-tile boundary (explicit values included — tiling is a performance
+    knob, never a semantics knob).
     """
     if bc is not None and cin % bc != 0:
         raise ValueError(f"bc={bc} must divide cin={cin}")
-    over = AUTOTUNE_TABLE.get((kh, kw, stride[0]), {})
+    over = _autotune_table().get((kh, kw, stride[0]), {})
     bco = bco or over.get("bco")
     bho = bho or over.get("bho")
     bc = bc or over.get("bc")
@@ -96,7 +153,11 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
         bho = min(ho, 128)
         while bho > 1 and vmem_bytes(bho) > _VMEM_BUDGET:
             bho = (bho + 1) // 2
-    return min(bho, ho), bco, bc
+    bho = min(bho, ho)
+    if pool is not None:
+        ph = pool[0]
+        bho = max(ph, bho - bho % ph)
+    return bho, bco, bc
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +167,9 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
 
 def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
             stride: Tuple[int, int], bho: int, wo: int,
-            epilogue: str, n_out: int, lo: int):
-    r = pl.program_id(3)
+            pool: Optional[Tuple[int, int]], epilogue: str, n_out: int,
+            lo: int):
+    r = pl.program_id(2)
 
     @pl.when(r == 0)
     def _init():
@@ -122,15 +184,33 @@ def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
 
     @pl.when(r == n_red - 1)
     def _epilogue():
-        y = apply_epilogue(acc_ref[...], scale_ref[0, 0],
+        acc = acc_ref[...]
+        if pool is not None:
+            # Code-domain maxpool hoisted onto the int32 accumulator: the
+            # requant epilogue is monotone non-decreasing (scale > 0), so
+            # max commutes with it — pooling here is bit-exact with
+            # int_maxpool2d over requantized codes, but never writes the
+            # unpooled tile to HBM. Strided-slice maxes (the same idiom as
+            # the conv's stride) keep Mosaic on 3-D tensors.
+            ph, pw = pool
+            a3 = acc.reshape(bho, wo, acc.shape[-1])
+            a3 = a3[:, : (wo // pw) * pw, :]
+            m = a3[:: ph, :: pw, :]
+            for di in range(ph):
+                for dj in range(pw):
+                    if di or dj:
+                        m = jnp.maximum(m, a3[di:: ph, dj:: pw, :])
+            acc = m.reshape((bho // ph) * (wo // pw), -1)
+        y = apply_epilogue(acc, scale_ref[0, 0],
                            epilogue=epilogue, n_out=n_out, lo=lo)
         o_ref[...] = y.reshape(o_ref.shape)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kh", "kw", "stride", "padding", "dilation", "epilogue",
-                     "n_out", "lo", "bho", "bco", "bc", "interpret"),
+    static_argnames=("kh", "kw", "stride", "padding", "dilation", "pool",
+                     "epilogue", "n_out", "lo", "bho", "bco", "bc",
+                     "interpret"),
 )
 def fq_conv2d(
     a_codes: jax.Array,   # (B, H, W, Cin) int8
@@ -142,6 +222,7 @@ def fq_conv2d(
     stride: Tuple[int, int] = (1, 1),
     padding: Tuple[int, int] = (0, 0),
     dilation: Tuple[int, int] = (1, 1),
+    pool: Optional[Tuple[int, int]] = None,
     epilogue: str = "requant",
     n_out: int = 7,
     lo: int = 0,
@@ -150,7 +231,12 @@ def fq_conv2d(
     bc: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused int8 NHWC conv2d with the requant/dequant epilogue in VMEM."""
+    """Fused int8 NHWC conv2d with the requant/dequant epilogue in VMEM.
+
+    ``pool=(ph, pw)`` additionally fuses a non-overlapping VALID maxpool
+    (window == stride, e.g. (2, 2)) into the epilogue: the pool runs on the
+    int32 accumulator before requant, so only the pooled tile reaches HBM.
+    """
     assert epilogue in ("requant", "dequant")
     b, h, w, cin = a_codes.shape
     kcin, cout = w_codes.shape
@@ -164,21 +250,26 @@ def fq_conv2d(
     ho = (hp - span_h) // sh + 1
     wo = (wp - span_w) // sw + 1
     assert ho > 0 and wo > 0, (a_codes.shape, (kh, kw), stride, dilation)
+    if pool is not None:
+        pool_h, pool_w = pool
+        assert pool_h >= 1 and pool_w >= 1
+        assert ho >= pool_h and wo >= pool_w, \
+            f"pool {pool} larger than conv output ({ho}, {wo})"
 
     bho, bco, bc = pick_blocks(ho=ho, wo=wo, cin=cin, cout=cout, kh=kh,
-                               kw=kw, stride=stride, bho=bho, bco=bco, bc=bc)
+                               kw=kw, stride=stride, pool=pool, bho=bho,
+                               bco=bco, bc=bc)
     n_i = pl.cdiv(ho, bho)
-    ho_pad = n_i * bho
     n_j = pl.cdiv(cout, bco)
     cout_pad = n_j * bco
     n_cb = cin // bc
     n_red = kh * kw * n_cb
 
     # Pad so every unblocked window read is in-bounds: the last row block
-    # reads up to (ho_pad-1)*sh + span_h; the widest tap reads up to
+    # reads up to (n_i*bho-1)*sh + span_h; the widest tap reads up to
     # (kw-1)*dw + (wo-1)*sw + 1 columns. Only edge bytes — no ksize**2
     # patch blow-up (the whole point).
-    need_h = (ho_pad - 1) * sh + span_h
+    need_h = (n_i * bho - 1) * sh + span_h
     need_w = (kw - 1) * dw + (wo - 1) * sw + 1
     a_codes = jnp.pad(a_codes, ((0, 0), (ph, max(need_h - hp, 0) + ph),
                                 (pw, max(need_w - wp, 0) + pw), (0, 0)))
@@ -188,41 +279,50 @@ def fq_conv2d(
     bhi = (bho - 1) * sh + 1
     bwi = (wo - 1) * sw + 1
 
-    def x_index(bi, i, j, r):
+    # Batch folded into the leading (output-row) grid axis: index p is
+    # (batch, row-block) = (p // n_i, p % n_i). B=1..4 serving shapes fold
+    # into one axis instead of wasting a whole grid dimension.
+    def x_index(p, j, r):
         t = r // n_cb
         cb = r % n_cb
-        return (bi, i * (bho * sh) + (t // kw) * dh, (t % kw) * dw, cb * bc)
+        return (p // n_i, (p % n_i) * (bho * sh) + (t // kw) * dh,
+                (t % kw) * dw, cb * bc)
 
-    def w_index(bi, i, j, r):
+    def w_index(p, j, r):
         t = r // n_cb
         cb = r % n_cb
         return (t * cin + cb * bc, j * bco)
 
+    if pool is not None:
+        bho_out, wo_out = bho // pool_h, wo // pool_w
+    else:
+        bho_out, wo_out = bho, wo
     out_dtype = jnp.int8 if epilogue == "requant" else jnp.float32
     out = pl.pallas_call(
         functools.partial(
-            _kernel, n_red=n_red, stride=stride, bho=bho, wo=wo,
+            _kernel, n_red=n_red, stride=stride, bho=bho, wo=wo, pool=pool,
             epilogue=epilogue, n_out=n_out, lo=lo,
         ),
-        grid=(b, n_i, n_j, n_red),
+        grid=(b * n_i, n_j, n_red),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda bi, i, j, r: (0, 0)),        # scale
+            pl.BlockSpec((1, 1), lambda p, j, r: (0, 0)),            # scale
             pl.BlockSpec((1, bhi, bwi, bc), x_index,
                          indexing_mode=pl.unblocked),                # window
             pl.BlockSpec((bc, bco), w_index,
                          indexing_mode=pl.unblocked),                # tap w
         ],
-        out_specs=pl.BlockSpec((1, bho, wo, bco),
-                               lambda bi, i, j, r: (bi, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho_pad, wo, cout_pad), out_dtype),
+        out_specs=pl.BlockSpec((1, bho_out, wo_out, bco),
+                               lambda p, j, r: (p // n_i, p % n_i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_i * bho_out, wo_out, cout_pad),
+                                       out_dtype),
         scratch_shapes=[pltpu.VMEM((bho * wo, bco), jnp.int32)],
         compiler_params=TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(scale.reshape(1, 1).astype(jnp.float32), a_codes, w_codes)
-    return out[:, :ho, :, :cout]
+    ho_out = ho // pool_h if pool is not None else ho
+    return out[:, :ho_out, :, :cout]
 
 
 def fq_conv1d(

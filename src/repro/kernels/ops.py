@@ -162,3 +162,39 @@ def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
     flat = patches.reshape(b * ho * wo, -1)
     y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
     return y.reshape(b, ho, wo, -1)
+
+
+def maxpool2d(y, *, window: int = 2, stride: int = 2):
+    """VALID maxpool on int8 codes or f32 activations (NHWC).
+
+    On codes this is exact because the learned quantizer is monotone —
+    max commutes with (de/re)quantization. Used by the unfused conv+pool
+    oracle below and by ``integer_inference.int_maxpool2d``.
+    """
+    init = jnp.asarray(-128 if y.dtype == jnp.int8 else -jnp.inf, y.dtype)
+    return jax.lax.reduce_window(
+        y, init, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def fq_conv2d_pool_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
+                       padding: int = 0, dilation: int = 1, pool: int = 2,
+                       epilogue="requant", n_out=7, lo=0, impl=None):
+    """int8 conv2d + non-overlapping maxpool, fused where the backend can.
+
+    "fused" runs the pool on the int32 accumulator tile inside the kernel's
+    VMEM epilogue (fq_conv.fq_conv2d ``pool=``) so only Ho*Wo/pool**2 output
+    bytes reach HBM; "im2col" composes the unfused conv with a code-domain
+    reduce_window — the parity oracle (bit-exact because the quantizer is
+    monotone, so max commutes with requant).
+    """
+    if conv_impl(impl) == "fused":
+        return fq_conv.fq_conv2d(
+            a_codes, w_codes, scale, kh=ksize, kw=ksize,
+            stride=(stride, stride), padding=(padding, padding),
+            dilation=(dilation, dilation), pool=(pool, pool),
+            epilogue=epilogue, n_out=n_out, lo=lo, interpret=_interpret())
+    y = fq_conv2d_int(a_codes, w_codes, scale, ksize=ksize, stride=stride,
+                      padding=padding, dilation=dilation, epilogue=epilogue,
+                      n_out=n_out, lo=lo, impl="im2col")
+    return maxpool2d(y, window=pool, stride=pool)

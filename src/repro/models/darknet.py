@@ -113,11 +113,21 @@ def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
     return ip
 
 
-def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None):
-    """x: (B, H, W, 3) -> logits; codes flow conv1 -> last conv."""
+def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
+              fuse_pool: bool = True):
+    """x: (B, H, W, 3) -> logits; codes flow conv1 -> last conv.
+
+    conv+maxpool pairs on the integer path go through ONE op
+    (``integer_inference.int_conv2d_pool``): the pool fuses into the conv
+    kernel's VMEM epilogue, so the unpooled int8 plane never round-trips
+    HBM. ``fuse_pool=False`` keeps the PR-1 conv-then-pool composition as
+    the stack-level parity oracle.
+    """
     from ..core import integer_inference as ii
-    h, codes, ci = x, None, 0
-    for layer in cfg.layers:
+    layers = list(cfg.layers)
+    h, codes, ci, i = x, None, 0, 0
+    while i < len(layers):
+        layer = layers[i]
         if layer == "M":
             if codes is None:
                 h = -jax.lax.reduce_window(
@@ -125,6 +135,7 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None):
                     "VALID")
             else:
                 codes = ii.int_maxpool2d(codes)
+            i += 1
             continue
         ks, _ = layer
         if ci == 0:
@@ -135,10 +146,23 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None):
         else:
             if codes is None:
                 codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
-            codes = ii.int_conv2d(ip[f"conv{ci}"], codes, ksize=ks,
-                                  padding=ks // 2, impl=impl)
+            if fuse_pool and i + 1 < len(layers) and layers[i + 1] == "M":
+                codes = ii.int_conv2d_pool(ip[f"conv{ci}"], codes, ksize=ks,
+                                           padding=ks // 2, impl=impl)
+                i += 1  # the pool is consumed by the fused epilogue
+            else:
+                codes = ii.int_conv2d(ip[f"conv{ci}"], codes, ksize=ks,
+                                      padding=ks // 2, impl=impl)
         ci += 1
+        i += 1
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = fql.fq_conv2d(ip["head"], h, QuantConfig(), padding="SAME",
                       b_in=RELU_BOUND)
     return jnp.mean(h, axis=(1, 2))
+
+
+def int_serve_fn(ip, qcfg: QuantConfig, cfg: DarkNetConfig, **kw):
+    """Fixed-signature closure for serve.cnn_batching: (B, H, W, 3) -> logits."""
+    def fn(x):
+        return int_apply(ip, x, qcfg, cfg, **kw)
+    return fn

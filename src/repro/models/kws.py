@@ -130,3 +130,15 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None):
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
     return fql.dense(ip["head"], h)
+
+
+def int_serve_fn(ip, qcfg: QuantConfig, cfg: KWSConfig, **kw):
+    """Fixed-signature closure for serve.cnn_batching: (B, T, n_mfcc) -> logits.
+
+    The KWS stack has no spatial pools (dilated VALID convs + global average
+    pool), so it gains from the batch-folded conv grid and the batcher, not
+    the fused pool epilogue.
+    """
+    def fn(x):
+        return int_apply(ip, x, qcfg, cfg, **kw)
+    return fn

@@ -62,6 +62,7 @@ class ContinuousBatcher:
         self._step = jax.jit(make_serve_step(model_cfg, qcfg),
                              donate_argnums=(1,))
         self._key = jax.random.key(0)
+        self._queue: List[Request] = []
 
     # -- slot management ----------------------------------------------------
 
@@ -98,15 +99,12 @@ class ContinuousBatcher:
         self.active[slot] = req
 
     def submit(self, reqs: List[Request]):
-        self._queue = getattr(self, "_queue", [])
         self._queue.extend(reqs)
 
     def _fill_slots(self):
-        q = getattr(self, "_queue", [])
         for i in range(self.slots):
-            if self.active[i] is None and q:
-                self._admit(q.pop(0), i)
-        self._queue = q
+            if self.active[i] is None and self._queue:
+                self._admit(self._queue.pop(0), i)
 
     # -- main loop ----------------------------------------------------------
 
@@ -139,6 +137,6 @@ class ContinuousBatcher:
             ) -> Dict[int, list]:
         self.submit(reqs)
         for _ in range(max_steps):
-            if self.step() == 0 and not getattr(self, "_queue", []):
+            if self.step() == 0 and not self._queue:
                 break
         return {r.rid: r.out for r in reqs}

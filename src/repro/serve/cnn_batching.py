@@ -1,0 +1,154 @@
+"""Shape-bucketed request batching for integer CNN inference.
+
+CNN serving, unlike LM decode (serve/batching.ContinuousBatcher), is
+single-shot: one forward pass per request, no KV state to keep resident.
+The production problem is jit's static shapes — every distinct
+(batch, spatial) signature compiles a fresh executable — and small-batch
+waste: B=1 requests leave the MXU grid mostly idle (the conv kernel folds
+batch into its row axis precisely so B=2..8 flushes cost barely more than
+B=1).
+
+Bucket policy:
+  * **Shape buckets.** Requests are grouped by their exact input shape
+    (e.g. KWS frame count x n_mfcc, or image H x W x C). The serving
+    frontend is expected to resample inputs to a small shape ladder, so
+    the number of groups stays bounded; an unseen shape still serves — it
+    just compiles its own bucket on first flush.
+  * **Batch buckets.** A flush pads the batch dimension with zero rows up
+    to the smallest power of two >= the pending count (capped at
+    ``max_batch``), so each shape compiles at most log2(max_batch)+1
+    executables — fixed jit signatures. Pad-row outputs are discarded.
+  * **Donation.** The padded input buffer is donated to the jitted step on
+    accelerator backends, so the input plane never holds two live copies
+    on-device (donation is skipped on CPU, where jax cannot honor it and
+    only warns).
+  * **Flush policy.** A shape bucket flushes whenever it can fill
+    ``max_batch``; a partial bucket flushes after waiting
+    ``max_wait_ticks`` scheduler ticks (the latency bound). ``drain()``
+    flushes everything immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class CNNRequest:
+    rid: int
+    x: np.ndarray                    # one sample, no batch dim
+    out: Optional[np.ndarray] = None
+    done: bool = False
+
+
+def batch_bucket(n: int, max_batch: int) -> int:
+    """Smallest power-of-two slot count that fits n, capped at max_batch."""
+    b = 1
+    while b < n and b < max_batch:
+        b *= 2
+    return min(b, max_batch)
+
+
+class CNNBatcher:
+    """Single-host reference implementation (CPU-testable).
+
+    ``apply_fn`` maps a batched input array to batched outputs (e.g. the
+    closure from ``models.kws.int_serve_fn`` / ``models.darknet
+    .int_serve_fn``); it is jitted once per shape bucket with the input
+    buffer donated, and the pow-2 batch padding keeps the signature count
+    per shape at log2(max_batch)+1.
+    """
+
+    def __init__(self, apply_fn: Callable, *, max_batch: int = 8,
+                 max_wait_ticks: int = 2):
+        assert max_batch >= 1
+        self.apply_fn = apply_fn
+        self.max_batch = max_batch
+        self.max_wait_ticks = max_wait_ticks
+        self._queues: Dict[Tuple, List[CNNRequest]] = {}
+        self._age: Dict[Tuple, int] = {}
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._step = jax.jit(apply_fn, donate_argnums=donate)
+        self._signatures: set = set()
+        self.stats = {"flushes": 0, "served": 0, "padded_rows": 0}
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, reqs: List[CNNRequest]):
+        for r in reqs:
+            x = np.asarray(r.x)
+            key = (x.shape, x.dtype.str)
+            self._queues.setdefault(key, []).append(r)
+            self._age.setdefault(key, 0)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- flushing -----------------------------------------------------------
+
+    def _flush(self, key: Tuple, reqs: List[CNNRequest]):
+        shape, dtype = key
+        slots = batch_bucket(len(reqs), self.max_batch)
+        x = np.zeros((slots,) + shape, dtype=np.dtype(dtype))
+        for i, r in enumerate(reqs):
+            x[i] = r.x
+        self._signatures.add((key, slots))
+        y = np.asarray(jax.device_get(self._step(x)))
+        for i, r in enumerate(reqs):
+            r.out = y[i]
+            r.done = True
+        self.stats["flushes"] += 1
+        self.stats["served"] += len(reqs)
+        self.stats["padded_rows"] += slots - len(reqs)
+        self._age[key] = 0  # every flush restarts the bucket's wait clock
+
+    def tick(self) -> int:
+        """One scheduler tick: flush full buckets, and partial buckets that
+        have exceeded the latency bound. Returns #requests served."""
+        served = 0
+        for key in list(self._queues):
+            q = self._queues[key]
+            while len(q) >= self.max_batch:
+                batch, self._queues[key] = q[:self.max_batch], q[self.max_batch:]
+                q = self._queues[key]
+                self._flush(key, batch)
+                served += len(batch)
+            if q:
+                self._age[key] += 1
+                if self._age[key] > self.max_wait_ticks:
+                    self._queues[key] = []
+                    self._flush(key, q)
+                    served += len(q)
+        return served
+
+    def drain(self) -> int:
+        """Flush every pending request now (shutdown / end of load)."""
+        served = 0
+        for key in list(self._queues):
+            q, self._queues[key] = self._queues[key], []
+            while q:
+                batch, q = q[:self.max_batch], q[self.max_batch:]
+                self._flush(key, batch)
+                served += len(batch)
+        return served
+
+    @property
+    def n_signatures(self) -> int:
+        """Distinct (shape, slots) jit signatures compiled so far."""
+        return len(self._signatures)
+
+    # -- convenience --------------------------------------------------------
+
+    def run(self, reqs: List[CNNRequest], max_ticks: int = 10_000
+            ) -> Dict[int, np.ndarray]:
+        """Serve a request list to completion; returns rid -> output."""
+        self.submit(reqs)
+        for _ in range(max_ticks):
+            if self.pending() == 0:
+                break
+            self.tick()
+        self.drain()
+        return {r.rid: r.out for r in reqs}

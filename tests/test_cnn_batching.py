@@ -1,0 +1,132 @@
+"""Shape-bucketed CNN batcher: correctness, bucket policy, jit signatures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.cnn_batching import CNNBatcher, CNNRequest, batch_bucket
+
+
+def _mark_fn(x):
+    """Batch-position-sensitive toy model: catches pad-row mixups."""
+    return jnp.sum(x, axis=tuple(range(1, x.ndim))) + 0.5
+
+
+def _reqs(shapes, rng):
+    return [CNNRequest(rid=i, x=rng.standard_normal(s).astype(np.float32))
+            for i, s in enumerate(shapes)]
+
+
+def test_batch_bucket_policy():
+    assert [batch_bucket(n, 8) for n in (1, 2, 3, 5, 8, 11)] == \
+        [1, 2, 4, 8, 8, 8]
+    assert batch_bucket(3, 4) == 4
+    assert batch_bucket(7, 1) == 1
+
+
+def test_outputs_match_direct_apply():
+    rng = np.random.default_rng(0)
+    reqs = _reqs([(6, 3)] * 5, rng)
+    out = CNNBatcher(_mark_fn, max_batch=4).run(reqs)
+    assert len(out) == 5
+    for r in reqs:
+        assert r.done
+        np.testing.assert_allclose(
+            out[r.rid], np.asarray(_mark_fn(jnp.asarray(r.x)[None]))[0],
+            rtol=1e-6)
+
+
+def test_pad_rows_discarded_and_counted():
+    rng = np.random.default_rng(1)
+    b = CNNBatcher(_mark_fn, max_batch=4, max_wait_ticks=0)
+    out = b.run(_reqs([(5, 2)] * 3, rng))  # 3 requests pad to a 4-slot flush
+    assert len(out) == 3 and b.stats["padded_rows"] == 1
+    assert b.stats["flushes"] == 1 and b.stats["served"] == 3
+
+
+def test_shape_buckets_isolate_and_bound_signatures():
+    rng = np.random.default_rng(2)
+    shapes = [(4, 3)] * 9 + [(6, 3)] * 2 + [(4, 5)]
+    b = CNNBatcher(_mark_fn, max_batch=4, max_wait_ticks=0)
+    reqs = _reqs(shapes, rng)
+    out = b.run(reqs)
+    assert len(out) == len(shapes)
+    for r in reqs:  # every request served under its own shape
+        np.testing.assert_allclose(
+            out[r.rid], np.asarray(_mark_fn(jnp.asarray(r.x)[None]))[0],
+            rtol=1e-6)
+    # (4,3): flushes of 4,4,1 -> slots {4,1}; (6,3): slots {2}; (4,5): {1}
+    assert b.n_signatures == 4
+    assert b.stats["flushes"] == 5
+
+
+def test_partial_bucket_waits_then_flushes():
+    rng = np.random.default_rng(3)
+    b = CNNBatcher(_mark_fn, max_batch=8, max_wait_ticks=2)
+    b.submit(_reqs([(3, 3)] * 2, rng))
+    assert b.tick() == 0  # age 1: below max_batch, within latency bound
+    assert b.tick() == 0  # age 2
+    assert b.tick() == 2  # age 3 > max_wait_ticks: partial flush
+    assert b.pending() == 0
+
+
+def test_wait_clock_resets_after_drain():
+    """A flush from drain() must restart the bucket's wait clock — the next
+    lone request gets the full max_wait_ticks to find batchmates."""
+    rng = np.random.default_rng(5)
+    b = CNNBatcher(_mark_fn, max_batch=8, max_wait_ticks=3)
+    b.submit(_reqs([(3, 3)], rng))
+    for _ in range(3):
+        b.tick()
+    b.drain()
+    b.submit(_reqs([(3, 3)], rng))
+    assert b.tick() == 0  # fresh clock: not flushed prematurely
+    assert b.pending() == 1
+
+
+def test_drain_flushes_everything_now():
+    rng = np.random.default_rng(4)
+    b = CNNBatcher(_mark_fn, max_batch=8, max_wait_ticks=50)
+    b.submit(_reqs([(3, 3)] * 3 + [(2, 2)] * 2, rng))
+    assert b.drain() == 5
+    assert b.pending() == 0 and b.stats["served"] == 5
+
+
+def test_kws_int_apply_served_matches_direct():
+    """End-to-end: the batcher over kws.int_serve_fn reproduces unbatched
+    int_apply bit-for-bit (pad rows don't leak into real outputs)."""
+    from repro.core.quant import QuantConfig
+    from repro.models import kws
+    cfg = kws.KWSConfig.reduced()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    params, state = kws.init(jax.random.key(0), cfg)
+    params = kws.to_fq(params, state, cfg)
+    names = [f"conv{i}" for i in range(len(cfg.dilations))]
+    for n in names:
+        params[n]["s_out"] = jnp.float32(0.1)
+    for a, b2 in zip(names, names[1:]):
+        params[b2]["s_in"] = params[a]["s_out"]
+    ip = kws.convert_int(params, state, qcfg, cfg)
+    fn = kws.int_serve_fn(ip, qcfg, cfg)
+
+    rng = np.random.default_rng(7)
+    xs = rng.standard_normal((3, cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+    reqs = [CNNRequest(rid=i, x=xs[i]) for i in range(3)]
+    out = CNNBatcher(fn, max_batch=4, max_wait_ticks=0).run(reqs)
+    direct = np.asarray(kws.int_apply(ip, jnp.asarray(xs), qcfg, cfg))
+    for i in range(3):
+        np.testing.assert_allclose(out[i], direct[i], rtol=0, atol=1e-5)
+
+
+def test_continuous_batcher_queue_initialized():
+    """serve/batching.ContinuousBatcher owns _queue from __init__ (no
+    getattr-lazy init at call sites)."""
+    from repro.models import transformer as T
+    from repro.core.quant import QuantConfig
+    from repro.serve.batching import ContinuousBatcher
+    cfg = T.TransformerConfig(
+        name="tiny", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+        d_ff=32, vocab=32, param_dtype=jnp.float32, max_seq=32)
+    b = ContinuousBatcher(T.make_params(jax.random.key(0), cfg), cfg,
+                          QuantConfig(8, 8), slots=2, max_len=16)
+    assert b._queue == []

@@ -157,6 +157,150 @@ def test_pick_blocks_respects_divisibility():
 
 
 # ---------------------------------------------------------------------------
+# batch-folded grid: B folds into the output-row axis — per-sample results
+# must not depend on the serving batch size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 4])
+def test_batch_fold_per_sample_invariance(batch):
+    ks = 3
+    k1, k2 = jax.random.split(jax.random.key(batch))
+    a = _codes(k1, (batch, 10, 9, 6), 0, 15)
+    w = _codes(k2, (ks * ks * 6, 8), -7, 7)
+    scale = jnp.float32(0.02)
+    got = fq_conv2d(a, w, scale, kh=ks, kw=ks, padding=(1, 1), n_out=15,
+                    interpret=True)
+    for i in range(batch):
+        one = fq_conv2d(a[i:i + 1], w, scale, kh=ks, kw=ks, padding=(1, 1),
+                        n_out=15, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i:i + 1]),
+                                      np.asarray(one), err_msg=f"sample {i}")
+
+
+# ---------------------------------------------------------------------------
+# fused maxpool epilogue: pool on the int32 accumulator in VMEM must be
+# bit-exact with the unfused conv + code-domain maxpool composition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride,padding", [
+    (1, 0), (1, 1), (2, 0), (2, 1),
+])
+@pytest.mark.parametrize("hw", [(14, 12), (13, 11)])  # even and odd planes
+def test_fused_pool_bitexact_vs_unfused(stride, padding, hw):
+    H, W = hw
+    B, Cin, Cout, ks = 2, 6, 10, 3
+    k1, k2 = jax.random.split(jax.random.key(17 * stride + padding + H))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -7, 7)
+    scale = jnp.float32(0.013)
+    kw = dict(ksize=ks, stride=stride, padding=padding, pool=2, n_out=15,
+              lo=0)
+    got = ops.fq_conv2d_pool_int(a, w, scale, impl="fused", **kw)
+    want = ops.fq_conv2d_pool_int(a, w, scale, impl="im2col", **kw)
+    assert got.dtype == want.dtype == jnp.int8
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_pool_matches_separate_maxpool_op():
+    """fq_conv2d(pool=) == int_maxpool2d(fq_conv2d()) — the commuting-max
+    claim, checked against the production code-domain pool itself."""
+    from repro.core import integer_inference as ii
+    k1, k2 = jax.random.split(jax.random.key(23))
+    a = _codes(k1, (3, 12, 12, 4), 0, 15)
+    w = _codes(k2, (9 * 4, 9), -7, 7)
+    scale = jnp.float32(0.02)
+    unpooled = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), n_out=15,
+                         interpret=True)
+    want = ii.int_maxpool2d(unpooled)
+    got = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), pool=(2, 2),
+                    n_out=15, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_pool_dequant_epilogue():
+    """Pool also commutes with the (positive-scale) dequant epilogue."""
+    k1, k2 = jax.random.split(jax.random.key(5))
+    a = _codes(k1, (2, 10, 9, 4), 0, 15)
+    w = _codes(k2, (9 * 4, 6), -7, 7)
+    alpha = jnp.float32(0.02)
+    got = fq_conv2d(a, w, alpha, kh=3, kw=3, padding=(1, 1), pool=(2, 2),
+                    epilogue="dequant", interpret=True)
+    unpooled = fq_conv2d(a, w, alpha, kh=3, kw=3, padding=(1, 1),
+                         epilogue="dequant", interpret=True)
+    want = ops.maxpool2d(unpooled)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_fused_pool_block_knobs_dont_change_codes():
+    """Odd explicit bho is rounded to the pool height; codes unchanged."""
+    k1, k2 = jax.random.split(jax.random.key(29))
+    a = _codes(k1, (2, 12, 12, 8), 0, 15)
+    w = _codes(k2, (9 * 8, 12), -7, 7)
+    scale = jnp.float32(0.015)
+    base = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), pool=(2, 2),
+                     n_out=15, interpret=True)
+    for bho, bco, bc in [(5, 3, 2), (4, 4, 8), (12, 12, 4), (2, 128, 8)]:
+        got = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), pool=(2, 2),
+                        n_out=15, bho=bho, bco=bco, bc=bc, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_pick_blocks_pool_rounds_bho():
+    bho, _, _ = pick_blocks(ho=17, wo=17, cin=8, cout=16, kh=3, kw=3,
+                            stride=(1, 1), pool=(2, 2), bho=5)
+    assert bho == 4
+    bho, _, _ = pick_blocks(ho=17, wo=17, cin=8, cout=16, kh=3, kw=3,
+                            stride=(1, 1), pool=(2, 2), bho=1)
+    assert bho == 2  # never below the pool height
+
+
+# ---------------------------------------------------------------------------
+# int_maxpool2d on odd planes (VALID semantics: trailing row/col dropped)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw", [(5, 7), (9, 5), (6, 6), (7, 1), (1, 4)])
+def test_int_maxpool2d_odd_hw(hw):
+    from repro.core import integer_inference as ii
+    H, W = hw
+    codes = _codes(jax.random.key(H * 10 + W), (2, H, W, 3), -8, 7)
+    got = ii.int_maxpool2d(codes)
+    assert got.dtype == jnp.int8
+    assert got.shape == (2, H // 2, W // 2, 3)
+    want = jax.lax.reduce_window(
+        codes.astype(jnp.float32), -jnp.inf, jax.lax.max,
+        (1, 2, 2, 1), (1, 2, 2, 1), "VALID").astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# autotune table loading
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_table_loads_matching_backend(tmp_path):
+    from repro.kernels import fq_conv as fc
+    doc = {"format": 1, "backend": jax.default_backend(),
+           "entries": [{"kh": 3, "kw": 3, "stride": 1,
+                        "bho": 16, "bco": 64, "bc": 8}]}
+    p = tmp_path / "table.json"
+    p.write_text(__import__("json").dumps(doc))
+    table = fc.load_autotune_table(str(p))
+    assert table[(3, 3, 1)] == {"bho": 16, "bco": 64, "bc": 8}
+    # other-backend entries are ignored -> builtin defaults survive
+    doc["backend"] = "not-a-backend"
+    p.write_text(__import__("json").dumps(doc))
+    table = fc.load_autotune_table(str(p))
+    assert table[(3, 3, 1)] == fc._BUILTIN_TABLE[(3, 3, 1)]
+    # missing/corrupt file -> builtin defaults
+    table = fc.load_autotune_table(str(tmp_path / "nope.json"))
+    assert table[(1, 1, 1)] == fc._BUILTIN_TABLE[(1, 1, 1)]
+
+
+# ---------------------------------------------------------------------------
 # conv1d: fused vs im2col, all KWS dilations
 # ---------------------------------------------------------------------------
 
@@ -239,7 +383,10 @@ def test_kws_int_apply_bit_exact(impl):
 
 
 @pytest.mark.parametrize("impl", ["im2col", "fused"])
-def test_darknet_int_apply_bit_exact(impl):
+@pytest.mark.parametrize("fuse_pool", [False, True])
+def test_darknet_int_apply_bit_exact(impl, fuse_pool):
+    """conv+pool pairs through int_conv2d_pool (fuse_pool=True) must match
+    both the conv-then-pool composition and the float FQ path."""
     from repro.core.quant import QuantConfig
     from repro.models import darknet
     cfg = darknet.DarkNetConfig.reduced()
@@ -255,6 +402,10 @@ def test_darknet_int_apply_bit_exact(impl):
 
     y_float, _ = darknet.apply(params, state, x, qcfg, cfg, train=False)
     ip = darknet.convert_int(params, state, qcfg, cfg)
-    y_int = darknet.int_apply(ip, x, qcfg, cfg, impl=impl)
+    y_int = darknet.int_apply(ip, x, qcfg, cfg, impl=impl,
+                              fuse_pool=fuse_pool)
     np.testing.assert_allclose(np.asarray(y_float), np.asarray(y_int),
                                rtol=0, atol=1e-5)
+    # fused and unfused pool routing are bit-identical, not just close
+    y_ref = darknet.int_apply(ip, x, qcfg, cfg, impl=impl, fuse_pool=False)
+    np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_ref))
