@@ -8,11 +8,13 @@
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make lint        — byte-compile + import sanity (no external deps)
 #   make check       — lint + tier-1 tests: the full pre-PR loop
+#   make ci          — lint + fast tests (excludes @pytest.mark.slow, i.e.
+#                      the serve_mixed trace-replay benchmark test)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench conv bench-serve autotune lint check
+.PHONY: test bench conv bench-serve bench-mixed autotune lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -26,6 +28,9 @@ conv:
 bench-serve:
 	$(PYTHON) -m benchmarks.run --only serve_cnn
 
+bench-mixed:
+	$(PYTHON) -m benchmarks.run --only serve_mixed
+
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
 
@@ -33,7 +38,11 @@ lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
 	$(PYTHON) -c "import repro.kernels.ops, repro.kernels.fq_conv, \
 	repro.kernels.fq_matmul, repro.core.integer_inference, \
-	repro.models.kws, repro.models.darknet, repro.serve.cnn_batching, \
+	repro.models.kws, repro.models.darknet, repro.models.frontends, \
+	repro.serve.cnn_batching, repro.serve.shape_ladder, \
 	repro.train.trainer; print('imports ok')"
 
 check: lint test
+
+ci: lint
+	$(PYTHON) -m pytest -q -m "not slow"

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -42,6 +43,12 @@ SHAPES = [
     ("darknet_3x3_pool", 2, 28, 28, 32, 64,  3,  1,      1,   2),
     ("downsample_3x3_s2", 2, 28, 28, 64, 128, 3,  2,      1,   None),
     ("pointwise_1x1",  2, 14, 14, 128, 128,  1,  1,      0,   None),
+]
+
+# --dry-run: one tiny shape, minimal candidates — exercises the full
+# sweep -> verify -> persist pipeline in seconds (schema/round-trip tests).
+DRY_SHAPES = [
+    ("dry_3x3_s1", 1, 8, 8, 8, 8, 3, 1, 1, None),
 ]
 
 
@@ -68,21 +75,22 @@ def _candidates(*, ho, cin, cout, pool, full: bool):
     return out
 
 
-def _time_one(a, w, scale, *, ks, stride, pad, pool, bho, bco, bc, interpret):
+def _time_one(a, w, scale, *, ks, stride, pad, pool, bho, bco, bc, interpret,
+              reps=2):
     def call():
         return fq_conv.fq_conv2d(
             a, w, scale, kh=ks, kw=ks, stride=(stride, stride),
             padding=(pad, pad), pool=(pool, pool) if pool else None,
             n_out=15, lo=0, bho=bho, bco=bco, bc=bc, interpret=interpret)
-    return call, common.timer(call, reps=2)
+    return call, common.timer(call, reps=reps)
 
 
-def sweep(full: bool = False):
+def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
     backend = jax.default_backend()
     interpret = backend != "tpu"
     rows, winners = [], {}
     k1, k2 = jax.random.split(jax.random.key(0))
-    for name, B, H, W, cin, cout, ks, stride, pad, pool in SHAPES:
+    for name, B, H, W, cin, cout, ks, stride, pad, pool in shapes:
         a = jax.random.randint(k1, (B, H, W, cin), 0, 16).astype(jnp.int8)
         w = jax.random.randint(k2, (ks * ks * cin, cout), -7, 8
                                ).astype(jnp.int8)
@@ -90,14 +98,14 @@ def sweep(full: bool = False):
         ho = (H + 2 * pad - ks) // stride + 1
         ref_call, _ = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
                                 pool=pool, bho=None, bco=None, bc=None,
-                                interpret=interpret)
+                                interpret=interpret, reps=reps)
         ref = np.asarray(ref_call())
         best = None
         for bho, bco, bc in _candidates(ho=ho, cin=cin, cout=cout, pool=pool,
                                         full=full):
             call, us = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
                                  pool=pool, bho=bho, bco=bco, bc=bc,
-                                 interpret=interpret)
+                                 interpret=interpret, reps=reps)
             rows.append(dict(shape=name, kh=ks, kw=ks, stride=stride,
                              pool=pool, bho=bho, bco=bco, bc=bc,
                              wall_us=round(us, 1)))
@@ -128,14 +136,30 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="wider candidate grid (slower)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny shape + minimal candidates: exercise the "
+                         "sweep->verify->persist pipeline in seconds "
+                         "(use with --table/--record tmp paths)")
     ap.add_argument("--no-persist", action="store_true",
                     help="sweep and report only; don't rewrite the table")
     ap.add_argument("--table", default=fq_conv.AUTOTUNE_TABLE_PATH)
     ap.add_argument("--record", default="BENCH_autotune.json")
     args = ap.parse_args(argv)
+    if args.dry_run:  # never let throwaway data clobber checked-in artifacts
+        ap_ = os.path.abspath
+        if ap_(args.record) == ap_("BENCH_autotune.json"):
+            ap.error("--dry-run would overwrite the checked-in "
+                     "BENCH_autotune.json; pass --record <tmp path>")
+        if not args.no_persist and \
+                ap_(args.table) == ap_(fq_conv.AUTOTUNE_TABLE_PATH):
+            ap.error("--dry-run would overwrite the checked-in table; pass "
+                     "--table <tmp path> (or --no-persist)")
 
     t0 = time.time()
-    backend, rows, winners = sweep(full=args.full)
+    backend, rows, winners = sweep(
+        full=args.full,
+        shapes=DRY_SHAPES if args.dry_run else SHAPES,
+        reps=1 if args.dry_run else 2)
     doc = {
         "format": 1,
         "backend": backend,

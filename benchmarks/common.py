@@ -11,6 +11,7 @@ is labeled reduced-scale.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable, Optional
 
@@ -120,3 +121,24 @@ def timer(fn, *args, reps: int = 3, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.time() - t0) / reps * 1e6  # us per call
+
+
+def merge_bench_json(path: str, updates: dict) -> dict:
+    """Update top-level keys of a benchmark JSON artifact in place.
+
+    Several benchmarks share one artifact (serve_cnn and serve_mixed both
+    record into BENCH_serve_cnn.json); merging instead of overwriting lets
+    them run in any order without clobbering each other's sections. A
+    missing or unparseable file starts fresh.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {}
+    if not isinstance(doc, dict):
+        doc = {}
+    doc.update(updates)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc

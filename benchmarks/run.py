@@ -368,12 +368,39 @@ def _pooled_layer_bytes(layers, in_hw, *, batch=1):
     return rows
 
 
+def _trained_int_params(module, cfg, names, qcfg):
+    """Init-and-fold integer deployment params with a consistent FQ
+    hand-off contract (s_in[i+1] == s_out[i]) — a stand-in for a trained
+    checkpoint, shared by the serving benchmarks."""
+    params, state = module.init(jax.random.key(0), cfg)
+    params = module.to_fq(params, state, cfg)
+    for n in names:
+        params[n]["s_out"] = jnp.float32(0.2)
+    for a, b in zip(names, names[1:]):
+        params[b]["s_in"] = params[a]["s_out"]
+    return module.convert_int(params, state, qcfg, cfg)
+
+
+def _reduced_int_models(qcfg):
+    """Reduced KWS + darknet integer stacks for the serving benchmarks:
+    (kws_cfg, kws_ip, dn_cfg, dn_ip)."""
+    from repro.models import darknet, kws
+    kws_cfg = kws.KWSConfig.reduced()
+    kws_ip = _trained_int_params(
+        kws, kws_cfg, [f"conv{i}" for i in range(len(kws_cfg.dilations))],
+        qcfg)
+    dn_cfg = darknet.DarkNetConfig.reduced()
+    dn_names = [f"conv{i}" for i in
+                range(len([l for l in dn_cfg.layers if l != "M"]))]
+    dn_ip = _trained_int_params(darknet, dn_cfg, dn_names, qcfg)
+    return kws_cfg, kws_ip, dn_cfg, dn_ip
+
+
 def bench_serve_cnn():
     """Batched integer-CNN serving (serve/cnn_batching.CNNBatcher):
     throughput vs batch size across shape buckets + analytic HBM
     bytes/request for the fused conv+pool epilogue, recorded to
     BENCH_serve_cnn.json (ISSUE 2 acceptance)."""
-    import json
     import numpy as np
     from repro.core.quant import QuantConfig
     from repro.models import darknet, kws
@@ -382,23 +409,7 @@ def bench_serve_cnn():
     print("# Serve — shape-bucketed batched integer CNN inference")
     backend = jax.default_backend()
     qcfg = QuantConfig(2, 4, 4, fq=True)
-
-    def _trained_like(module, cfg, names):
-        params, state = module.init(jax.random.key(0), cfg)
-        params = module.to_fq(params, state, cfg)
-        for n in names:
-            params[n]["s_out"] = jnp.float32(0.2)
-        for a, b in zip(names, names[1:]):
-            params[b]["s_in"] = params[a]["s_out"]
-        return module.convert_int(params, state, qcfg, cfg)
-
-    kws_cfg = kws.KWSConfig.reduced()
-    kws_ip = _trained_like(
-        kws, kws_cfg, [f"conv{i}" for i in range(len(kws_cfg.dilations))])
-    dn_cfg = darknet.DarkNetConfig.reduced()
-    dn_names = [f"conv{i}" for i in
-                range(len([l for l in dn_cfg.layers if l != "M"]))]
-    dn_ip = _trained_like(darknet, dn_cfg, dn_names)
+    kws_cfg, kws_ip, dn_cfg, dn_ip = _reduced_int_models(qcfg)
 
     buckets = [
         ("kws_T24", kws.int_serve_fn(kws_ip, qcfg, kws_cfg),
@@ -454,24 +465,182 @@ def bench_serve_cnn():
                   f"{r['pool_boundary_drop']},fused epilogue vs separate "
                   f"pool pass")
 
-    with open("BENCH_serve_cnn.json", "w") as f:
-        json.dump({
-            "benchmark": "serve_cnn_batched",
-            "backend": backend,
-            "timing_note": (
-                "interpret/im2col-dispatch CPU timings — batching overhead "
-                "and scaling shape are real, absolute kernel speed is not"
-                if backend != "tpu" else "compiled TPU timings"),
-            "throughput": tp_rows,
-            "throughput_scaling": scaling,
-            "hbm_bytes_pooled_layers": hbm,
-            "hbm_note": ("analytic int8-code traffic; pool_boundary_* is the "
-                         "conv-output/pool traffic the fused epilogue "
-                         "removes (unpooled plane never reaches HBM), "
-                         "layer_* includes input/pad/weight traffic at "
-                         "batch=8 (weights amortized across the batch)"),
-        }, f, indent=2)
+    common.merge_bench_json("BENCH_serve_cnn.json", {
+        "benchmark": "serve_cnn_batched",
+        "backend": backend,
+        "timing_note": (
+            "interpret/im2col-dispatch CPU timings — batching overhead "
+            "and scaling shape are real, absolute kernel speed is not"
+            if backend != "tpu" else "compiled TPU timings"),
+        "throughput": tp_rows,
+        "throughput_scaling": scaling,
+        "hbm_bytes_pooled_layers": hbm,
+        "hbm_note": ("analytic int8-code traffic; pool_boundary_* is the "
+                     "conv-output/pool traffic the fused epilogue "
+                     "removes (unpooled plane never reaches HBM), "
+                     "layer_* includes input/pad/weight traffic at "
+                     "batch=8 (weights amortized across the batch)"),
+    })
     print("serve_cnn,artifact,BENCH_serve_cnn.json,written")
+
+
+# ---------------------------------------------------------------------------
+# Mixed-shape trace replay: shape ladder + sync vs dispatch-ahead
+# ---------------------------------------------------------------------------
+
+
+def _mixed_arrivals(rng, sample_fn, *, n_ticks, rate, burst_p=0.2,
+                    burst=3):
+    """Seeded arrival trace: per tick, Poisson(rate) requests; some
+    arrivals burst into `burst` same-shape copies (hot-bucket pressure)."""
+    import numpy as np
+    arrivals = []
+    for _ in range(n_ticks):
+        batch = []
+        for _ in range(int(rng.poisson(rate))):
+            x = sample_fn(rng)
+            batch.append(x)
+            if rng.random() < burst_p:
+                batch.extend(np.array(x) for _ in range(burst - 1))
+        arrivals.append(batch)
+    return arrivals
+
+
+def _replay_trace(fn, ladder, arrivals, *, dispatch_ahead, step_fn,
+                  max_batch=4, max_wait_ticks=2, max_inflight=4):
+    """Replay an arrival trace tick by tick; no drain() — completion is
+    reached through ticks alone so total_ticks is comparable across
+    modes."""
+    from repro.serve.cnn_batching import CNNBatcher, CNNRequest
+    b = CNNBatcher(fn, max_batch=max_batch, max_wait_ticks=max_wait_ticks,
+                   ladder=ladder, dispatch_ahead=dispatch_ahead,
+                   max_inflight=max_inflight, step_fn=step_fn)
+    reqs, ticks = [], 0
+    t0 = time.time()
+    for batch in arrivals:
+        rs = [CNNRequest(rid=len(reqs) + i, x=x)
+              for i, x in enumerate(batch)]
+        b.submit(rs)
+        reqs.extend(rs)
+        b.tick()
+        ticks += 1
+    while b.outstanding() and ticks < 10_000:
+        b.tick()
+        ticks += 1
+    wall = time.time() - t0
+    assert b.outstanding() == 0 and all(r.done for r in reqs)
+    return b, reqs, ticks, wall
+
+
+def bench_serve_mixed():
+    """Mixed-load serving: seeded mixed-shape arrival traces through the
+    shape-ladder frontend, sync vs dispatch-ahead flushes — total ticks,
+    throughput, wait-tick percentiles and the jit-signature bound,
+    recorded into BENCH_serve_cnn.json (ISSUE 3 acceptance)."""
+    import numpy as np
+    from repro.core.quant import QuantConfig
+    from repro.models import darknet, frontends, kws
+
+    print("# Serve — mixed-shape trace replay, ladder + dispatch-ahead")
+    backend = jax.default_backend()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    max_batch = 4
+    slots_per_shape = int(np.log2(max_batch)) + 1
+    kws_cfg, kws_ip, dn_cfg, dn_ip = _reduced_int_models(qcfg)
+
+    def kws_sample(rng):
+        t = int(rng.integers(10, 37))  # rf is 9; rungs are 16/24/32
+        return rng.standard_normal((t, kws_cfg.n_mfcc)).astype(np.float32)
+
+    def dn_sample(rng):
+        h, w = (int(v) for v in rng.integers(8, 23, size=2))
+        return rng.standard_normal(
+            (h, w, dn_cfg.in_channels)).astype(np.float32)
+
+    # short, bursty arrival windows: several buckets contend for flush
+    # slots in the same tick, which is where dispatch-ahead's multi-flush
+    # quantum beats sync's one-blocking-flush quantum
+    traces = [
+        ("kws", kws.int_serve_fn(kws_ip, qcfg, kws_cfg),
+         frontends.kws_serving_ladder(kws_cfg, (16, 24, 32)),
+         kws_sample, 5, 7.0),
+        ("darknet", darknet.int_serve_fn(dn_ip, qcfg, dn_cfg),
+         frontends.darknet_serving_ladder(dn_cfg, (12, 16, 20)),
+         dn_sample, 4, 6.0),
+    ]
+
+    seed = 0
+    rows, ticks_by = [], {}
+    for name, fn, ladder, sample, n_ticks, rate in traces:
+        rng = np.random.default_rng(seed)
+        arrivals = _mixed_arrivals(rng, sample, n_ticks=n_ticks, rate=rate)
+        n_req = sum(len(b) for b in arrivals)
+        step = jax.jit(fn)  # shared across modes: same compile cache
+        # warmup replays, one per mode: the modes pack different (rung,
+        # slots) batches, so each mode's signatures compile off the clock
+        for da in (False, True):
+            _replay_trace(fn, ladder, arrivals, dispatch_ahead=da,
+                          step_fn=step, max_batch=max_batch)
+        outs = {}
+        for mode, da in (("sync", False), ("dispatch_ahead", True)):
+            b, reqs, ticks, wall = _replay_trace(
+                fn, ladder, arrivals, dispatch_ahead=da, step_fn=step,
+                max_batch=max_batch)
+            waits = np.asarray([r.wait_ticks for r in reqs])
+            outs[mode] = {r.rid: r.out for r in reqs}
+            st = b.stats
+            bound = len(ladder.shapes) * slots_per_shape
+            rows.append(dict(
+                trace=name, mode=mode, n_req=n_req, total_ticks=ticks,
+                req_per_tick=round(n_req / ticks, 3),
+                reqs_per_s=round(n_req / wall, 2),
+                wait_p50=float(np.percentile(waits, 50)),
+                wait_p99=float(np.percentile(waits, 99)),
+                wait_ticks_by_bucket=st["wait_ticks"],
+                flushes=st["flushes"], padded_rows=st["padded_rows"],
+                ladder_hits=st["ladder_hits"],
+                ladder_normalized=st["ladder_normalized"],
+                ladder_misses=st["ladder_misses"],
+                window_waits=st["window_waits"],
+                inflight_peak=st["inflight_peak"],
+                jit_signatures=b.n_signatures,
+                jit_signature_bound=bound,
+                signature_bound_ok=b.n_signatures <= bound))
+            ticks_by[(name, mode)] = ticks
+            print(f"serve_mixed,{name}_{mode}_ticks,{ticks},"
+                  f"{n_req} reqs, p99 wait "
+                  f"{np.percentile(waits, 99):.0f} ticks")
+            print(f"serve_mixed,{name}_{mode}_signatures,"
+                  f"{b.n_signatures},bound {bound}")
+        same = all(
+            np.array_equal(outs["sync"][r], outs["dispatch_ahead"][r])
+            for r in outs["sync"])
+        for r in rows[-2:]:  # a per-trace property: stamp BOTH mode rows
+            r["modes_bit_identical"] = same
+        print(f"serve_mixed,{name}_modes_bit_identical,{same},"
+              f"sync vs dispatch-ahead outputs")
+        print(f"serve_mixed,{name}_dispatch_ahead_tick_drop,"
+              f"{ticks_by[(name, 'sync')] - ticks_by[(name, 'dispatch_ahead')]},"
+              f"fewer scheduler quanta to serve the trace")
+
+    fewer = all(ticks_by[(n, "dispatch_ahead")] < ticks_by[(n, "sync")]
+                for n, *_ in traces)
+    common.merge_bench_json("BENCH_serve_cnn.json", {
+        "mixed_trace": {
+            "seed": seed,
+            "backend": backend,
+            "max_batch": max_batch,
+            "max_wait_ticks": 2,
+            "max_inflight": 4,
+            "tick_note": (
+                "a tick is one host scheduling quantum: sync mode's "
+                "blocking device_get consumes it (one flush/tick); "
+                "dispatch-ahead packs/dispatches up to the in-flight "
+                "window per tick and resolves a tick later"),
+            "rows": rows,
+            "dispatch_ahead_strictly_fewer_ticks": fewer,
+        }})
+    print("serve_mixed,artifact,BENCH_serve_cnn.json,written")
 
 
 def bench_dryrun_summary():
@@ -501,6 +670,7 @@ ALL = {
     "kernels": bench_kernels,
     "conv": bench_conv,
     "serve_cnn": bench_serve_cnn,
+    "serve_mixed": bench_serve_mixed,
     "dryrun": bench_dryrun_summary,
 }
 

@@ -85,11 +85,16 @@ def load_autotune_table(path: str = AUTOTUNE_TABLE_PATH) -> dict:
             doc = json.load(f)
     except (OSError, ValueError):
         return table
-    if doc.get("format") != 1 or doc.get("backend") != jax.default_backend():
+    if not isinstance(doc, dict) or doc.get("format") != 1 \
+            or doc.get("backend") != jax.default_backend():
         return table
     for e in doc.get("entries", []):
-        key = (int(e["kh"]), int(e["kw"]), int(e["stride"]))
-        table[key] = {k: int(e[k]) for k in ("bho", "bco", "bc") if e.get(k)}
+        try:
+            key = (int(e["kh"]), int(e["kw"]), int(e["stride"]))
+            knobs = {k: int(e[k]) for k in ("bho", "bco", "bc") if e.get(k)}
+        except (KeyError, TypeError, ValueError):
+            continue  # a malformed entry never takes the defaults down
+        table[key] = knobs
     return table
 
 

@@ -11,16 +11,22 @@ into the backbone's d_model.
     (B, n_frames, feat) standing in for the two strided conv1d layers.
   * InternViT / llama4 early-fusion -> precomputed *patch embeddings*
     (B, n_patches, feat).
+
+Serving hooks: the ``*_serving_ladder`` constructors at the bottom bind
+each modality's shape contract (n_mfcc / channels / feat_dim) to a
+``serve.shape_ladder.ShapeLadder``, so the CNN batcher can fold arbitrary
+request shapes onto a bounded rung set (crop/pad, quantizer-commuting).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..core.quant import QuantConfig
+from ..serve.shape_ladder import LadderSpec, ShapeLadder
 from . import layers as L
 
 
@@ -66,3 +72,62 @@ def synthetic_features(key, cfg: FrontendConfig, batch: int,
         return None
     return jax.random.normal(
         key, (batch, cfg.n_positions, cfg.feat_dim), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving shape ladders (serve/shape_ladder.py frontends)
+#
+# Each constructor pins the modality's immutable contract dim (n_mfcc /
+# in_channels / feat_dim) and exposes only the spatial rungs as policy.
+# ---------------------------------------------------------------------------
+
+
+def kws_serving_ladder(cfg, frame_counts: Optional[Sequence[int]] = None
+                       ) -> ShapeLadder:
+    """MFCC frame-count ladder for ``models.kws`` requests ``(T, n_mfcc)``.
+
+    Short clips zero-pad (silence), long clips center-crop. Rungs default
+    to the config's training length. Every rung must exceed the dilated
+    conv stack's receptive field or VALID padding leaves no frames.
+    """
+    counts = tuple(frame_counts) if frame_counts else (cfg.seq_len,)
+    rf = 1 + (cfg.ksize - 1) * sum(cfg.dilations)
+    if min(counts) < rf:
+        raise ValueError(
+            f"ladder rung {min(counts)} is below the KWS receptive field "
+            f"{rf}; VALID convs would produce no output frames")
+    return ShapeLadder(LadderSpec("frames", counts, cfg.n_mfcc))
+
+
+def darknet_serving_ladder(cfg, sizes: Sequence) -> ShapeLadder:
+    """Letterbox ladder for ``models.darknet`` requests ``(H, W, C)``.
+
+    ``sizes`` are (H, W) rungs (ints mean square planes); channels are
+    preserved exactly — a channel-count mismatch is a ladder miss, never a
+    conversion. Every rung must survive the config's maxpool stack (each
+    "M" halves the plane with VALID semantics), or normalized requests
+    would die inside the jitted conv at serve time.
+    """
+    ladder = ShapeLadder(LadderSpec("image", tuple(sizes), cfg.in_channels))
+    floor = 2 ** sum(1 for layer in cfg.layers if layer == "M")
+    for h, w in ladder.specs[0].sizes:
+        if h < floor or w < floor:
+            raise ValueError(
+                f"ladder rung ({h}, {w}) collapses to an empty plane in "
+                f"the config's maxpool stack; rungs need min dim >= "
+                f"{floor}")
+    return ladder
+
+
+def frontend_serving_ladder(cfg: FrontendConfig,
+                            positions: Optional[Sequence[int]] = None
+                            ) -> Optional[ShapeLadder]:
+    """Token-grid ladder for precomputed frontend features ``(n, feat)``.
+
+    Audio frame embeddings and vision patch embeddings share the rank-2
+    "frames" policy: crop/pad the position axis, pin ``feat_dim``.
+    """
+    if not cfg.enabled:
+        return None
+    counts = tuple(positions) if positions else (cfg.n_positions,)
+    return ShapeLadder(LadderSpec("frames", counts, cfg.feat_dim))

@@ -2,38 +2,76 @@
 
 CNN serving, unlike LM decode (serve/batching.ContinuousBatcher), is
 single-shot: one forward pass per request, no KV state to keep resident.
-The production problem is jit's static shapes — every distinct
-(batch, spatial) signature compiles a fresh executable — and small-batch
-waste: B=1 requests leave the MXU grid mostly idle (the conv kernel folds
-batch into its row axis precisely so B=2..8 flushes cost barely more than
-B=1).
+The production problems are jit's static shapes — every distinct
+(batch, spatial) signature compiles a fresh executable — small-batch waste
+(B=1 requests leave the MXU grid mostly idle), and host/device
+serialization (a blocking ``device_get`` idles the device while the host
+unpacks results and packs the next batch).
 
-Bucket policy:
-  * **Shape buckets.** Requests are grouped by their exact input shape
-    (e.g. KWS frame count x n_mfcc, or image H x W x C). The serving
-    frontend is expected to resample inputs to a small shape ladder, so
-    the number of groups stays bounded; an unseen shape still serves — it
-    just compiles its own bucket on first flush.
+Shape policy:
+  * **Ladder frontend.** With a ``serve.shape_ladder.ShapeLadder``, every
+    request is crop/pad-normalized onto a configured rung before
+    bucketing, so the jit-signature count is bounded by
+    ``len(ladder.shapes) * (log2(max_batch) + 1)`` per payload dtype
+    (buckets key on dtype too: int8 code traffic and float traffic on
+    the same rung compile separately), regardless of traffic shapes.
+    Normalization commutes with the learned quantizer (code 0 == 0.0), so
+    it is equally valid on int8 codes — the integer path stays integer.
+    A payload matching no rung still serves, raw, under its own bucket
+    (counted in ``stats["ladder_misses"]``).
+  * **Shape buckets.** Requests group by the exact (served) input shape
+    and dtype; an unseen shape compiles its own bucket on first flush.
   * **Batch buckets.** A flush pads the batch dimension with zero rows up
     to the smallest power of two >= the pending count (capped at
     ``max_batch``), so each shape compiles at most log2(max_batch)+1
-    executables — fixed jit signatures. Pad-row outputs are discarded.
+    executables. Pad-row outputs are discarded.
   * **Donation.** The padded input buffer is donated to the jitted step on
-    accelerator backends, so the input plane never holds two live copies
-    on-device (donation is skipped on CPU, where jax cannot honor it and
-    only warns).
-  * **Flush policy.** A shape bucket flushes whenever it can fill
-    ``max_batch``; a partial bucket flushes after waiting
-    ``max_wait_ticks`` scheduler ticks (the latency bound). ``drain()``
-    flushes everything immediately.
+    accelerator backends (skipped on CPU, where jax cannot honor it).
+
+Scheduling model — a ``tick()`` is one host scheduling quantum:
+  * **Candidates & priority.** A bucket is a flush candidate when it can
+    fill ``max_batch`` or has waited more than ``max_wait_ticks`` ticks.
+    Candidates rank by ``(age, fill_ratio)`` descending across buckets —
+    a starved odd-shape bucket outranks a perpetually-full hot one once
+    its age pulls ahead, so no bucket sits behind dict order forever.
+  * **Sync mode** (``dispatch_ahead=False``): ``_flush`` dispatches the
+    jitted step and blocks on ``device_get``. The blocking fetch consumes
+    the host quantum, so a tick performs at most ONE flush; remaining
+    candidates age into the next tick.
+  * **Dispatch-ahead** (``dispatch_ahead=True``): ``_flush`` dispatches
+    and parks the un-fetched device result on an ``InflightFlush``; the
+    host keeps packing. A tick first resolves every in-flight result
+    dispatched on an earlier tick (the device ran during the inter-tick
+    interval; ``device_get`` on those is a fetch, not a stall), then
+    dispatches up to the free slots of the bounded in-flight window
+    (``max_inflight``). When the window is full, further candidates are
+    back-pressured into later ticks (``stats["window_waits"]`` counts the
+    TICKS that ended with candidates still waiting, not the candidates —
+    a ticks-under-pressure metric). Requests
+    complete at *resolve* time, one tick after dispatch — the pipeline's
+    latency cost for keeping the device fed.
+  * ``drain()`` flushes everything and resolves every in-flight result
+    immediately (shutdown / end of load).
+
+Observability (``stats``): counters (``flushes``, ``served``,
+``padded_rows``, ``ladder_hits``, ``ladder_normalized``,
+``ladder_misses``, ``window_waits``, ``inflight_peak``) plus per-bucket
+``wait_ticks`` percentiles — ``{bucket: {n, p50, p99, max}}`` where wait
+is submit-to-dispatch in ticks. Dead buckets (emptied queues) are
+garbage-collected after every tick/drain so bucket state stays bounded
+under high shape cardinality; wait histograms are kept (bounded per
+bucket, capped bucket count) so end-of-run stats survive the GC.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from .shape_ladder import ShapeLadder
 
 
 @dataclasses.dataclass
@@ -42,6 +80,19 @@ class CNNRequest:
     x: np.ndarray                    # one sample, no batch dim
     out: Optional[np.ndarray] = None
     done: bool = False
+    # set by the batcher:
+    x_served: Optional[np.ndarray] = None  # ladder-normalized payload
+    submit_tick: int = -1
+    wait_ticks: int = -1                   # submit -> dispatch, in ticks
+
+
+@dataclasses.dataclass
+class InflightFlush:
+    """A dispatched-but-unfetched flush parked on the in-flight window."""
+    key: Tuple
+    reqs: List[CNNRequest]
+    dev_out: object                  # un-fetched device result
+    dispatch_tick: int
 
 
 def batch_bucket(n: int, max_batch: int) -> int:
@@ -52,93 +103,246 @@ def batch_bucket(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
+_WAIT_HIST_LEN = 4096    # wait samples kept per bucket
+_WAIT_HIST_BUCKETS = 128  # distinct buckets tracked; overflow aggregates
+
+
 class CNNBatcher:
     """Single-host reference implementation (CPU-testable).
 
     ``apply_fn`` maps a batched input array to batched outputs (e.g. the
     closure from ``models.kws.int_serve_fn`` / ``models.darknet
-    .int_serve_fn``); it is jitted once per shape bucket with the input
-    buffer donated, and the pow-2 batch padding keeps the signature count
-    per shape at log2(max_batch)+1.
+    .int_serve_fn``); it is jitted once with the input buffer donated
+    off-CPU. ``step_fn`` lets callers share one pre-jitted step across
+    batcher instances (the fuzz harness does, to share the compile cache);
+    it must be jit-compatible with ``apply_fn``'s semantics.
     """
 
     def __init__(self, apply_fn: Callable, *, max_batch: int = 8,
-                 max_wait_ticks: int = 2):
-        assert max_batch >= 1
+                 max_wait_ticks: int = 2,
+                 ladder: Optional[ShapeLadder] = None,
+                 dispatch_ahead: bool = False, max_inflight: int = 2,
+                 step_fn: Optional[Callable] = None):
+        assert max_batch >= 1 and max_inflight >= 1
         self.apply_fn = apply_fn
         self.max_batch = max_batch
         self.max_wait_ticks = max_wait_ticks
+        self.ladder = ladder
+        self.dispatch_ahead = dispatch_ahead
+        self.max_inflight = max_inflight
         self._queues: Dict[Tuple, List[CNNRequest]] = {}
         self._age: Dict[Tuple, int] = {}
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._step = jax.jit(apply_fn, donate_argnums=donate)
+        self._inflight: Deque[InflightFlush] = deque()
+        self._tick_no = 0
+        if step_fn is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            step_fn = jax.jit(apply_fn, donate_argnums=donate)
+        self._step = step_fn
         self._signatures: set = set()
-        self.stats = {"flushes": 0, "served": 0, "padded_rows": 0}
+        self._wait_hist: Dict[str, Deque[int]] = {}
+        self._wait_stats_cache: Optional[Dict] = None
+        self._counters = {
+            "flushes": 0, "served": 0, "padded_rows": 0,
+            "ladder_hits": 0, "ladder_normalized": 0, "ladder_misses": 0,
+            "window_waits": 0, "inflight_peak": 0,
+        }
 
     # -- request intake -----------------------------------------------------
 
     def submit(self, reqs: List[CNNRequest]):
-        for r in reqs:
+        prepared, seen = [], set()  # validate + normalize the WHOLE list
+        for r in reqs:  # before any mutation: a mid-list failure
+            # (resubmission, duplicate, malformed payload) must never
+            # partially enqueue the call
+            if id(r) in seen or r.x_served is not None or r.done:
+                raise ValueError(f"request {r.rid} was already submitted")
+            seen.add(id(r))
             x = np.asarray(r.x)
+            xn = self.ladder.normalize(x) if self.ladder is not None else x
+            prepared.append((r, x, xn))
+        for r, x, xn in prepared:
+            if self.ladder is not None:
+                if xn is None:
+                    self._counters["ladder_misses"] += 1
+                else:
+                    self._counters["ladder_hits"] += 1
+                    if xn.shape != x.shape:
+                        self._counters["ladder_normalized"] += 1
+                    x = xn
+            r.x_served = x
+            r.submit_tick = self._tick_no
             key = (x.shape, x.dtype.str)
             self._queues.setdefault(key, []).append(r)
             self._age.setdefault(key, 0)
 
     def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
         return sum(len(q) for q in self._queues.values())
+
+    @property
+    def in_flight(self) -> int:
+        """Requests dispatched but not yet resolved (dispatch-ahead only)."""
+        return sum(len(f.reqs) for f in self._inflight)
+
+    def outstanding(self) -> int:
+        return self.pending() + self.in_flight
 
     # -- flushing -----------------------------------------------------------
 
-    def _flush(self, key: Tuple, reqs: List[CNNRequest]):
+    def _flush(self, key: Tuple, reqs: List[CNNRequest]) -> int:
+        """Dispatch one padded batch. Returns #requests COMPLETED now
+        (sync: all of them; dispatch-ahead: 0, they resolve later)."""
         shape, dtype = key
         slots = batch_bucket(len(reqs), self.max_batch)
         x = np.zeros((slots,) + shape, dtype=np.dtype(dtype))
         for i, r in enumerate(reqs):
-            x[i] = r.x
+            x[i] = r.x_served
+            r.wait_ticks = self._tick_no - r.submit_tick
+        self._record_waits(key, reqs)
         self._signatures.add((key, slots))
-        y = np.asarray(jax.device_get(self._step(x)))
+        self._counters["flushes"] += 1
+        self._counters["padded_rows"] += slots - len(reqs)
+        self._age[key] = 0  # every flush restarts the bucket's wait clock
+        dev = self._step(x)
+        if self.dispatch_ahead:
+            self._inflight.append(
+                InflightFlush(key, reqs, dev, self._tick_no))
+            self._counters["inflight_peak"] = max(
+                self._counters["inflight_peak"], len(self._inflight))
+            return 0
+        return self._finish(reqs, dev)
+
+    def _finish(self, reqs: List[CNNRequest], dev) -> int:
+        y = np.asarray(jax.device_get(dev))
         for i, r in enumerate(reqs):
+            if r.done:
+                raise RuntimeError(f"request {r.rid} double-served")
             r.out = y[i]
             r.done = True
-        self.stats["flushes"] += 1
-        self.stats["served"] += len(reqs)
-        self.stats["padded_rows"] += slots - len(reqs)
-        self._age[key] = 0  # every flush restarts the bucket's wait clock
+        self._counters["served"] += len(reqs)
+        return len(reqs)
+
+    def _resolve_older_than(self, tick: int) -> int:
+        """Fetch in-flight results dispatched before ``tick`` (the device
+        had the inter-tick interval to run them)."""
+        n = 0
+        while self._inflight and self._inflight[0].dispatch_tick < tick:
+            f = self._inflight.popleft()
+            n += self._finish(f.reqs, f.dev_out)
+        return n
+
+    def _candidate(self) -> Optional[Tuple]:
+        """Highest-priority flush candidate by (age, fill-ratio), or None."""
+        best, best_rank = None, None
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            fill = len(q) / self.max_batch
+            if fill < 1.0 and self._age[key] <= self.max_wait_ticks:
+                continue
+            rank = (self._age[key], fill)
+            if best is None or rank > best_rank:
+                best, best_rank = key, rank
+        return best
+
+    def _gc_buckets(self):
+        """Drop empty bucket state so high shape cardinality stays bounded."""
+        for key in [k for k, q in self._queues.items() if not q]:
+            del self._queues[key]
+            self._age.pop(key, None)
 
     def tick(self) -> int:
-        """One scheduler tick: flush full buckets, and partial buckets that
-        have exceeded the latency bound. Returns #requests served."""
+        """One host scheduling quantum. Returns #requests completed.
+
+        Resolve earlier-tick in-flight results, age the buckets, then
+        flush the ranked candidates within this tick's budget: one
+        blocking flush (sync) or the in-flight window's free slots
+        (dispatch-ahead)."""
         served = 0
-        for key in list(self._queues):
-            q = self._queues[key]
-            while len(q) >= self.max_batch:
-                batch, self._queues[key] = q[:self.max_batch], q[self.max_batch:]
-                q = self._queues[key]
-                self._flush(key, batch)
-                served += len(batch)
+        if self.dispatch_ahead:
+            served += self._resolve_older_than(self._tick_no)
+            budget = self.max_inflight - len(self._inflight)
+        else:
+            budget = 1
+        for key, q in self._queues.items():
             if q:
                 self._age[key] += 1
-                if self._age[key] > self.max_wait_ticks:
-                    self._queues[key] = []
-                    self._flush(key, q)
-                    served += len(q)
+        while budget > 0:
+            key = self._candidate()
+            if key is None:
+                break
+            q = self._queues[key]
+            take = min(len(q), self.max_batch)
+            self._queues[key] = q[take:]
+            served += self._flush(key, q[:take])
+            budget -= 1
+        if self.dispatch_ahead and self._candidate() is not None:
+            # a tick that ended with candidates still back-pressured
+            # behind the full window (ticks-under-pressure, not a
+            # per-candidate count)
+            self._counters["window_waits"] += 1
+        self._gc_buckets()
+        self._tick_no += 1
         return served
 
     def drain(self) -> int:
-        """Flush every pending request now (shutdown / end of load)."""
+        """Flush every pending request and resolve every in-flight result
+        now (shutdown / end of load). Returns #requests completed."""
         served = 0
         for key in list(self._queues):
             q, self._queues[key] = self._queues[key], []
             while q:
                 batch, q = q[:self.max_batch], q[self.max_batch:]
-                self._flush(key, batch)
-                served += len(batch)
+                if self.dispatch_ahead and \
+                        len(self._inflight) >= self.max_inflight:
+                    f = self._inflight.popleft()  # window back-pressure
+                    served += self._finish(f.reqs, f.dev_out)
+                served += self._flush(key, batch)
+        while self._inflight:
+            f = self._inflight.popleft()
+            served += self._finish(f.reqs, f.dev_out)
+        self._gc_buckets()
         return served
 
     @property
     def n_signatures(self) -> int:
         """Distinct (shape, slots) jit signatures compiled so far."""
         return len(self._signatures)
+
+    # -- observability ------------------------------------------------------
+
+    def _record_waits(self, key: Tuple, reqs: List[CNNRequest]):
+        label = f"{key[0]}/{np.dtype(key[1]).name}"
+        if label not in self._wait_hist and \
+                len(self._wait_hist) >= _WAIT_HIST_BUCKETS:
+            label = "<overflow>"
+        hist = self._wait_hist.setdefault(label, deque(maxlen=_WAIT_HIST_LEN))
+        hist.extend(r.wait_ticks for r in reqs)
+        self._wait_stats_cache = None
+
+    def wait_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-bucket submit-to-dispatch wait percentiles, in ticks.
+
+        Cached between flushes so polling ``stats`` for a counter never
+        pays a percentile pass over the histograms."""
+        if self._wait_stats_cache is None:
+            out = {}
+            for label, hist in self._wait_hist.items():
+                a = np.asarray(hist)
+                out[label] = {
+                    "n": int(a.size),
+                    "p50": float(np.percentile(a, 50)),
+                    "p99": float(np.percentile(a, 99)),
+                    "max": int(a.max()),
+                }
+            self._wait_stats_cache = out
+        return self._wait_stats_cache
+
+    @property
+    def stats(self) -> Dict:
+        d = dict(self._counters)
+        d["wait_ticks"] = self.wait_stats()
+        return d
 
     # -- convenience --------------------------------------------------------
 
@@ -147,7 +351,7 @@ class CNNBatcher:
         """Serve a request list to completion; returns rid -> output."""
         self.submit(reqs)
         for _ in range(max_ticks):
-            if self.pending() == 0:
+            if self.pending() == 0 and not self._inflight:
                 break
             self.tick()
         self.drain()

@@ -1,0 +1,20 @@
+"""Shared test helpers (imported by test modules via `from conftest
+import ...` — pytest puts this directory on sys.path)."""
+import jax
+import jax.numpy as jnp
+
+
+def trained_int_params(module, cfg, names, qcfg, *, s_out=0.1, seed=0):
+    """Init-and-fold integer deployment params with the FQ hand-off
+    contract (s_in[i+1] == s_out[i]) enforced — a trained-checkpoint
+    stand-in shared by the serving/ladder parity tests.
+
+    Returns (fq_params, state, int_params).
+    """
+    params, state = module.init(jax.random.key(seed), cfg)
+    params = module.to_fq(params, state, cfg)
+    for n in names:
+        params[n]["s_out"] = jnp.float32(s_out)
+    for a, b in zip(names, names[1:]):
+        params[b]["s_in"] = params[a]["s_out"]
+    return params, state, module.convert_int(params, state, qcfg, cfg)

@@ -1,0 +1,110 @@
+"""Autotune table round-trip (ISSUE 3): loader backend gating and
+corruption tolerance, and the sweep's --dry-run persist pipeline."""
+import json
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.kernels import fq_conv
+
+
+def _write(tmp_path, doc, name="table.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def _doc(backend, entries=None, fmt=1):
+    return {"format": fmt, "backend": backend,
+            "entries": entries if entries is not None else
+            [{"kh": 3, "kw": 3, "stride": 1, "bho": 16, "bco": 64,
+              "bc": 8}]}
+
+
+def test_loader_ignores_wrong_backend_family(tmp_path):
+    p = _write(tmp_path, _doc("definitely-not-" + jax.default_backend()))
+    table = fq_conv.load_autotune_table(p)
+    assert table == fq_conv._BUILTIN_TABLE
+
+
+def test_loader_ignores_wrong_format_version(tmp_path):
+    p = _write(tmp_path, _doc(jax.default_backend(), fmt=2))
+    assert fq_conv.load_autotune_table(p) == fq_conv._BUILTIN_TABLE
+
+
+def test_loader_tolerates_missing_and_corrupt_files(tmp_path):
+    assert fq_conv.load_autotune_table(
+        str(tmp_path / "nope.json")) == fq_conv._BUILTIN_TABLE
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json at all")
+    assert fq_conv.load_autotune_table(str(corrupt)) == \
+        fq_conv._BUILTIN_TABLE
+    # valid JSON of the wrong shape must not crash either
+    assert fq_conv.load_autotune_table(
+        _write(tmp_path, [1, 2, 3], "list.json")) == fq_conv._BUILTIN_TABLE
+
+
+def test_loader_applies_matching_backend_and_skips_absent_knobs(tmp_path):
+    entries = [{"kh": 3, "kw": 3, "stride": 1, "bho": 16, "bco": 64,
+                "bc": 8},
+               {"kh": 1, "kw": 1, "stride": 1, "bco": 32}]  # bho clipped
+    p = _write(tmp_path, _doc(jax.default_backend(), entries))
+    table = fq_conv.load_autotune_table(p)
+    assert table[(3, 3, 1)] == {"bho": 16, "bco": 64, "bc": 8}
+    assert table[(1, 1, 1)] == {"bco": 32}  # absent knobs stay unset
+    assert table[(3, 3, 2)] == fq_conv._BUILTIN_TABLE[(3, 3, 2)]
+
+
+@pytest.fixture()
+def autotune_mod():
+    root = str(Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import autotune_conv
+    return autotune_conv
+
+
+def test_dry_run_writes_schema_valid_table(tmp_path, autotune_mod):
+    """`autotune_conv --dry-run` must produce a table the loader can
+    round-trip: schema-valid, backend-stamped, winners applied."""
+    table_p = tmp_path / "table.json"
+    record_p = tmp_path / "record.json"
+    rc = autotune_mod.main(["--dry-run", "--table", str(table_p),
+                            "--record", str(record_p)])
+    assert rc == 0
+    doc = json.loads(table_p.read_text())
+    assert doc["format"] == 1
+    assert doc["backend"] == jax.default_backend()
+    assert doc["entries"], "dry run produced no winners"
+    for e in doc["entries"]:
+        assert {"kh", "kw", "stride"} <= set(e)
+        assert all(isinstance(e[k], int) for k in ("kh", "kw", "stride"))
+        knobs = {k: e[k] for k in ("bho", "bco", "bc") if k in e}
+        assert knobs, "winner carries no block knobs"
+        assert all(isinstance(v, int) for v in knobs.values())
+    # round-trip: the loader applies these winners on this backend
+    table = fq_conv.load_autotune_table(str(table_p))
+    e = doc["entries"][0]
+    key = (e["kh"], e["kw"], e["stride"])
+    assert table[key] == {k: e[k] for k in ("bho", "bco", "bc") if k in e}
+    # the full sweep record is parseable and covers every candidate
+    rec = json.loads(record_p.read_text())
+    assert rec["rows"] and rec["winners"] == doc["entries"]
+
+
+def test_dry_run_refuses_checked_in_artifact_paths(tmp_path, autotune_mod):
+    with pytest.raises(SystemExit):  # default --record is checked in
+        autotune_mod.main(["--dry-run", "--table",
+                           str(tmp_path / "t.json")])
+    with pytest.raises(SystemExit):  # default --table is checked in
+        autotune_mod.main(["--dry-run", "--record",
+                           str(tmp_path / "r.json")])
+    with pytest.raises(SystemExit):  # alternate spellings don't bypass
+        autotune_mod.main(["--dry-run", "--table", str(tmp_path / "t.json"),
+                           "--record", "./BENCH_autotune.json"])
+    # --no-persist IS the remedy the error message offers for the table
+    rc = autotune_mod.main(["--dry-run", "--no-persist", "--record",
+                            str(tmp_path / "r2.json")])
+    assert rc == 0 and (tmp_path / "r2.json").exists()

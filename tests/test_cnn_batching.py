@@ -95,18 +95,13 @@ def test_drain_flushes_everything_now():
 def test_kws_int_apply_served_matches_direct():
     """End-to-end: the batcher over kws.int_serve_fn reproduces unbatched
     int_apply bit-for-bit (pad rows don't leak into real outputs)."""
+    from conftest import trained_int_params
     from repro.core.quant import QuantConfig
     from repro.models import kws
     cfg = kws.KWSConfig.reduced()
     qcfg = QuantConfig(2, 4, 4, fq=True)
-    params, state = kws.init(jax.random.key(0), cfg)
-    params = kws.to_fq(params, state, cfg)
-    names = [f"conv{i}" for i in range(len(cfg.dilations))]
-    for n in names:
-        params[n]["s_out"] = jnp.float32(0.1)
-    for a, b2 in zip(names, names[1:]):
-        params[b2]["s_in"] = params[a]["s_out"]
-    ip = kws.convert_int(params, state, qcfg, cfg)
+    _, _, ip = trained_int_params(
+        kws, cfg, [f"conv{i}" for i in range(len(cfg.dilations))], qcfg)
     fn = kws.int_serve_fn(ip, qcfg, cfg)
 
     rng = np.random.default_rng(7)
@@ -116,6 +111,152 @@ def test_kws_int_apply_served_matches_direct():
     direct = np.asarray(kws.int_apply(ip, jnp.asarray(xs), qcfg, cfg))
     for i in range(3):
         np.testing.assert_allclose(out[i], direct[i], rtol=0, atol=1e-5)
+
+
+def test_bucket_state_garbage_collected():
+    """Regression (ISSUE 3): empty _queues/_age entries must not persist
+    after drain — high shape cardinality would grow bucket state forever."""
+    rng = np.random.default_rng(6)
+    b = CNNBatcher(_mark_fn, max_batch=4, max_wait_ticks=0)
+    b.run(_reqs([(n, 2) for n in range(2, 42)], rng))  # 40 distinct shapes
+    assert b._queues == {} and b._age == {}
+    assert b.stats["served"] == 40
+    # ...and buckets emptied by tick() are collected too, not just drain()
+    b.submit(_reqs([(3, 3)], rng))
+    b.tick()
+    assert b._queues == {} and b._age == {}
+
+
+def test_sync_tick_flushes_one_bucket_per_quantum():
+    """Sync mode: the blocking device_get consumes the host quantum, so a
+    tick performs at most one flush; the rest age into later ticks."""
+    rng = np.random.default_rng(7)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=0)
+    b.submit(_reqs([(2, 2)] * 2 + [(3, 3)] * 2 + [(4, 4)] * 2, rng))
+    assert b.tick() == 2 and b.stats["flushes"] == 1
+    assert b.tick() == 2 and b.tick() == 2
+    assert b.pending() == 0
+
+
+def test_priority_age_beats_fill():
+    """A starved odd-shape bucket must outrank a perpetually-full hot
+    bucket once its age pulls ahead (the (age, fill) ranking)."""
+    rng = np.random.default_rng(8)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=5)
+    odd = _reqs([(3, 3)], rng)
+    b.submit(odd)
+    done_at = None
+    for t in range(12):  # hot bucket refills every tick, always full
+        b.submit([CNNRequest(rid=100 + t * 2 + i,
+                             x=rng.standard_normal((2, 2)).astype(np.float32))
+                  for i in range(2)])
+        b.tick()
+        if odd[0].done and done_at is None:
+            done_at = t
+    assert done_at is not None and done_at <= 8, done_at
+    assert odd[0].wait_ticks <= 8
+
+
+def test_dispatch_ahead_resolves_next_tick():
+    rng = np.random.default_rng(9)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=0,
+                   dispatch_ahead=True, max_inflight=2)
+    reqs = _reqs([(2, 2)] * 2, rng)
+    b.submit(reqs)
+    assert b.tick() == 0            # dispatched, parked in flight
+    assert b.in_flight == 2 and not reqs[0].done
+    assert b.tick() == 2            # resolved one quantum later
+    assert all(r.done for r in reqs)
+    np.testing.assert_allclose(
+        reqs[0].out, np.asarray(_mark_fn(jnp.asarray(reqs[0].x)[None]))[0],
+        rtol=1e-6)
+
+
+def test_dispatch_ahead_window_backpressure():
+    """With a 1-slot in-flight window and 3 hungry buckets, dispatches are
+    back-pressured into later ticks and counted."""
+    rng = np.random.default_rng(10)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=0,
+                   dispatch_ahead=True, max_inflight=1)
+    b.submit(_reqs([(2, 2)] * 2 + [(3, 3)] * 2 + [(4, 4)] * 2, rng))
+    b.tick()
+    assert b.stats["flushes"] == 1 and b.stats["window_waits"] == 1
+    assert b.stats["inflight_peak"] == 1
+    for _ in range(6):
+        b.tick()
+    assert b.stats["served"] == 6 and b.outstanding() == 0
+
+
+def test_dispatch_ahead_fewer_ticks_than_sync():
+    """The acceptance property on a toy trace: under multi-bucket
+    contention, dispatch-ahead serves the same trace in strictly fewer
+    scheduler quanta than sync."""
+    def replay(dispatch_ahead):
+        rng = np.random.default_rng(11)
+        b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=1,
+                       dispatch_ahead=dispatch_ahead, max_inflight=4)
+        rid, ticks = 0, 0
+        for _ in range(3):  # 3 arrival ticks x 3 buckets x full batch
+            rs = []
+            for shape in ((2, 2), (3, 3), (4, 4)):
+                for _ in range(2):
+                    rs.append(CNNRequest(
+                        rid=rid,
+                        x=rng.standard_normal(shape).astype(np.float32)))
+                    rid += 1
+            b.submit(rs)
+            b.tick()
+            ticks += 1
+        while b.outstanding() and ticks < 100:
+            b.tick()
+            ticks += 1
+        assert b.outstanding() == 0 and b.stats["served"] == 18
+        return ticks
+
+    assert replay(True) < replay(False)
+
+
+def test_drain_resolves_inflight():
+    rng = np.random.default_rng(12)
+    b = CNNBatcher(_mark_fn, max_batch=8, max_wait_ticks=50,
+                   dispatch_ahead=True, max_inflight=2)
+    reqs = _reqs([(3, 3)] * 5 + [(2, 2)] * 3, rng)
+    b.submit(reqs)
+    assert b.drain() == 8
+    assert all(r.done for r in reqs) and b.in_flight == 0
+    assert b._queues == {} and b._age == {}
+
+
+def test_wait_tick_stats_exposed():
+    rng = np.random.default_rng(13)
+    b = CNNBatcher(_mark_fn, max_batch=8, max_wait_ticks=2)
+    b.submit(_reqs([(3, 3)] * 2, rng))
+    for _ in range(3):
+        b.tick()  # flushes on the 3rd tick -> wait 2
+    ws = b.stats["wait_ticks"]
+    (label, st), = ws.items()
+    assert "(3, 3)" in label and st["n"] == 2
+    assert st["p50"] == 2.0 and st["p99"] == 2.0 and st["max"] == 2
+
+
+def test_ladder_integration_normalizes_and_counts():
+    from repro.serve.shape_ladder import LadderSpec, ShapeLadder
+    rng = np.random.default_rng(14)
+    lad = ShapeLadder(LadderSpec("frames", (6,), 3))
+    b = CNNBatcher(_mark_fn, max_batch=4, max_wait_ticks=0, ladder=lad)
+    reqs = _reqs([(4, 3), (6, 3), (9, 3), (5, 7)], rng)  # last: miss
+    out = b.run(reqs)
+    assert len(out) == 4
+    st = b.stats
+    assert st["ladder_hits"] == 3 and st["ladder_misses"] == 1
+    assert st["ladder_normalized"] == 2  # (4,3) padded, (9,3) cropped
+    # hits share ONE shape bucket; the miss keeps its own
+    assert {k[0] for k in b._signatures} == {((6, 3), "<f4"), ((5, 7), "<f4")}
+    for r in reqs:  # outputs are for the SERVED (normalized) payload
+        np.testing.assert_allclose(
+            out[r.rid],
+            np.asarray(_mark_fn(jnp.asarray(r.x_served)[None]))[0],
+            rtol=1e-6)
 
 
 def test_continuous_batcher_queue_initialized():

@@ -1,0 +1,48 @@
+"""Trace-replay benchmark acceptance (ISSUE 3): `benchmarks/run.py --only
+serve_mixed` records sync vs dispatch-ahead rows to BENCH_serve_cnn.json,
+dispatch-ahead takes strictly fewer ticks, and the jit-signature count
+respects the ladder bound. Marked slow: it replays the real integer
+models; `make ci` excludes it, the tier-1 suite runs it."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_serve_mixed_benchmark_acceptance(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    # run in a scratch cwd so the artifact never clobbers the checked-in one
+    (tmp_path / "src").symlink_to(ROOT / "src")
+    (tmp_path / "benchmarks").symlink_to(ROOT / "benchmarks")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "serve_mixed"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    doc = json.loads((tmp_path / "BENCH_serve_cnn.json").read_text())
+    mt = doc["mixed_trace"]
+    assert mt["dispatch_ahead_strictly_fewer_ticks"] is True
+    rows = mt["rows"]
+    by_mode = {}
+    for r in rows:
+        by_mode.setdefault(r["trace"], {})[r["mode"]] = r
+    assert set(by_mode) == {"kws", "darknet"}
+    for trace, modes in by_mode.items():
+        assert set(modes) == {"sync", "dispatch_ahead"}, trace
+        sync, ahead = modes["sync"], modes["dispatch_ahead"]
+        # the tentpole acceptance: strictly fewer scheduler quanta
+        assert ahead["total_ticks"] < sync["total_ticks"], trace
+        for r in (sync, ahead):
+            assert r["modes_bit_identical"] is True
+            # signature bound: ladder_shapes x (log2(max_batch)+1)
+            assert r["signature_bound_ok"] is True, trace
+            assert r["jit_signatures"] <= r["jit_signature_bound"]
+            assert r["ladder_misses"] == 0  # trace stays on the ladder
+            assert r["n_req"] > 0 and r["wait_p99"] >= r["wait_p50"]

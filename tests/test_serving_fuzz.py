@@ -1,0 +1,185 @@
+"""Fuzz/parity sweep for the CNN batcher (ISSUE 3, foregrounded satellite).
+
+Seeded random arrival schedules — mixed shapes, dtypes, burst sizes,
+interleaved submit/tick/drain — must serve every request exactly once,
+bit-exact vs calling ``apply_fn`` per request unbatched, in BOTH flush
+modes (sync and dispatch-ahead), with and without a shape ladder.
+
+The toy model rounds inputs onto an integer lattice and reduces in int32,
+so batched and unbatched evaluations are bit-identical by construction and
+every comparison is exact equality (no tolerance hiding a pad-row leak).
+One module-level jitted step is shared across every batcher instance so
+the ~30 (shape, slots) signatures compile once for the whole sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.cnn_batching import CNNBatcher, CNNRequest
+from repro.serve.shape_ladder import LadderSpec, ShapeLadder
+
+
+def _toy(x):
+    """Batch-position-sensitive, integer-exact per-row model."""
+    xi = jnp.round(x.astype(jnp.float32) * 8.0).astype(jnp.int32)
+    axes = tuple(range(1, x.ndim))
+    return jnp.sum(xi * xi, axis=axes) * 3 + jnp.max(xi, axis=axes)
+
+
+_STEP = jax.jit(_toy)  # shared compile cache across all fuzz batchers
+
+_SHAPES = [(5, 3), (4, 4), (7, 2), (3, 3, 2), (6,)]
+
+# ladder sweep: rank-2 feat-3 frames + rank-3 channel-2 planes are rungs;
+# feat-4 payloads are deliberate ladder misses (served raw)
+_LADDER = ShapeLadder(LadderSpec("frames", (5, 8), 3),
+                      LadderSpec("image", (6,), 2))
+_LADDER_SHAPES = [(3, 3), (5, 3), (7, 3), (9, 3),      # frames hits
+                  (4, 5, 2), (7, 7, 2), (8, 3, 2),     # image hits
+                  (4, 4)]                              # feat-4 miss
+
+
+def _mk_request(rng, rid, shapes):
+    shape = shapes[int(rng.integers(len(shapes)))]
+    if rng.random() < 0.4:
+        x = rng.integers(-8, 8, size=shape).astype(np.int8)
+    else:
+        x = rng.standard_normal(shape).astype(np.float32)
+    return CNNRequest(rid=rid, x=x)
+
+
+def _run_schedule(seed, dispatch_ahead, *, ladder=None, shapes=_SHAPES,
+                  n_ops=14):
+    rng = np.random.default_rng(seed)
+    b = CNNBatcher(
+        _toy, max_batch=int(rng.choice([2, 4, 8])),
+        max_wait_ticks=int(rng.integers(0, 4)),
+        dispatch_ahead=dispatch_ahead,
+        max_inflight=int(rng.integers(1, 5)),
+        ladder=ladder, step_fn=_STEP)
+    reqs = []
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.55:
+            burst = int(rng.integers(1, 5))  # burst size 1..4
+            rs = [_mk_request(rng, len(reqs) + i, shapes)
+                  for i in range(burst)]
+            b.submit(rs)
+            reqs.extend(rs)
+        elif op < 0.9:
+            b.tick()
+        else:
+            b.drain()
+    for guard in range(500):
+        if not b.outstanding():
+            break
+        b.tick()
+    assert not b.outstanding(), f"seed {seed}: requests stuck"
+    b.drain()  # idempotent on empty state
+    return b, reqs
+
+
+def _check_schedule(b, reqs, seed):
+    assert len({r.rid for r in reqs}) == len(reqs)
+    assert b.stats["served"] == len(reqs), seed
+    for r in reqs:
+        assert r.done, (seed, r.rid)
+        want = np.asarray(_toy(jnp.asarray(r.x_served)[None]))[0]
+        assert np.array_equal(np.asarray(r.out), want), (seed, r.rid)
+        assert r.wait_ticks >= 0
+    # dead buckets are garbage-collected once drained
+    assert b._queues == {} and b._age == {}, seed
+    assert not b._inflight
+
+
+@pytest.mark.parametrize("dispatch_ahead", [False, True])
+def test_fuzz_schedules_bit_exact(dispatch_ahead):
+    """>= 100 seeded schedules per flush mode (200+ across the sweep)."""
+    for seed in range(110):
+        b, reqs = _run_schedule(seed, dispatch_ahead)
+        _check_schedule(b, reqs, seed)
+
+
+@pytest.mark.parametrize("dispatch_ahead", [False, True])
+def test_fuzz_schedules_with_ladder(dispatch_ahead):
+    """Laddered schedules: parity is against the NORMALIZED payload
+    (r.x_served), misses serve raw, and the jit-signature count respects
+    the ladder bound plus one bucket family per missed shape."""
+    slots = {2: 2, 4: 3, 8: 4}
+    for seed in range(40):
+        b, reqs = _run_schedule(1000 + seed, dispatch_ahead,
+                                ladder=_LADDER, shapes=_LADDER_SHAPES)
+        _check_schedule(b, reqs, 1000 + seed)
+        st = b.stats
+        assert st["ladder_hits"] + st["ladder_misses"] == len(reqs)
+        rungs = set(_LADDER.shapes)
+        for r in reqs:  # every contract-matching request landed ON a rung
+            if _LADDER.spec_for(np.asarray(r.x).shape) is not None:
+                assert tuple(r.x_served.shape) in rungs, (seed, r.rid)
+            else:  # misses serve raw, untouched
+                assert r.x_served.shape == np.asarray(r.x).shape
+        miss_families = len({(tuple(r.x_served.shape), r.x_served.dtype.str)
+                             for r in reqs
+                             if tuple(r.x_served.shape) not in rungs})
+        bound = (len(_LADDER.shapes) * 2 + miss_families) \
+            * slots[b.max_batch]  # x2: float32 and int8 code payloads
+        assert b.n_signatures <= bound, (seed, b.n_signatures, bound)
+
+
+def test_modes_agree_bit_exact():
+    """The same schedule served in both modes yields identical outputs —
+    dispatch-ahead changes WHEN results land, never what they are."""
+    for seed in (7, 21, 63):
+        _, r_sync = _run_schedule(seed, False)
+        _, r_async = _run_schedule(seed, True)
+        assert len(r_sync) == len(r_async)
+        for a, c in zip(r_sync, r_async):
+            assert np.array_equal(np.asarray(a.out), np.asarray(c.out))
+
+
+def test_double_submit_rejected():
+    b = CNNBatcher(_toy, max_batch=2, step_fn=_STEP)
+    r = CNNRequest(rid=0, x=np.ones((5, 3), np.float32))
+    b.submit([r])
+    with pytest.raises(ValueError):
+        b.submit([r])
+    b.drain()
+    with pytest.raises(ValueError):  # done requests can't be resubmitted
+        b.submit([r])
+    # intake is all-or-nothing: a bad list member must not leave earlier
+    # members of the same call silently enqueued
+    fresh = CNNRequest(rid=1, x=np.ones((5, 3), np.float32))
+    with pytest.raises(ValueError):
+        b.submit([fresh, r])
+    assert b.pending() == 0 and fresh.x_served is None
+    b.submit([fresh])  # a clean retry of the fresh request succeeds
+    assert b.pending() == 1
+    b.drain()
+
+
+def test_submit_rejects_duplicate_in_one_call():
+    """The same request object twice in ONE submit() list must be
+    rejected up front — double-enqueueing would crash the scheduler at
+    flush time with inconsistent stats."""
+    b = CNNBatcher(_toy, max_batch=2, step_fn=_STEP)
+    r = CNNRequest(rid=0, x=np.ones((5, 3), np.float32))
+    r2 = CNNRequest(rid=1, x=np.ones((5, 3), np.float32))
+    with pytest.raises(ValueError):
+        b.submit([r, r2, r])
+    assert b.pending() == 0 and r.x_served is None and r2.x_served is None
+    b.submit([r, r2])
+    assert b.drain() == 2
+
+
+def test_submit_atomic_on_malformed_payload():
+    """A payload that fails np.asarray mid-list must not leave earlier
+    list members enqueued (all-or-nothing intake)."""
+    b = CNNBatcher(_toy, max_batch=2, step_fn=_STEP)
+    good = CNNRequest(rid=0, x=np.ones((5, 3), np.float32))
+    bad = CNNRequest(rid=1, x=[[1.0, 2.0], [3.0]])  # ragged
+    with pytest.raises(ValueError):
+        b.submit([good, bad])
+    assert b.pending() == 0 and good.x_served is None
+    b.submit([good])  # the good request is cleanly retryable
+    assert b.pending() == 1

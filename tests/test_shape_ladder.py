@@ -1,0 +1,178 @@
+"""Shape-ladder frontend: crop/pad geometry, quantizer commutation, and
+ladder-then-int-apply parity vs the float FQ reference (ISSUE 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND,
+                              quantize_to_int)
+from repro.models import frontends
+from repro.serve.shape_ladder import (LadderSpec, ShapeLadder,
+                                      center_crop_pad)
+
+
+# ---------------------------------------------------------------------------
+# center_crop_pad geometry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cur,target", [(7, 10), (10, 7), (9, 9), (1, 8),
+                                        (11, 4), (5, 6)])
+def test_center_crop_pad_1d(cur, target):
+    x = np.arange(cur * 3, dtype=np.float32).reshape(cur, 3)
+    y = center_crop_pad(x, 0, target)
+    assert y.shape == (target, 3)
+    if cur >= target:  # center crop: a contiguous window, centered
+        lo = (cur - target) // 2
+        np.testing.assert_array_equal(y, x[lo:lo + target])
+    else:              # zero pad: original block centered, zeros around
+        lo = (target - cur) // 2
+        np.testing.assert_array_equal(y[lo:lo + cur], x)
+        assert (y[:lo] == 0).all() and (y[lo + cur:] == 0).all()
+
+
+def test_center_crop_pad_is_identity_on_match():
+    x = np.random.default_rng(0).standard_normal((6, 4)).astype(np.float32)
+    assert center_crop_pad(x, 0, 6) is x
+
+
+# ---------------------------------------------------------------------------
+# rung selection + miss semantics
+# ---------------------------------------------------------------------------
+
+
+def test_frames_ladder_rung_selection():
+    lad = ShapeLadder(LadderSpec("frames", (16, 24, 32), 8))
+    assert lad.shapes == ((16, 8), (24, 8), (32, 8))
+    for t, want in [(10, 16), (16, 16), (17, 24), (24, 24), (31, 32),
+                    (40, 32)]:  # oversized crops to the top rung
+        y = lad.normalize(np.ones((t, 8), np.float32))
+        assert y.shape == (want, 8), (t, y.shape)
+
+
+def test_frames_ladder_misses():
+    lad = ShapeLadder(LadderSpec("frames", (16,), 8))
+    assert lad.normalize(np.ones((12, 9), np.float32)) is None  # wrong feat
+    assert lad.normalize(np.ones((12,), np.float32)) is None    # wrong rank
+    assert lad.normalize(np.ones((12, 8, 1), np.float32)) is None
+
+
+@pytest.mark.parametrize("hw,want", [
+    ((8, 8), (12, 12)), ((12, 12), (12, 12)), ((13, 9), (16, 16)),
+    ((15, 17), (20, 20)), ((21, 7), (20, 20)),   # H crops, W pads
+    ((25, 25), (20, 20)),                        # both crop to top rung
+])
+def test_image_ladder_letterbox_selection(hw, want):
+    lad = ShapeLadder(LadderSpec("image", (12, 16, 20), 3))
+    y = lad.normalize(np.ones(hw + (3,), np.float32))
+    assert y.shape == want + (3,)
+
+
+def test_image_ladder_channel_preserving():
+    """Letterbox pads the border with zeros, keeps every channel value, and
+    a channel-count mismatch is a miss (never a conversion)."""
+    lad = ShapeLadder(LadderSpec("image", ((8, 8),), 3))
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((5, 7, 3)).astype(np.float32)  # odd H/W deltas
+    y = lad.normalize(x)
+    assert y.shape == (8, 8, 3)
+    np.testing.assert_array_equal(y[1:6, 0:7], x)  # centered, extra trails
+    assert (y[:1] == 0).all() and (y[6:] == 0).all()
+    assert (y[:, 7:] == 0).all()
+    assert lad.normalize(np.ones((5, 7, 4), np.float32)) is None
+
+
+def test_image_ladder_first_fit_is_by_area():
+    """Non-square rung sets: the cheapest (smallest-area) hosting rung
+    wins, not the lexicographically-first one."""
+    lad = ShapeLadder(LadderSpec("image", ((12, 200), (16, 16)), 3))
+    y = lad.normalize(np.ones((10, 10, 3), np.float32))
+    assert y.shape == (16, 16, 3)  # 256 cells, not 2400 on (12, 200)
+    y = lad.normalize(np.ones((10, 40, 3), np.float32))
+    assert y.shape == (12, 200, 3)  # only the skinny rung fits W=40
+
+
+def test_multi_spec_ladder_routes_by_contract():
+    lad = ShapeLadder(LadderSpec("frames", (16,), 8),
+                      LadderSpec("image", (12,), 3))
+    assert lad.normalize(np.ones((10, 8), np.float32)).shape == (16, 8)
+    assert lad.normalize(np.ones((9, 9, 3), np.float32)).shape == (12, 12, 3)
+    assert len(lad.shapes) == 2
+
+
+# ---------------------------------------------------------------------------
+# quantizer commutation: normalize may run on codes — the integer path
+# stays integer (zero pads to code 0 for both clip bounds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", [RELU_BOUND, WEIGHT_BOUND])
+@pytest.mark.parametrize("shape,spec", [
+    ((11, 8), LadderSpec("frames", (16,), 8)),       # pad
+    ((21, 8), LadderSpec("frames", (16,), 8)),       # crop
+    ((9, 13, 3), LadderSpec("image", (16,), 3)),     # letterbox pad
+    ((19, 10, 3), LadderSpec("image", (16,), 3)),    # crop + pad mix
+])
+def test_normalize_commutes_with_quantizer(b, shape, spec):
+    lad = ShapeLadder(spec)
+    rng = np.random.default_rng(sum(shape))
+    x = rng.standard_normal(shape).astype(np.float32)
+    s = jnp.float32(-0.3)
+    codes_then_norm = lad.normalize(
+        np.asarray(quantize_to_int(jnp.asarray(x), s, bits=4, b=b)))
+    norm_then_codes = np.asarray(
+        quantize_to_int(jnp.asarray(lad.normalize(x)), s, bits=4, b=b))
+    np.testing.assert_array_equal(codes_then_norm, norm_then_codes)
+
+
+# ---------------------------------------------------------------------------
+# ladder -> int_apply equals the float FQ reference on the normalized input
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t_req", [13, 19, 24, 31])
+def test_kws_ladder_then_int_apply_matches_float_fq(t_req):
+    """Normalize an off-ladder clip, run the integer stack on it; the
+    float FQ forward on the SAME normalized input must agree — i.e. the
+    ladder only moves the shape, never the integer-path numerics."""
+    from conftest import trained_int_params
+    from repro.models import kws
+    cfg = kws.KWSConfig.reduced()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    params, state, ip = trained_int_params(
+        kws, cfg, [f"conv{i}" for i in range(len(cfg.dilations))], qcfg)
+    lad = frontends.kws_serving_ladder(cfg, (16, 24))
+    x = np.random.default_rng(t_req).standard_normal(
+        (t_req, cfg.n_mfcc)).astype(np.float32)
+    xn = lad.normalize(x)
+    assert xn.shape[0] in (16, 24)
+    y_int = kws.int_apply(ip, jnp.asarray(xn)[None], qcfg, cfg)
+    y_float, _ = kws.apply(params, state, jnp.asarray(xn)[None], qcfg, cfg,
+                           train=False)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_float),
+                               rtol=0, atol=1e-5)
+
+
+def test_kws_ladder_rejects_rungs_below_receptive_field():
+    from repro.models import kws
+    cfg = kws.KWSConfig.reduced()  # rf = 1 + 2*(1+1+2) = 9
+    with pytest.raises(ValueError):
+        frontends.kws_serving_ladder(cfg, (8, 24))
+
+
+def test_darknet_ladder_rejects_rungs_below_pool_floor():
+    from repro.models import darknet
+    cfg = darknet.DarkNetConfig.reduced()  # two "M" stages -> floor 4
+    with pytest.raises(ValueError):
+        frontends.darknet_serving_ladder(cfg, (2, 16))
+    lad = frontends.darknet_serving_ladder(cfg, (4, 16))
+    assert lad.shapes == ((4, 4, 3), (16, 16, 3))
+
+
+def test_frontend_serving_ladder_from_config():
+    lad = frontends.frontend_serving_ladder(
+        frontends.AUDIO_WHISPER_TINY, (750, 1500))
+    assert lad.shapes == ((750, 80), (1500, 80))
+    assert frontends.frontend_serving_ladder(
+        frontends.FrontendConfig()) is None
