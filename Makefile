@@ -4,6 +4,9 @@
 #   make bench       — all paper-table benchmarks + kernel/conv microbenches
 #   make conv        — fused-conv-vs-im2col benchmark (BENCH_conv.json)
 #   make bench-serve — batched integer-CNN serving bench (BENCH_serve_cnn.json)
+#   make bench-noise — dry-run-sized Table-7 analog-noise sweep over the
+#                      integer stacks (BENCH_noise.json); the full sweep is
+#                      `make PYTHON=python bench` or --only noise via run.py
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make lint        — byte-compile + import sanity (no external deps)
@@ -14,7 +17,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench conv bench-serve bench-mixed autotune lint check ci
+.PHONY: test bench conv bench-serve bench-mixed bench-noise autotune lint \
+	check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -30,6 +34,9 @@ bench-serve:
 
 bench-mixed:
 	$(PYTHON) -m benchmarks.run --only serve_mixed
+
+bench-noise:
+	$(PYTHON) -m benchmarks.noise_sweep --dry-run
 
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv

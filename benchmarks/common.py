@@ -114,6 +114,36 @@ def train_stage_fn(task: BenchTask, data, *, noise: Optional[NoiseConfig]
     return train_stage, accuracy
 
 
+def trained_int_params(module, cfg, names, qcfg, *, s_out=0.2, seed=0):
+    """Init-and-fold integer deployment params with a consistent FQ
+    hand-off contract (s_in[i+1] == s_out[i]) — a stand-in for a trained
+    checkpoint. The single source of truth for this stand-in logic: the
+    serving/noise benchmarks use it directly and tests/conftest.py wraps
+    it. Returns (fq_params, state, int_params)."""
+    params, state = module.init(jax.random.key(seed), cfg)
+    params = module.to_fq(params, state, cfg)
+    for n in names:
+        params[n]["s_out"] = jnp.float32(s_out)
+    for a, b in zip(names, names[1:]):
+        params[b]["s_in"] = params[a]["s_out"]
+    return params, state, module.convert_int(params, state, qcfg, cfg)
+
+
+def reduced_int_models(qcfg):
+    """Reduced KWS + darknet integer stacks for the serving/noise
+    benchmarks: (kws_cfg, kws_ip, dn_cfg, dn_ip)."""
+    from repro.models import darknet, kws
+    kws_cfg = kws.KWSConfig.reduced()
+    _, _, kws_ip = trained_int_params(
+        kws, kws_cfg, [f"conv{i}" for i in range(len(kws_cfg.dilations))],
+        qcfg)
+    dn_cfg = darknet.DarkNetConfig.reduced()
+    dn_names = [f"conv{i}" for i in
+                range(len([l for l in dn_cfg.layers if l != "M"]))]
+    _, _, dn_ip = trained_int_params(darknet, dn_cfg, dn_names, qcfg)
+    return kws_cfg, kws_ip, dn_cfg, dn_ip
+
+
 def timer(fn, *args, reps: int = 3, **kw):
     fn(*args, **kw)
     t0 = time.time()

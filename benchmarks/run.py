@@ -368,34 +368,6 @@ def _pooled_layer_bytes(layers, in_hw, *, batch=1):
     return rows
 
 
-def _trained_int_params(module, cfg, names, qcfg):
-    """Init-and-fold integer deployment params with a consistent FQ
-    hand-off contract (s_in[i+1] == s_out[i]) — a stand-in for a trained
-    checkpoint, shared by the serving benchmarks."""
-    params, state = module.init(jax.random.key(0), cfg)
-    params = module.to_fq(params, state, cfg)
-    for n in names:
-        params[n]["s_out"] = jnp.float32(0.2)
-    for a, b in zip(names, names[1:]):
-        params[b]["s_in"] = params[a]["s_out"]
-    return module.convert_int(params, state, qcfg, cfg)
-
-
-def _reduced_int_models(qcfg):
-    """Reduced KWS + darknet integer stacks for the serving benchmarks:
-    (kws_cfg, kws_ip, dn_cfg, dn_ip)."""
-    from repro.models import darknet, kws
-    kws_cfg = kws.KWSConfig.reduced()
-    kws_ip = _trained_int_params(
-        kws, kws_cfg, [f"conv{i}" for i in range(len(kws_cfg.dilations))],
-        qcfg)
-    dn_cfg = darknet.DarkNetConfig.reduced()
-    dn_names = [f"conv{i}" for i in
-                range(len([l for l in dn_cfg.layers if l != "M"]))]
-    dn_ip = _trained_int_params(darknet, dn_cfg, dn_names, qcfg)
-    return kws_cfg, kws_ip, dn_cfg, dn_ip
-
-
 def bench_serve_cnn():
     """Batched integer-CNN serving (serve/cnn_batching.CNNBatcher):
     throughput vs batch size across shape buckets + analytic HBM
@@ -409,7 +381,7 @@ def bench_serve_cnn():
     print("# Serve — shape-bucketed batched integer CNN inference")
     backend = jax.default_backend()
     qcfg = QuantConfig(2, 4, 4, fq=True)
-    kws_cfg, kws_ip, dn_cfg, dn_ip = _reduced_int_models(qcfg)
+    kws_cfg, kws_ip, dn_cfg, dn_ip = common.reduced_int_models(qcfg)
 
     buckets = [
         ("kws_T24", kws.int_serve_fn(kws_ip, qcfg, kws_cfg),
@@ -546,7 +518,7 @@ def bench_serve_mixed():
     qcfg = QuantConfig(2, 4, 4, fq=True)
     max_batch = 4
     slots_per_shape = int(np.log2(max_batch)) + 1
-    kws_cfg, kws_ip, dn_cfg, dn_ip = _reduced_int_models(qcfg)
+    kws_cfg, kws_ip, dn_cfg, dn_ip = common.reduced_int_models(qcfg)
 
     def kws_sample(rng):
         t = int(rng.integers(10, 37))  # rf is 9; rungs are 16/24/32
@@ -659,6 +631,15 @@ def bench_dryrun_summary():
         print(f"dryrun,dominant_{k},{v},")
 
 
+def bench_noise():
+    """Table 7 on the INTEGER stacks: the §4.4 analog-noise sweep + the
+    chunked-accumulation mitigation, recorded to BENCH_noise.json
+    (ISSUE 4 acceptance). The float-training-path Table 7 stays in
+    ``--only table7``."""
+    from benchmarks import noise_sweep
+    noise_sweep.bench_noise()
+
+
 ALL = {
     "table1": bench_table1_gq_ladder,
     "table2": bench_table2_method_comparison,
@@ -671,6 +652,7 @@ ALL = {
     "conv": bench_conv,
     "serve_cnn": bench_serve_cnn,
     "serve_mixed": bench_serve_mixed,
+    "noise": bench_noise,
     "dryrun": bench_dryrun_summary,
 }
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from .noise import NoiseConfig, derive_seed, perturb_codes
 from .quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND, n_levels,
                     quantize_to_int)
 
@@ -36,6 +37,12 @@ def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
         "n_out": n_levels(qcfg.bits_out),
         "lo": 0 if relu_out else -n_levels(qcfg.bits_out),
         "s_out": p["s_out"],
+        # quantizer ranges for the code-domain noise model (§4.4): weight
+        # codes live in [-n_w, n_w], input activation codes in [0, n_a]
+        # (the integer stacks are quantized-ReLU stacks).
+        "n_w": n_levels(qcfg.bits_w),
+        "n_a": n_levels(qcfg.bits_a if qcfg.bits_a is not None
+                        else qcfg.bits_out),
     }
     if final:
         out["alpha"] = ops.fold_alpha(
@@ -54,6 +61,45 @@ def entry_codes(x, p, qcfg: QuantConfig, *, b_in: float = RELU_BOUND):
     return ops.quantize_to_codes(x, p["s_in"], bits=qcfg.bits_a, b=b_in)
 
 
+def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
+    """Apply the paper's §4.4 noise model at the integer-layer boundary.
+
+    Returns ``(w_codes, a_codes, mac_sigma_acc, mac_seed)``:
+
+      * weight codes perturbed in code units (memory-cell noise, clipped
+        to the weight quantizer range [-n_w, n_w]),
+      * input activation codes perturbed in code units (DAC noise,
+        clipped to [0, n_a] — one draw per layer input, mirroring the
+        float path's per-conv input-quantizer noise),
+      * the ADC noise std folded into ACCUMULATOR units for the kernel
+        epilogue: sigma_mac is a fraction of the OUTPUT quantizer's LSB
+        and requant maps accumulator -> output codes by ``rescale``, so
+        sigma_acc = sigma_mac / rescale,
+      * a uint32 seed split off ``rng`` for the kernel's deterministic
+        noise field.
+
+    With ``noise`` disabled (None or all-zero sigmas) or no ``rng``,
+    returns the operands untouched and ``(None, None)`` — the clean path
+    stays bit-exact and compiles the clean kernel.
+    """
+    if noise is None or not noise.enabled or rng is None:
+        return ip["w_codes"], codes, None, None
+    k_w, k_a, k_mac = jax.random.split(rng, 3)
+    n_w = ip.get("n_w", 127)
+    # Incoming codes are [0, n_a] at the entry layer (bits_a quantizer)
+    # but [0, n_out] codes handed over from the previous layer everywhere
+    # else; the DAC range must cover BOTH, else a bits_a < bits_out config
+    # would have the noise clip destroy valid codes.
+    a_hi = max(ip.get("n_a", 127), ip.get("n_out", 127))
+    w_codes = perturb_codes(ip["w_codes"], k_w, noise.sigma_w,
+                            lo=-n_w, hi=n_w)
+    a_codes = perturb_codes(codes, k_a, noise.sigma_a, lo=0, hi=a_hi)
+    if noise.sigma_mac > 0:
+        return (w_codes, a_codes, noise.sigma_mac / ip["rescale"],
+                derive_seed(k_mac))
+    return w_codes, a_codes, None, None
+
+
 def int_linear(ip, codes):
     return ops.int_matmul(codes, ip["w_codes"], ip["rescale"],
                           epilogue="requant", n_out=ip["n_out"], lo=ip["lo"])
@@ -64,18 +110,28 @@ def int_linear_final(ip, codes):
                           epilogue="dequant")
 
 
-def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1, impl=None):
-    return ops.fq_conv1d_int(codes, ip["w_codes"], ip["rescale"],
+def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1, impl=None,
+               noise: Optional[NoiseConfig] = None, rng=None,
+               mac_chunks: int = 1):
+    w_codes, codes, sig, seed = noisy_operands(ip, codes, noise, rng)
+    return ops.fq_conv1d_int(codes, w_codes, ip["rescale"],
                              ksize=ksize, dilation=dilation,
-                             n_out=ip["n_out"], lo=ip["lo"], impl=impl)
+                             n_out=ip["n_out"], lo=ip["lo"], impl=impl,
+                             noise_sigma_acc=sig, noise_seed=seed,
+                             mac_chunks=mac_chunks)
 
 
 def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0,
-               dilation: int = 1, impl=None):
-    return ops.fq_conv2d_int(codes, ip["w_codes"], ip["rescale"],
+               dilation: int = 1, impl=None,
+               noise: Optional[NoiseConfig] = None, rng=None,
+               mac_chunks: int = 1):
+    w_codes, codes, sig, seed = noisy_operands(ip, codes, noise, rng)
+    return ops.fq_conv2d_int(codes, w_codes, ip["rescale"],
                              ksize=ksize, stride=stride, padding=padding,
                              dilation=dilation,
-                             n_out=ip["n_out"], lo=ip["lo"], impl=impl)
+                             n_out=ip["n_out"], lo=ip["lo"], impl=impl,
+                             noise_sigma_acc=sig, noise_seed=seed,
+                             mac_chunks=mac_chunks)
 
 
 def int_conv1d_final(ip, codes, *, ksize: int, dilation: int = 1, impl=None):
@@ -93,18 +149,24 @@ def int_conv2d_final(ip, codes, *, ksize: int, stride: int = 1,
 
 def int_conv2d_pool(ip, codes, *, ksize: int, stride: int = 1,
                     padding: int = 0, dilation: int = 1, pool: int = 2,
-                    impl=None):
+                    impl=None, noise: Optional[NoiseConfig] = None, rng=None,
+                    mac_chunks: int = 1):
     """Conv + non-overlapping maxpool as ONE integer op (conv+pool pairs).
 
     Behind the kernels/ops dispatch point: on the fused path the maxpool
     runs on the int32 accumulator inside the conv kernel's VMEM epilogue —
     the unpooled activation plane never reaches HBM; the im2col path keeps
     the unfused conv + code-domain pool composition as the parity oracle.
+    ADC noise perturbs the PRE-POOL accumulator on both paths (max
+    commutes with requant, so they stay bit-identical).
     """
-    return ops.fq_conv2d_pool_int(codes, ip["w_codes"], ip["rescale"],
+    w_codes, codes, sig, seed = noisy_operands(ip, codes, noise, rng)
+    return ops.fq_conv2d_pool_int(codes, w_codes, ip["rescale"],
                                   ksize=ksize, stride=stride, padding=padding,
                                   dilation=dilation, pool=pool,
-                                  n_out=ip["n_out"], lo=ip["lo"], impl=impl)
+                                  n_out=ip["n_out"], lo=ip["lo"], impl=impl,
+                                  noise_sigma_acc=sig, noise_seed=seed,
+                                  mac_chunks=mac_chunks)
 
 
 def int_maxpool2d(codes, *, window: int = 2, stride: int = 2):

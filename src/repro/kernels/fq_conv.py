@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .fq_matmul import TPUCompilerParams, apply_epilogue
+from .fq_matmul import TPUCompilerParams, apply_epilogue, noise_tile
 
 # ---------------------------------------------------------------------------
 # Block-size selection
@@ -170,10 +170,18 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
 # ---------------------------------------------------------------------------
 
 
-def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
+def _kernel(scale_ref, x_ref, w_ref, *refs, n_red: int,
             stride: Tuple[int, int], bho: int, wo: int,
             pool: Optional[Tuple[int, int]], epilogue: str, n_out: int,
-            lo: int):
+            lo: int, noise: bool, mac_chunks: int, n_i: int, ho: int,
+            cout: int):
+    if noise:
+        sigma_ref, seed_ref, o_ref, acc_ref = refs
+        # program_id reads hoisted out of the pl.when body (interpret
+        # mode can't lower the primitive inside the cond).
+        p, j = pl.program_id(0), pl.program_id(1)
+    else:
+        o_ref, acc_ref = refs
     r = pl.program_id(2)
 
     @pl.when(r == 0)
@@ -190,13 +198,29 @@ def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
     @pl.when(r == n_red - 1)
     def _epilogue():
         acc = acc_ref[...]
+        if noise:
+            # ADC noise on the PRE-POOL int32 accumulator (paper §4.4),
+            # indexed by the global conv-output coordinate flattened the
+            # same way the im2col path flattens matmul rows: the tile's
+            # (bho*wo, bco) element (s, c) is global row (b*ho + rb*bho
+            # + s//wo)*wo + s%wo = (b*ho + rb*bho)*wo + s, column j*bco
+            # + c, over the TRUE (ho, cout) — independent of tiling — so
+            # fq_matmul's epilogue draws the identical field and the
+            # reference path is bit-for-bit reproducible. Rows/channels
+            # in grid padding draw values that are sliced away.
+            row0 = ((p // n_i) * ho + (p % n_i) * bho) * wo
+            acc = acc.astype(jnp.float32) + noise_tile(
+                acc.shape, row0, j * acc.shape[1], cout,
+                seed_ref[0, 0], sigma_ref[0, 0], mac_chunks)
         if pool is not None:
-            # Code-domain maxpool hoisted onto the int32 accumulator: the
-            # requant epilogue is monotone non-decreasing (scale > 0), so
-            # max commutes with it — pooling here is bit-exact with
-            # int_maxpool2d over requantized codes, but never writes the
-            # unpooled tile to HBM. Strided-slice maxes (the same idiom as
-            # the conv's stride) keep Mosaic on 3-D tensors.
+            # Code-domain maxpool hoisted onto the int32 accumulator (the
+            # noisy f32 accumulator when the noise epilogue ran — both
+            # f32 conversion and the requant epilogue are monotone
+            # non-decreasing, scale > 0, so max commutes either way):
+            # pooling here is bit-exact with int_maxpool2d over
+            # requantized codes, but never writes the unpooled tile to
+            # HBM. Strided-slice maxes (the same idiom as the conv's
+            # stride) keep Mosaic on 3-D tensors.
             ph, pw = pool
             a3 = acc.reshape(bho, wo, acc.shape[-1])
             a3 = a3[:, : (wo // pw) * pw, :]
@@ -215,7 +239,7 @@ def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref, *, n_red: int,
     jax.jit,
     static_argnames=("kh", "kw", "stride", "padding", "dilation", "pool",
                      "epilogue", "n_out", "lo", "bho", "bco", "bc",
-                     "interpret"),
+                     "mac_chunks", "interpret"),
 )
 def fq_conv2d(
     a_codes: jax.Array,   # (B, H, W, Cin) int8
@@ -234,6 +258,9 @@ def fq_conv2d(
     bho: Optional[int] = None,
     bco: Optional[int] = None,
     bc: Optional[int] = None,
+    noise_sigma_acc: Optional[jax.Array] = None,
+    noise_seed: Optional[jax.Array] = None,
+    mac_chunks: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused int8 NHWC conv2d with the requant/dequant epilogue in VMEM.
@@ -241,8 +268,22 @@ def fq_conv2d(
     ``pool=(ph, pw)`` additionally fuses a non-overlapping VALID maxpool
     (window == stride, e.g. (2, 2)) into the epilogue: the pool runs on the
     int32 accumulator before requant, so only the pooled tile reaches HBM.
+
+    ``noise_sigma_acc`` (std in ACCUMULATOR units, the caller folds the
+    paper's sigma_mac through the requant scale) + ``noise_seed`` (uint32)
+    switch on the deterministic ADC-noise epilogue: the pre-pool int32
+    accumulator is perturbed in VMEM before pool/requant, bit-for-bit
+    reproducible by the im2col + fq_matmul path. ``mac_chunks=K`` models
+    the chunked-accumulation mitigation (K per-chunk conversions at 1/K
+    dynamic range -> effective noise std / sqrt(K)). When
+    ``noise_sigma_acc`` is None the compiled program is the unchanged
+    clean kernel.
     """
     assert epilogue in ("requant", "dequant")
+    assert mac_chunks >= 1
+    noise = noise_sigma_acc is not None
+    assert not noise or noise_seed is not None, \
+        "noise_seed is required when noise_sigma_acc is set"
     b, h, w, cin = a_codes.shape
     kcin, cout = w_codes.shape
     assert kcin == kh * kw * cin, (w_codes.shape, (kh, kw, cin))
@@ -302,20 +343,28 @@ def fq_conv2d(
         bho_out, wo_out = bho // pool_h, wo // pool_w
     else:
         bho_out, wo_out = bho, wo
+    scalar_spec = pl.BlockSpec((1, 1), lambda p, j, r: (0, 0))
+    in_specs = [
+        scalar_spec,                                             # scale
+        pl.BlockSpec((1, bhi, bwi, bc), x_index,
+                     indexing_mode=pl.unblocked),                # window
+        pl.BlockSpec((bc, bco), w_index,
+                     indexing_mode=pl.unblocked),                # tap w
+    ]
+    inputs = [scale.reshape(1, 1).astype(jnp.float32), a_codes, w_codes]
+    if noise:
+        in_specs += [scalar_spec, scalar_spec]                   # sigma, seed
+        inputs += [jnp.asarray(noise_sigma_acc, jnp.float32).reshape(1, 1),
+                   jnp.asarray(noise_seed).astype(jnp.uint32).reshape(1, 1)]
     out_dtype = jnp.int8 if epilogue == "requant" else jnp.float32
     out = pl.pallas_call(
         functools.partial(
             _kernel, n_red=n_red, stride=stride, bho=bho, wo=wo, pool=pool,
-            epilogue=epilogue, n_out=n_out, lo=lo,
+            epilogue=epilogue, n_out=n_out, lo=lo, noise=noise,
+            mac_chunks=mac_chunks, n_i=n_i, ho=ho, cout=cout,
         ),
         grid=(b * n_i, n_j, n_red),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda p, j, r: (0, 0)),            # scale
-            pl.BlockSpec((1, bhi, bwi, bc), x_index,
-                         indexing_mode=pl.unblocked),                # window
-            pl.BlockSpec((bc, bco), w_index,
-                         indexing_mode=pl.unblocked),                # tap w
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bho_out, wo_out, bco),
                                lambda p, j, r: (p // n_i, p % n_i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, n_i * bho_out, wo_out, cout_pad),
@@ -325,7 +374,7 @@ def fq_conv2d(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(scale.reshape(1, 1).astype(jnp.float32), a_codes, w_codes)
+    )(*inputs)
     ho_out = ho // pool_h if pool is not None else ho
     return out[:, :ho_out, :, :cout]
 
@@ -340,17 +389,23 @@ def fq_conv1d(
     epilogue: str = "requant",
     n_out: int = 7,
     lo: int = 0,
+    noise_sigma_acc: Optional[jax.Array] = None,
+    noise_seed: Optional[jax.Array] = None,
+    mac_chunks: int = 1,
     interpret: bool = False,
     **block_kw,
 ) -> jax.Array:
     """Fused int8 1-D conv (VALID, dilated — the paper's KWS layers).
 
     A (ksize, 1) conv2d over a width-1 spatial axis: the tap-major weight
-    layout of conv1d is exactly the kw=1 conv2d layout, so this is free.
+    layout of conv1d is exactly the kw=1 conv2d layout, so this is free
+    (the noise field's flattened (b*T_out + t)*cout + co indices also
+    coincide with the 1-D im2col path's).
     """
     y = fq_conv2d(
         a_codes[:, :, None, :], w_codes, scale, kh=ksize, kw=1,
         dilation=(dilation, 1), epilogue=epilogue, n_out=n_out, lo=lo,
-        interpret=interpret, **block_kw,
+        noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+        mac_chunks=mac_chunks, interpret=interpret, **block_kw,
     )
     return y[:, :, 0, :]

@@ -19,11 +19,14 @@ accumulator tile stays resident in VMEM for the whole K reduction.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..core.noise import mac_noise_field
 
 # jax renamed TPUCompilerParams (<=0.4.x) to CompilerParams (>=0.5); resolve
 # whichever exists so neither pin breaks the suite.
@@ -45,8 +48,33 @@ def apply_epilogue(acc, scale, *, epilogue: str, n_out: int, lo: int):
     return acc.astype(jnp.float32) * scale  # dequant
 
 
-def _kernel(scale_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
-            epilogue: str, n_out: int, lo: int):
+def noise_tile(shape, row0, col0, n_cols: int, seed, sigma,
+               mac_chunks: int):
+    """ADC-noise tile for a (rows, cols) accumulator block.
+
+    Indexed by the GLOBAL element position ``(row0 + i) * n_cols +
+    (col0 + j)`` with the TRUE (unpadded) column count, so the field is
+    independent of tiling/padding and the fused conv kernel — whose
+    im2col-flattened output coordinates are exactly these (row, col)
+    pairs — reproduces it bit-for-bit. Padded rows/cols draw values that
+    the caller slices away.
+    """
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return mac_noise_field(rows * n_cols + cols, seed, sigma,
+                           chunks=mac_chunks)
+
+
+def _kernel(scale_ref, a_ref, b_ref, *refs, k_steps: int,
+            epilogue: str, n_out: int, lo: int, noise: bool,
+            mac_chunks: int, n_true: int):
+    if noise:
+        sigma_ref, seed_ref, o_ref, acc_ref = refs
+        # program_id reads hoisted out of the pl.when body (interpret
+        # mode can't lower the primitive inside the cond).
+        i, j = pl.program_id(0), pl.program_id(1)
+    else:
+        o_ref, acc_ref = refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -59,14 +87,23 @@ def _kernel(scale_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
 
     @pl.when(k == k_steps - 1)
     def _epilogue():
+        acc = acc_ref[...]
+        if noise:
+            # ADC noise on the accumulator, drawn per GLOBAL output
+            # element before the requant bins it — the analog-noise
+            # story of paper §4.4 on the TPU epilogue.
+            bm, bn = acc.shape
+            acc = acc.astype(jnp.float32) + noise_tile(
+                acc.shape, i * bm, j * bn, n_true,
+                seed_ref[0, 0], sigma_ref[0, 0], mac_chunks)
         o_ref[...] = apply_epilogue(
-            acc_ref[...], scale_ref[0, 0],
-            epilogue=epilogue, n_out=n_out, lo=lo)
+            acc, scale_ref[0, 0], epilogue=epilogue, n_out=n_out, lo=lo)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("epilogue", "n_out", "lo", "bm", "bn", "bk", "interpret"),
+    static_argnames=("epilogue", "n_out", "lo", "bm", "bn", "bk",
+                     "mac_chunks", "interpret"),
 )
 def fq_matmul(
     a_codes: jax.Array,   # (M, K) int8
@@ -79,10 +116,26 @@ def fq_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
+    noise_sigma_acc: Optional[jax.Array] = None,
+    noise_seed: Optional[jax.Array] = None,
+    mac_chunks: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
-    """Tiled int8 matmul with fused requantization. Pads to block multiples."""
+    """Tiled int8 matmul with fused requantization. Pads to block multiples.
+
+    ``noise_sigma_acc`` (std in ACCUMULATOR units) + ``noise_seed``
+    (uint32) switch on the deterministic ADC-noise epilogue (paper §4.4):
+    the int32 accumulator is perturbed in VMEM before requant.
+    ``mac_chunks=K`` applies the chunked-accumulation mitigation (K
+    per-chunk conversions at 1/K range -> effective std / sqrt(K)). With
+    ``noise_sigma_acc=None`` the compiled program is the unchanged clean
+    kernel — no extra operands, no extra ops.
+    """
     assert epilogue in ("requant", "dequant")
+    assert mac_chunks >= 1
+    noise = noise_sigma_acc is not None
+    assert not noise or noise_seed is not None, \
+        "noise_seed is required when noise_sigma_acc is set"
     m, k = a_codes.shape
     k2, n = b_codes.shape
     assert k == k2, (a_codes.shape, b_codes.shape)
@@ -95,17 +148,26 @@ def fq_matmul(
     pm, pn, pk = m + mp, n + np_, k + kp
     k_steps = pk // bk
 
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    in_specs = [
+        scalar_spec,                                        # scale
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A tile
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # B tile
+    ]
+    inputs = [scale.reshape(1, 1).astype(jnp.float32), a_codes, b_codes]
+    if noise:
+        in_specs += [scalar_spec, scalar_spec]              # sigma, seed
+        inputs += [jnp.asarray(noise_sigma_acc, jnp.float32).reshape(1, 1),
+                   jnp.asarray(noise_seed).astype(jnp.uint32).reshape(1, 1)]
+
     out_dtype = jnp.int8 if epilogue == "requant" else jnp.float32
     out = pl.pallas_call(
         functools.partial(
-            _kernel, k_steps=k_steps, epilogue=epilogue, n_out=n_out, lo=lo
+            _kernel, k_steps=k_steps, epilogue=epilogue, n_out=n_out, lo=lo,
+            noise=noise, mac_chunks=mac_chunks, n_true=n,
         ),
         grid=(pm // bm, pn // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),      # scale
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A tile
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # B tile
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
@@ -113,5 +175,5 @@ def fq_matmul(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(scale.reshape(1, 1).astype(jnp.float32), a_codes, b_codes)
+    )(*inputs)
     return out[:m, :n]

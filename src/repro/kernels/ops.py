@@ -77,10 +77,12 @@ def fold_alpha(s_a, s_w, *, bits_a: int, bits_w: int):
 
 
 def int_matmul(a_codes, b_codes, scale, *, epilogue="requant", n_out=7, lo=0,
-               bm=128, bn=128, bk=128):
+               bm=128, bn=128, bk=128, noise_sigma_acc=None, noise_seed=None,
+               mac_chunks=1):
     return fq_matmul(
         a_codes, b_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo,
-        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+        bm=bm, bn=bn, bk=bk, noise_sigma_acc=noise_sigma_acc,
+        noise_seed=noise_seed, mac_chunks=mac_chunks, interpret=_interpret(),
     )
 
 
@@ -109,19 +111,28 @@ def _im2col_1d(x, ksize: int, dilation: int):
 
 
 def fq_conv1d_int(a_codes, w_codes, scale, *, ksize: int, dilation: int = 1,
-                  epilogue="requant", n_out=7, lo=0, impl=None):
+                  epilogue="requant", n_out=7, lo=0, impl=None,
+                  noise_sigma_acc=None, noise_seed=None, mac_chunks=1):
     """int8 1-D convolution behind the conv dispatch point.
 
     a_codes: (B, T, Cin) int8; w_codes: (ksize*Cin, Cout) int8.
+    ``noise_sigma_acc``/``noise_seed``/``mac_chunks`` switch on the
+    deterministic ADC-noise epilogue (paper §4.4) on BOTH impls — the
+    noise field is indexed by global output elements, so fused and
+    im2col stay bit-identical under noise.
     """
     if conv_impl(impl) == "fused":
         return fq_conv.fq_conv1d(
             a_codes, w_codes, scale, ksize=ksize, dilation=dilation,
-            epilogue=epilogue, n_out=n_out, lo=lo, interpret=_interpret())
+            epilogue=epilogue, n_out=n_out, lo=lo,
+            noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+            mac_chunks=mac_chunks, interpret=_interpret())
     b = a_codes.shape[0]
     patches, t_out = _im2col_1d(a_codes, ksize, dilation)
     flat = patches.reshape(b * t_out, -1)
-    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
+    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo,
+                   noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+                   mac_chunks=mac_chunks)
     return y.reshape(b, t_out, -1)
 
 
@@ -146,21 +157,26 @@ def _im2col_2d(x, ksize: int, stride: int, padding: int, dilation: int = 1):
 
 def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
                   padding: int = 0, dilation: int = 1, epilogue="requant",
-                  n_out=7, lo=0, impl=None):
+                  n_out=7, lo=0, impl=None, noise_sigma_acc=None,
+                  noise_seed=None, mac_chunks=1):
     """int8 2-D convolution (NHWC) behind the conv dispatch point.
 
     w_codes: (ksize*ksize*Cin, Cout) int8, tap-major im2col layout.
+    ``noise_sigma_acc``/``noise_seed``/``mac_chunks``: see fq_conv1d_int.
     """
     if conv_impl(impl) == "fused":
         return fq_conv.fq_conv2d(
             a_codes, w_codes, scale, kh=ksize, kw=ksize,
             stride=(stride, stride), padding=(padding, padding),
             dilation=(dilation, dilation), epilogue=epilogue, n_out=n_out,
-            lo=lo, interpret=_interpret())
+            lo=lo, noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+            mac_chunks=mac_chunks, interpret=_interpret())
     b = a_codes.shape[0]
     patches, ho, wo = _im2col_2d(a_codes, ksize, stride, padding, dilation)
     flat = patches.reshape(b * ho * wo, -1)
-    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo)
+    y = int_matmul(flat, w_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo,
+                   noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+                   mac_chunks=mac_chunks)
     return y.reshape(b, ho, wo, -1)
 
 
@@ -179,22 +195,30 @@ def maxpool2d(y, *, window: int = 2, stride: int = 2):
 
 def fq_conv2d_pool_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
                        padding: int = 0, dilation: int = 1, pool: int = 2,
-                       epilogue="requant", n_out=7, lo=0, impl=None):
+                       epilogue="requant", n_out=7, lo=0, impl=None,
+                       noise_sigma_acc=None, noise_seed=None, mac_chunks=1):
     """int8 conv2d + non-overlapping maxpool, fused where the backend can.
 
     "fused" runs the pool on the int32 accumulator tile inside the kernel's
     VMEM epilogue (fq_conv.fq_conv2d ``pool=``) so only Ho*Wo/pool**2 output
     bytes reach HBM; "im2col" composes the unfused conv with a code-domain
     reduce_window — the parity oracle (bit-exact because the quantizer is
-    monotone, so max commutes with requant).
+    monotone, so max commutes with requant). With the ADC-noise epilogue
+    on, the fused path perturbs the PRE-POOL accumulator and the im2col
+    path perturbs the pre-pool conv output — max still commutes, so the
+    two stay bit-identical under noise.
     """
     if conv_impl(impl) == "fused":
         return fq_conv.fq_conv2d(
             a_codes, w_codes, scale, kh=ksize, kw=ksize,
             stride=(stride, stride), padding=(padding, padding),
             dilation=(dilation, dilation), pool=(pool, pool),
-            epilogue=epilogue, n_out=n_out, lo=lo, interpret=_interpret())
+            epilogue=epilogue, n_out=n_out, lo=lo,
+            noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+            mac_chunks=mac_chunks, interpret=_interpret())
     y = fq_conv2d_int(a_codes, w_codes, scale, ksize=ksize, stride=stride,
                       padding=padding, dilation=dilation, epilogue=epilogue,
-                      n_out=n_out, lo=lo, impl="im2col")
+                      n_out=n_out, lo=lo, impl="im2col",
+                      noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
+                      mac_chunks=mac_chunks)
     return maxpool2d(y, window=pool, stride=pool)

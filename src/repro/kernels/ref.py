@@ -1,8 +1,12 @@
 """Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+from ..core.noise import mac_noise_field
 
 
 def ref_fq_matmul(
@@ -13,16 +17,29 @@ def ref_fq_matmul(
     epilogue: str = "requant",
     n_out: int = 7,
     lo: int = 0,
+    noise_sigma_acc: Optional[jax.Array] = None,
+    noise_seed: Optional[jax.Array] = None,
+    mac_chunks: int = 1,
 ) -> jax.Array:
     acc = jnp.dot(
         a_codes.astype(jnp.int32),
         b_codes.astype(jnp.int32),
         preferred_element_type=jnp.int32,
     )
+    accf = acc.astype(jnp.float32)
+    if noise_sigma_acc is not None:
+        # The same deterministic counter-hash field the Pallas epilogues
+        # draw (global idx = row * N + col over the true dims), so this
+        # oracle stays bit-exact under noise too.
+        m, n = acc.shape
+        idx = (jnp.arange(m, dtype=jnp.int32)[:, None] * n
+               + jnp.arange(n, dtype=jnp.int32)[None, :])
+        accf = accf + mac_noise_field(idx, noise_seed, noise_sigma_acc,
+                                      chunks=mac_chunks)
     if epilogue == "requant":
-        y = jnp.round(acc.astype(jnp.float32) * scale)
+        y = jnp.round(accf * scale)
         return jnp.clip(y, lo, n_out).astype(jnp.int8)
-    return acc.astype(jnp.float32) * scale
+    return accf * scale
 
 
 def ref_quantize_codes(

@@ -114,7 +114,8 @@ def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
 
 
 def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
-              fuse_pool: bool = True):
+              fuse_pool: bool = True, noise: Optional[NoiseConfig] = None,
+              rng=None, mac_chunks: int = 1):
     """x: (B, H, W, 3) -> logits; codes flow conv1 -> last conv.
 
     conv+maxpool pairs on the integer path go through ONE op
@@ -122,9 +123,18 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
     kernel's VMEM epilogue, so the unpooled int8 plane never round-trips
     HBM. ``fuse_pool=False`` keeps the PR-1 conv-then-pool composition as
     the stack-level parity oracle.
+
+    ``noise`` + ``rng`` run the paper's §4.4 analog-noise model on every
+    integer conv (code-domain weight/activation noise + in-kernel ADC
+    noise; ``mac_chunks`` > 1 is the chunked-accumulation mitigation).
+    The FP first/last convs stay clean per the deployment protocol —
+    they never leave the digital domain.
     """
     from ..core import integer_inference as ii
     layers = list(cfg.layers)
+    n_noisy = len([l for l in layers if l != "M"]) - 1  # integer convs
+    rngs = list(jax.random.split(rng, n_noisy)) if rng is not None else \
+        [None] * n_noisy
     h, codes, ci, i = x, None, 0, 0
     while i < len(layers):
         layer = layers[i]
@@ -146,13 +156,14 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
         else:
             if codes is None:
                 codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
+            nkw = dict(noise=noise, rng=rngs[ci - 1], mac_chunks=mac_chunks)
             if fuse_pool and i + 1 < len(layers) and layers[i + 1] == "M":
                 codes = ii.int_conv2d_pool(ip[f"conv{ci}"], codes, ksize=ks,
-                                           padding=ks // 2, impl=impl)
+                                           padding=ks // 2, impl=impl, **nkw)
                 i += 1  # the pool is consumed by the fused epilogue
             else:
                 codes = ii.int_conv2d(ip[f"conv{ci}"], codes, ksize=ks,
-                                      padding=ks // 2, impl=impl)
+                                      padding=ks // 2, impl=impl, **nkw)
         ci += 1
         i += 1
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
@@ -162,7 +173,11 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
 
 
 def int_serve_fn(ip, qcfg: QuantConfig, cfg: DarkNetConfig, **kw):
-    """Fixed-signature closure for serve.cnn_batching: (B, H, W, 3) -> logits."""
-    def fn(x):
-        return int_apply(ip, x, qcfg, cfg, **kw)
+    """Fixed-signature closure for serve.cnn_batching: (B, H, W, 3) -> logits.
+
+    ``noise``/``rng`` pass through to int_apply so a noise-canary batcher
+    tier can draw a fresh key per flush.
+    """
+    def fn(x, noise=None, rng=None):
+        return int_apply(ip, x, qcfg, cfg, noise=noise, rng=rng, **kw)
     return fn

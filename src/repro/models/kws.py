@@ -118,15 +118,27 @@ def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
     return ip
 
 
-def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None):
-    """x: (B, T, n_mfcc) -> logits, conv stack integer-in/integer-out."""
+def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
+              noise: Optional[NoiseConfig] = None, rng=None,
+              mac_chunks: int = 1):
+    """x: (B, T, n_mfcc) -> logits, conv stack integer-in/integer-out.
+
+    ``noise`` + ``rng`` run the paper's §4.4 analog-noise model on the
+    INTEGER path: per-layer code-domain weight/activation perturbation
+    and in-kernel ADC noise on the MAC accumulator (``mac_chunks`` > 1
+    applies the chunked-accumulation mitigation). The FP embedding and
+    head stay clean — the noise model covers the analog conv core.
+    """
     from ..core import integer_inference as ii
     h = fql.dense(ip["embed"], x)
     h, _ = fql.batchnorm(ip["embed_bn"][0], ip["embed_bn"][1], h, train=False)
     codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
+    rngs = jax.random.split(rng, len(cfg.dilations)) if rng is not None else \
+        [None] * len(cfg.dilations)
     for i, dil in enumerate(cfg.dilations):
         codes = ii.int_conv1d(ip[f"conv{i}"], codes, ksize=cfg.ksize,
-                              dilation=dil, impl=impl)
+                              dilation=dil, impl=impl, noise=noise,
+                              rng=rngs[i], mac_chunks=mac_chunks)
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
     return fql.dense(ip["head"], h)
@@ -137,8 +149,9 @@ def int_serve_fn(ip, qcfg: QuantConfig, cfg: KWSConfig, **kw):
 
     The KWS stack has no spatial pools (dilated VALID convs + global average
     pool), so it gains from the batch-folded conv grid and the batcher, not
-    the fused pool epilogue.
+    the fused pool epilogue. ``noise``/``rng`` pass through to int_apply so
+    a noise-canary batcher tier can draw a fresh key per flush.
     """
-    def fn(x):
-        return int_apply(ip, x, qcfg, cfg, **kw)
+    def fn(x, noise=None, rng=None):
+        return int_apply(ip, x, qcfg, cfg, noise=noise, rng=rng, **kw)
     return fn

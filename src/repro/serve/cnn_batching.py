@@ -55,7 +55,9 @@ Scheduling model — a ``tick()`` is one host scheduling quantum:
 
 Observability (``stats``): counters (``flushes``, ``served``,
 ``padded_rows``, ``ladder_hits``, ``ladder_normalized``,
-``ladder_misses``, ``window_waits``, ``inflight_peak``) plus per-bucket
+``ladder_misses``, ``window_waits``, ``inflight_peak``,
+``noise_trials`` — flushes dispatched under a noise canary config) plus
+per-bucket
 ``wait_ticks`` percentiles — ``{bucket: {n, p50, p99, max}}`` where wait
 is submit-to-dispatch in ticks. Dead buckets (emptied queues) are
 garbage-collected after every tick/drain so bucket state stays bounded
@@ -71,6 +73,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core.noise import NoiseConfig
 from .shape_ladder import ShapeLadder
 
 
@@ -116,13 +119,26 @@ class CNNBatcher:
     off-CPU. ``step_fn`` lets callers share one pre-jitted step across
     batcher instances (the fuzz harness does, to share the compile cache);
     it must be jit-compatible with ``apply_fn``'s semantics.
+
+    **Noise canary tier.** ``noise_config`` (a ``core.noise.NoiseConfig``
+    with any non-zero sigma) makes every flush run noise-perturbed
+    integer inference — the paper's §4.4 analog-noise model — with a
+    fresh PRNG key per flush (folded from ``noise_seed`` and the trial
+    counter, so a canary run is reproducible end-to-end). ``apply_fn``
+    must then accept ``(x, noise=..., rng=...)`` — the ``int_serve_fn``
+    closures do; if ``step_fn`` is supplied it must accept ``(x, key)``.
+    ``stats["noise_trials"]`` counts the noisy flushes dispatched. A
+    ``None`` or all-zero config leaves the batcher on the byte-identical
+    clean path.
     """
 
     def __init__(self, apply_fn: Callable, *, max_batch: int = 8,
                  max_wait_ticks: int = 2,
                  ladder: Optional[ShapeLadder] = None,
                  dispatch_ahead: bool = False, max_inflight: int = 2,
-                 step_fn: Optional[Callable] = None):
+                 step_fn: Optional[Callable] = None,
+                 noise_config: Optional[NoiseConfig] = None,
+                 noise_seed: int = 0):
         assert max_batch >= 1 and max_inflight >= 1
         self.apply_fn = apply_fn
         self.max_batch = max_batch
@@ -130,13 +146,22 @@ class CNNBatcher:
         self.ladder = ladder
         self.dispatch_ahead = dispatch_ahead
         self.max_inflight = max_inflight
+        self.noise_config = noise_config
+        self._noisy = noise_config is not None and noise_config.enabled
+        self._noise_key = jax.random.key(noise_seed) if self._noisy else None
         self._queues: Dict[Tuple, List[CNNRequest]] = {}
         self._age: Dict[Tuple, int] = {}
         self._inflight: Deque[InflightFlush] = deque()
         self._tick_no = 0
         if step_fn is None:
             donate = (0,) if jax.default_backend() != "cpu" else ()
-            step_fn = jax.jit(apply_fn, donate_argnums=donate)
+            if self._noisy:
+                nc = noise_config
+                step_fn = jax.jit(
+                    lambda x, key: apply_fn(x, noise=nc, rng=key),
+                    donate_argnums=donate)
+            else:
+                step_fn = jax.jit(apply_fn, donate_argnums=donate)
         self._step = step_fn
         self._signatures: set = set()
         self._wait_hist: Dict[str, Deque[int]] = {}
@@ -144,7 +169,7 @@ class CNNBatcher:
         self._counters = {
             "flushes": 0, "served": 0, "padded_rows": 0,
             "ladder_hits": 0, "ladder_normalized": 0, "ladder_misses": 0,
-            "window_waits": 0, "inflight_peak": 0,
+            "window_waits": 0, "inflight_peak": 0, "noise_trials": 0,
         }
 
     # -- request intake -----------------------------------------------------
@@ -203,7 +228,15 @@ class CNNBatcher:
         self._counters["flushes"] += 1
         self._counters["padded_rows"] += slots - len(reqs)
         self._age[key] = 0  # every flush restarts the bucket's wait clock
-        dev = self._step(x)
+        if self._noisy:
+            # one fresh key per flush: noisy trials differ flush-to-flush
+            # but the whole canary run replays bit-exact from noise_seed
+            key_n = jax.random.fold_in(self._noise_key,
+                                       self._counters["noise_trials"])
+            self._counters["noise_trials"] += 1
+            dev = self._step(x, key_n)
+        else:
+            dev = self._step(x)
         if self.dispatch_ahead:
             self._inflight.append(
                 InflightFlush(key, reqs, dev, self._tick_no))

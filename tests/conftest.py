@@ -1,20 +1,54 @@
 """Shared test helpers (imported by test modules via `from conftest
-import ...` — pytest puts this directory on sys.path)."""
+import ...` — pytest puts this directory on sys.path) and the per-test
+PRNG-key fixtures.
+
+Seed policy: statistical/fuzz tests must NOT derive randomness from
+execution order (a module-level counter, an `id(...)`, or a shared
+mutable key would make the suite order-dependent under
+``pytest -p no:randomly`` reorderings or ``-n auto`` sharding). The
+``node_seed`` / ``node_key`` fixtures hash the pytest *node id* — stable
+across runs, orderings, processes and PYTHONHASHSEED (blake2s, not the
+builtin ``hash``) — so every test draws the same key no matter where or
+with whom it runs.
+"""
+import hashlib
+import os
+import sys
+
 import jax
-import jax.numpy as jnp
+import pytest
+
+# repo root on sys.path so benchmarks.common (the single source of the
+# trained-checkpoint stand-in) imports under any pytest invocation style
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def seed_for_node(nodeid: str) -> int:
+    """Deterministic 32-bit seed from a pytest node id (order-, process-
+    and PYTHONHASHSEED-independent)."""
+    return int.from_bytes(
+        hashlib.blake2s(nodeid.encode()).digest()[:4], "little")
+
+
+@pytest.fixture
+def node_seed(request) -> int:
+    return seed_for_node(request.node.nodeid)
+
+
+@pytest.fixture
+def node_key(request):
+    """A jax PRNG key derived from the test's node id."""
+    return jax.random.key(seed_for_node(request.node.nodeid))
 
 
 def trained_int_params(module, cfg, names, qcfg, *, s_out=0.1, seed=0):
     """Init-and-fold integer deployment params with the FQ hand-off
     contract (s_in[i+1] == s_out[i]) enforced — a trained-checkpoint
-    stand-in shared by the serving/ladder parity tests.
+    stand-in shared by the serving/ladder parity tests. Thin wrapper over
+    benchmarks.common.trained_int_params (one source of truth; the test
+    default s_out=0.1 differs from the benchmarks' 0.2).
 
     Returns (fq_params, state, int_params).
     """
-    params, state = module.init(jax.random.key(seed), cfg)
-    params = module.to_fq(params, state, cfg)
-    for n in names:
-        params[n]["s_out"] = jnp.float32(s_out)
-    for a, b in zip(names, names[1:]):
-        params[b]["s_in"] = params[a]["s_out"]
-    return params, state, module.convert_int(params, state, qcfg, cfg)
+    from benchmarks.common import trained_int_params as standin
+    return standin(module, cfg, names, qcfg, s_out=s_out, seed=seed)

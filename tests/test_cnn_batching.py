@@ -113,6 +113,73 @@ def test_kws_int_apply_served_matches_direct():
         np.testing.assert_allclose(out[i], direct[i], rtol=0, atol=1e-5)
 
 
+def _kws_serve_setup():
+    from conftest import trained_int_params
+    from repro.core.quant import QuantConfig
+    from repro.models import kws
+    cfg = kws.KWSConfig.reduced()
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    _, _, ip = trained_int_params(
+        kws, cfg, [f"conv{i}" for i in range(len(cfg.dilations))], qcfg)
+    return kws.int_serve_fn(ip, qcfg, cfg), cfg
+
+
+def test_noise_canary_zero_sigma_is_clean_path():
+    """noise_config=None and NoiseConfig(0,0,0) are the SAME serving
+    path: bit-identical outputs, no noise trials counted."""
+    from repro.core.noise import NoiseConfig
+    fn, cfg = _kws_serve_setup()
+    rng = np.random.default_rng(11)
+    xs = rng.standard_normal((5, cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+    out0 = CNNBatcher(fn, max_batch=4, max_wait_ticks=0).run(
+        [CNNRequest(rid=i, x=xs[i]) for i in range(5)])
+    bz = CNNBatcher(fn, max_batch=4, max_wait_ticks=0,
+                    noise_config=NoiseConfig(0.0, 0.0, 0.0))
+    outz = bz.run([CNNRequest(rid=i, x=xs[i]) for i in range(5)])
+    for i in range(5):
+        np.testing.assert_array_equal(out0[i], outz[i])
+    assert bz.stats["noise_trials"] == 0
+
+
+def test_noise_canary_perturbs_and_counts_trials():
+    """A noisy canary tier serves perturbed outputs, counts one noise
+    trial per flush, and replays bit-exact from the same noise_seed."""
+    from repro.core.noise import TABLE7_CONDITIONS
+    fn, cfg = _kws_serve_setup()
+    rng = np.random.default_rng(12)
+    xs = rng.standard_normal((6, cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+    clean = CNNBatcher(fn, max_batch=4, max_wait_ticks=0).run(
+        [CNNRequest(rid=i, x=xs[i]) for i in range(6)])
+
+    def canary():
+        b = CNNBatcher(fn, max_batch=4, max_wait_ticks=0,
+                       noise_config=TABLE7_CONDITIONS[-1], noise_seed=5)
+        return b, b.run([CNNRequest(rid=i, x=xs[i]) for i in range(6)])
+
+    b1, out1 = canary()
+    assert b1.stats["noise_trials"] == b1.stats["flushes"] == 2
+    assert any(not np.array_equal(clean[i], out1[i]) for i in range(6))
+    b2, out2 = canary()  # same seed -> same canary outputs
+    for i in range(6):
+        np.testing.assert_array_equal(out1[i], out2[i])
+    assert b2.stats["noise_trials"] == 2
+
+
+def test_noise_canary_flush_keys_differ():
+    """Two flushes of the SAME payload under a noise canary draw
+    different per-flush keys (trial-indexed), so repeated canary probes
+    sample the noise distribution rather than replaying one draw."""
+    from repro.core.noise import TABLE7_CONDITIONS
+    fn, cfg = _kws_serve_setup()
+    rng = np.random.default_rng(13)
+    x = rng.standard_normal((cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+    b = CNNBatcher(fn, max_batch=1, max_wait_ticks=0,
+                   noise_config=TABLE7_CONDITIONS[-1], noise_seed=9)
+    out = b.run([CNNRequest(rid=0, x=x.copy()), CNNRequest(rid=1, x=x.copy())])
+    assert b.stats["noise_trials"] == 2
+    assert not np.array_equal(out[0], out[1])
+
+
 def test_bucket_state_garbage_collected():
     """Regression (ISSUE 3): empty _queues/_age entries must not persist
     after drain — high shape cardinality would grow bucket state forever."""

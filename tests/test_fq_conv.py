@@ -258,6 +258,87 @@ def test_pick_blocks_pool_rounds_bho():
 
 
 # ---------------------------------------------------------------------------
+# zero-sigma noise plumbing: every noise entry point, disabled, must be
+# BIT-EXACT vs the clean path — across the same stride/padding/pool parity
+# sweep the clean guarantees are proven on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["fused", "im2col"])
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 0), (2, 1)])
+@pytest.mark.parametrize("pool", [None, 2])
+def test_zero_sigma_conv2d_bitexact(impl, stride, padding, pool):
+    """noise kwargs at their disabled defaults (None / chunks=1) leave the
+    conv dispatch point byte-identical to the clean path."""
+    B, H, W, Cin, Cout, ks = 2, 14, 12, 6, 10, 3
+    k1, k2 = jax.random.split(jax.random.key(41 * stride + padding))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _codes(k2, (ks * ks * Cin, Cout), -7, 7)
+    scale = jnp.float32(0.013)
+    kw = dict(ksize=ks, stride=stride, padding=padding, n_out=15, lo=0,
+              impl=impl)
+    if pool is None:
+        clean = ops.fq_conv2d_int(a, w, scale, **kw)
+        got = ops.fq_conv2d_int(a, w, scale, noise_sigma_acc=None,
+                                noise_seed=None, mac_chunks=1, **kw)
+    else:
+        clean = ops.fq_conv2d_pool_int(a, w, scale, pool=pool, **kw)
+        got = ops.fq_conv2d_pool_int(a, w, scale, pool=pool,
+                                     noise_sigma_acc=None, noise_seed=None,
+                                     mac_chunks=1, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+
+
+@pytest.mark.parametrize("impl", ["fused", "im2col"])
+def test_zero_sigma_stacks_bitexact(impl):
+    """kws/darknet int_apply with noise=None AND NoiseConfig(0,0,0)+rng
+    both reproduce the clean integer stack bit-for-bit (the batched-vs-
+    unbatched and fused-vs-im2col guarantees ride on the clean suite)."""
+    from conftest import trained_int_params
+    from repro.core.noise import NoiseConfig
+    from repro.core.quant import QuantConfig
+    from repro.models import darknet, kws
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    zero = NoiseConfig(0.0, 0.0, 0.0)
+
+    cfg = kws.KWSConfig.reduced()
+    _, _, ip = trained_int_params(
+        kws, cfg, [f"conv{i}" for i in range(len(cfg.dilations))], qcfg)
+    x = jax.random.normal(jax.random.key(1), (3, cfg.seq_len, cfg.n_mfcc))
+    clean = kws.int_apply(ip, x, qcfg, cfg, impl=impl)
+    for noise, rng in [(None, None), (zero, jax.random.key(2))]:
+        got = kws.int_apply(ip, x, qcfg, cfg, impl=impl, noise=noise,
+                            rng=rng)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+
+    dcfg = darknet.DarkNetConfig.reduced()
+    names = [f"conv{i}" for i in
+             range(len([l for l in dcfg.layers if l != "M"]))]
+    _, _, dip = trained_int_params(darknet, dcfg, names, qcfg, s_out=0.2)
+    xd = jax.random.normal(jax.random.key(3), (2, 16, 16, dcfg.in_channels))
+    for fuse_pool in (False, True):
+        clean = darknet.int_apply(dip, xd, qcfg, dcfg, impl=impl,
+                                  fuse_pool=fuse_pool)
+        for noise, rng in [(None, None), (zero, jax.random.key(4))]:
+            got = darknet.int_apply(dip, xd, qcfg, dcfg, impl=impl,
+                                    fuse_pool=fuse_pool, noise=noise,
+                                    rng=rng)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+
+
+def test_zero_sigma_matmul_bitexact():
+    from repro.kernels.fq_matmul import fq_matmul
+    k1, k2 = jax.random.split(jax.random.key(6))
+    a = _codes(k1, (33, 40), 0, 15)
+    b = _codes(k2, (40, 21), -7, 7)
+    scale = jnp.float32(0.02)
+    clean = fq_matmul(a, b, scale, n_out=15, interpret=True)
+    got = fq_matmul(a, b, scale, n_out=15, noise_sigma_acc=None,
+                    noise_seed=None, mac_chunks=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+
+
+# ---------------------------------------------------------------------------
 # int_maxpool2d on odd planes (VALID semantics: trailing row/col dropped)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,349 @@
+"""Statistical + determinism properties of the integer-path noise model.
+
+What the §4.4 deployment noise subsystem must prove:
+  * fixed-seed determinism: the in-kernel (fused) ADC noise is bit-for-bit
+    reproducible by the im2col + fq_matmul path AND the pure-jnp oracle,
+    under any tiling,
+  * calibration: the empirical accumulator-noise std matches the requested
+    sigma (sigma_mac * LSB folded to accumulator units) within tolerance,
+  * chunked accumulation: mac_chunks=1 is bit-exact vs the unchunked
+    default; mac_chunks=K cuts the effective noise std by sqrt(K) and, at
+    the two highest Table-7 conditions, degrades the seeded KWS stack no
+    worse than the unchunked model (the paper's mitigation claim),
+  * monotone degradation across the five TABLE7_CONDITIONS (slow test),
+  * code-domain noise (perturb_codes) keeps dtype/range and respects the
+    zero-sigma no-op contract.
+
+Keys come from the ``node_key``/``node_seed`` conftest fixtures (hashed
+pytest node ids), so these statistical tests are order-independent under
+``-p no:randomly`` and ``-n auto``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import seed_for_node, trained_int_params
+from repro.core.noise import (NoiseConfig, TABLE7_CONDITIONS, hash_u32,
+                              mac_noise_field, perturb_codes,
+                              unit_normal_field)
+from repro.core.quant import QuantConfig
+from repro.kernels import ops
+from repro.kernels.fq_conv import fq_conv2d
+from repro.kernels.fq_matmul import fq_matmul
+from repro.kernels.ref import ref_fq_matmul
+from repro.models import kws
+
+
+def _codes(key, shape, lo, hi):
+    return jax.random.randint(key, shape, lo, hi + 1).astype(jnp.int8)
+
+
+def _kws_stack():
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    cfg = kws.KWSConfig.reduced()
+    _, _, ip = trained_int_params(
+        kws, cfg, [f"conv{i}" for i in range(len(cfg.dilations))], qcfg)
+    return qcfg, cfg, ip
+
+
+# ---------------------------------------------------------------------------
+# conftest seed handling: node-id keys are order/process independent
+# ---------------------------------------------------------------------------
+
+
+def test_node_seed_is_nodeid_derived(request, node_seed, node_key):
+    """The fixture must be a pure function of the node id — no counters,
+    no ordering, no PYTHONHASHSEED: re-deriving from the node id string
+    gives the identical seed/key."""
+    want = seed_for_node(request.node.nodeid)
+    assert node_seed == want
+    np.testing.assert_array_equal(
+        jax.random.key_data(node_key),
+        jax.random.key_data(jax.random.key(want)))
+    # a different node id gives a different stream
+    assert seed_for_node(request.node.nodeid + "x") != want
+
+
+def test_node_seed_stable_reference():
+    """Pin the derivation so a refactor that silently changes every
+    statistical test's stream (e.g. switching to builtin hash()) fails."""
+    assert seed_for_node("tests/x.py::test_y") == \
+        seed_for_node("tests/x.py::test_y")
+    assert seed_for_node("a") != seed_for_node("b")
+    # blake2s is PYTHONHASHSEED-independent: a literal anchor value
+    assert seed_for_node("anchor") == 1117284057
+
+
+# ---------------------------------------------------------------------------
+# deterministic field: fixed-seed reproducibility across implementations
+# ---------------------------------------------------------------------------
+
+
+def test_hash_field_deterministic_and_mixed(node_seed):
+    idx = jnp.arange(4096, dtype=jnp.int32)
+    a = np.asarray(unit_normal_field(idx, jnp.uint32(node_seed)))
+    b = np.asarray(unit_normal_field(idx, jnp.uint32(node_seed)))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(unit_normal_field(idx, jnp.uint32(node_seed + 1)))
+    assert (a != c).mean() > 0.99          # different seed, different field
+    d = np.asarray(unit_normal_field(idx, jnp.uint32(node_seed), salt=1))
+    assert (a != d).mean() > 0.99          # chunk salt decorrelates
+    # hash avalanche sanity: consecutive ints map to uncorrelated u32s
+    h = np.asarray(hash_u32(idx)).astype(np.float64)
+    assert abs(np.corrcoef(h[:-1], h[1:])[0, 1]) < 0.05
+
+
+def test_in_kernel_noise_matches_reference_paths(node_seed):
+    """Fused kernel noise == im2col+fq_matmul noise == pure-jnp oracle,
+    bit for bit, under fixed seed and arbitrary tiling."""
+    k1, k2 = jax.random.split(jax.random.key(node_seed))
+    a = _codes(k1, (2, 11, 9, 5), 0, 15)
+    w = _codes(k2, (9 * 5, 7), -7, 7)
+    scale = jnp.float32(0.013)
+    sig = jnp.float32(4.0)
+    seed = jnp.uint32(node_seed)
+    kw = dict(ksize=3, padding=1, n_out=15, lo=0,
+              noise_sigma_acc=sig, noise_seed=seed)
+    fused = ops.fq_conv2d_int(a, w, scale, impl="fused", **kw)
+    im2col = ops.fq_conv2d_int(a, w, scale, impl="im2col", **kw)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(im2col))
+    # pure-jnp oracle over the same flattened coordinates
+    patches, ho, wo = ops._im2col_2d(a, 3, 1, 1, 1)
+    flat = patches.reshape(2 * ho * wo, -1)
+    want = ref_fq_matmul(flat, w, scale, n_out=15, noise_sigma_acc=sig,
+                         noise_seed=seed).reshape(2, ho, wo, -1)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    # tiling must not change the field (indices are global)
+    tiled = fq_conv2d(a, w, scale, kh=3, kw=3, padding=(1, 1), n_out=15,
+                      noise_sigma_acc=sig, noise_seed=seed,
+                      bho=3, bco=4, bc=5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(fused))
+
+
+def test_matmul_noise_matches_ref_oracle(node_seed):
+    k1, k2 = jax.random.split(jax.random.key(node_seed))
+    a = _codes(k1, (37, 50), 0, 15)
+    b = _codes(k2, (50, 19), -7, 7)
+    scale = jnp.float32(0.02)
+    for chunks in (1, 3):
+        got = fq_matmul(a, b, scale, n_out=15, interpret=True,
+                        noise_sigma_acc=jnp.float32(2.5),
+                        noise_seed=jnp.uint32(node_seed), mac_chunks=chunks)
+        want = ref_fq_matmul(a, b, scale, n_out=15,
+                             noise_sigma_acc=jnp.float32(2.5),
+                             noise_seed=jnp.uint32(node_seed),
+                             mac_chunks=chunks)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# calibration: empirical accumulator-noise std == sigma (and /sqrt(K))
+# ---------------------------------------------------------------------------
+
+
+def _noise_samples(seeds, sigma, *, mac_chunks=1):
+    """Pure noise field out of the conv kernel: zero codes -> acc == 0 ->
+    dequant(scale=1) output IS the injected accumulator noise."""
+    az = jnp.zeros((1, 16, 16, 8), jnp.int8)
+    wz = jnp.zeros((9 * 8, 32), jnp.int8)
+    out = []
+    for s in seeds:
+        y = fq_conv2d(az, wz, jnp.float32(1.0), kh=3, kw=3, padding=(1, 1),
+                      epilogue="dequant", noise_sigma_acc=jnp.float32(sigma),
+                      noise_seed=jnp.uint32(s), mac_chunks=mac_chunks,
+                      interpret=True)
+        out.append(np.asarray(y).ravel())
+    return np.concatenate(out)
+
+
+def test_accumulator_noise_std_calibrated(node_seed):
+    """Empirical std over many seeds ~= sigma_acc (the kernel receives
+    sigma_mac * LSB folded to accumulator units; here it is exercised
+    directly), mean ~= 0, support bounded (Irwin-Hall |g| <= 6)."""
+    sigma = 10.0
+    f = _noise_samples(range(node_seed, node_seed + 5), sigma)
+    n = f.size
+    assert n >= 40_000
+    assert abs(f.mean()) < 4 * sigma / np.sqrt(n)  # 4-sigma mean bound
+    np.testing.assert_allclose(f.std(), sigma, rtol=0.02)
+    assert np.abs(f).max() <= 6.0 * sigma + 1e-3
+
+
+def test_chunked_noise_std_scales_inverse_sqrt(node_seed):
+    """mac_chunks=K: per-chunk conversions at 1/K dynamic range -> summed
+    std sigma/sqrt(K). The mitigation's variance claim, measured."""
+    sigma = 10.0
+    for chunks in (2, 4):
+        f = _noise_samples(range(node_seed, node_seed + 3), sigma,
+                           mac_chunks=chunks)
+        np.testing.assert_allclose(f.std(), sigma / np.sqrt(chunks),
+                                   rtol=0.03)
+
+
+def test_stack_sigma_mac_follows_lsb(node_seed):
+    """End-to-end calibration through the stack plumbing: with only
+    sigma_mac set, the first conv's noisy-vs-clean CODE deviation std
+    equals sigma_mac * rescale^-1 * rescale = sigma_mac in output-code
+    LSBs (before clipping) — checked on one int_conv1d layer at large
+    n_out so clipping is rare."""
+    qcfg, cfg, ip = _kws_stack()
+    layer = dict(ip["conv0"])
+    layer["n_out"], layer["lo"] = 127, -127  # wide bins: no clip, rare ties
+    codes = _codes(jax.random.key(node_seed), (4, 24, cfg.embed), 0, 15)
+    from repro.core import integer_inference as ii
+    clean = ii.int_conv1d(layer, codes, ksize=cfg.ksize)
+    sigma_mac = 3.0
+    devs = []
+    for t in range(6):
+        noisy = ii.int_conv1d(layer, codes, ksize=cfg.ksize,
+                              noise=NoiseConfig(0.0, 0.0, sigma_mac),
+                              rng=jax.random.key(node_seed + t))
+        devs.append(np.asarray(noisy, np.float32)
+                    - np.asarray(clean, np.float32))
+    d = np.concatenate([x.ravel() for x in devs])
+    # code = round(acc * rescale): noise std sigma_mac/rescale in acc
+    # units -> sigma_mac in code units, plus U(-.5,.5)^2 x2 rounding terms
+    np.testing.assert_allclose(d.std(), np.sqrt(sigma_mac ** 2 + 1 / 6),
+                               rtol=0.08)
+
+
+# ---------------------------------------------------------------------------
+# code-domain noise
+# ---------------------------------------------------------------------------
+
+
+def test_perturb_codes_contract(node_key, node_seed):
+    codes = _codes(jax.random.key(node_seed), (64, 64), 0, 15)
+    # zero sigma / no key: the SAME object back, provably no-op
+    assert perturb_codes(codes, node_key, 0.0, lo=0, hi=15) is codes
+    assert perturb_codes(codes, None, 1.0, lo=0, hi=15) is codes
+    noisy = perturb_codes(codes, node_key, 2.0, lo=0, hi=15)
+    assert noisy.dtype == jnp.int8
+    a = np.asarray(noisy)
+    assert a.min() >= 0 and a.max() <= 15
+    d = a.astype(np.float32) - np.asarray(codes, np.float32)
+    assert (d != 0).any()
+    # interior (unclipped) deviations: std ~ sqrt(sigma^2 + 1/12)
+    interior = d[(np.asarray(codes) > 4) & (np.asarray(codes) < 11)]
+    np.testing.assert_allclose(interior.std(),
+                               np.sqrt(4.0 + 1 / 12), rtol=0.12)
+    # sub-half-LSB noise mostly rounds away (the DAC re-digitizes)
+    tiny = perturb_codes(codes, node_key, 0.05, lo=0, hi=15)
+    assert (np.asarray(tiny) == np.asarray(codes)).mean() > 0.95
+
+
+def test_activation_noise_clip_covers_handover_codes(node_key, node_seed):
+    """Regression: with bits_a < bits_out, inner layers carry [0, n_out]
+    codes — the DAC noise clip must cover them, not crush them to the
+    entry quantizer's [0, n_a]. A near-zero sigma_a must leave the codes
+    (and hence the layer output) essentially untouched."""
+    from repro.core import integer_inference as ii
+    from repro.core.fq_layers import init_fq_conv1d
+    qcfg = QuantConfig(2, 2, 4, fq=True)          # n_a=1, n_out=7
+    p = init_fq_conv1d(jax.random.key(node_seed), 3, 8, 8)
+    p["s_out"] = jnp.float32(0.1)
+    layer = ii.convert_layer(p, qcfg, relu_out=True)
+    # hand-over codes from a previous bits_out=4 layer: range [0, 7]
+    codes = _codes(jax.random.key(node_seed + 1), (2, 20, 8), 0, 7)
+    clean = ii.int_conv1d(layer, codes, ksize=3)
+    noisy = ii.int_conv1d(layer, codes, ksize=3,
+                          noise=NoiseConfig(0.0, 1e-4, 0.0), rng=node_key)
+    assert (np.asarray(noisy) == np.asarray(clean)).mean() > 0.99
+
+
+# ---------------------------------------------------------------------------
+# chunked accumulation: identity at K=1, mitigation at high noise
+# ---------------------------------------------------------------------------
+
+
+def test_mac_chunks_one_bitexact_vs_unchunked(node_seed):
+    """mac_chunks=1 (explicit) is the unchunked model, bit for bit — on
+    the kernels and through the KWS stack."""
+    qcfg, cfg, ip = _kws_stack()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (3, cfg.seq_len, cfg.n_mfcc))
+    nc = TABLE7_CONDITIONS[-1]
+    rng = jax.random.key(node_seed + 1)
+    base = kws.int_apply(ip, x, qcfg, cfg, noise=nc, rng=rng)
+    one = kws.int_apply(ip, x, qcfg, cfg, noise=nc, rng=rng, mac_chunks=1)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(one))
+    # clean path: chunking with noise off is a no-op for ANY K (the
+    # chunk model only shapes the noise, never the exact int32 sum)
+    clean = kws.int_apply(ip, x, qcfg, cfg)
+    four = kws.int_apply(ip, x, qcfg, cfg, mac_chunks=4)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(four))
+
+
+def test_chunked_mitigation_at_high_noise(node_seed):
+    """Paper's mitigation claim on the seeded KWS stack, at the two
+    highest Table-7 conditions. Trials are PAIRED (same rng for chunked
+    and unchunked, so the weight/activation code noise — which chunking
+    does not and should not touch — is identical and only the MAC field
+    differs): (a) under the full condition, chunked degradation is no
+    worse than unchunked beyond a small statistical slack (the dominant
+    term there is the weight-code noise chunking rightly leaves alone);
+    (b) under the condition's MAC noise alone — the nonideality the
+    mitigation targets — the chunked logit deviation is STRICTLY
+    smaller: the sqrt(K) cut, visible end-to-end."""
+    qcfg, cfg, ip = _kws_stack()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (32, cfg.seq_len, cfg.n_mfcc))
+    clean = np.asarray(kws.int_apply(ip, x, qcfg, cfg))
+    labels = clean.argmax(-1)
+    trials = 6
+
+    def run(nc, chunks):
+        devs, accs = [], []
+        for t in range(trials):
+            rng = jax.random.key(node_seed + 31 * t)  # paired across chunks
+            y = np.asarray(kws.int_apply(ip, x, qcfg, cfg, noise=nc,
+                                         rng=rng, mac_chunks=chunks))
+            devs.append(np.abs(y - clean).mean())
+            accs.append((y.argmax(-1) == labels).mean())
+        return float(np.mean(devs)), float(np.mean(accs))
+
+    for nc in TABLE7_CONDITIONS[-2:]:
+        full = {c: run(nc, c) for c in (1, 4)}
+        assert full[4][0] <= full[1][0] * 1.05, \
+            f"chunked degradation worse under {nc}: {full}"
+        assert full[4][1] >= full[1][1] - 0.05, \
+            f"chunked agreement worse under {nc}: {full}"
+        mac_only = NoiseConfig(0.0, 0.0, nc.sigma_mac)
+        mo = {c: run(mac_only, c) for c in (1, 4)}
+        assert mo[4][0] < mo[1][0], \
+            f"chunking did not cut MAC-noise deviation at {nc}: {mo}"
+
+
+# ---------------------------------------------------------------------------
+# Table-7 sweep property: monotone degradation (the full-sweep slow test)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_table7_sweep_monotone_degradation(node_seed):
+    """Across the five TABLE7_CONDITIONS (strictly increasing sigma
+    triples), mean logit deviation from the clean stack must strictly
+    increase, and clean-prediction agreement must not increase beyond
+    statistical slack — the integer-path analog of Table 7's
+    monotonically falling accuracy."""
+    qcfg, cfg, ip = _kws_stack()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (32, cfg.seq_len, cfg.n_mfcc))
+    clean = np.asarray(kws.int_apply(ip, x, qcfg, cfg))
+    labels = clean.argmax(-1)
+    trials = 4
+    devs, accs = [], []
+    for ci, nc in enumerate(TABLE7_CONDITIONS):
+        d, a = [], []
+        for t in range(trials):
+            rng = jax.random.key(node_seed + 101 * ci + t)
+            y = np.asarray(kws.int_apply(ip, x, qcfg, cfg, noise=nc,
+                                         rng=rng))
+            d.append(np.abs(y - clean).mean())
+            a.append((y.argmax(-1) == labels).mean())
+        devs.append(float(np.mean(d)))
+        accs.append(float(np.mean(a)))
+    assert all(b > a for a, b in zip(devs, devs[1:])), devs
+    assert all(b <= a + 0.05 for a, b in zip(accs, accs[1:])), accs
+    assert accs[-1] < accs[0], accs
