@@ -7,6 +7,9 @@
 #   make bench-noise — dry-run-sized Table-7 analog-noise sweep over the
 #                      integer stacks (BENCH_noise.json); the full sweep is
 #                      `make PYTHON=python bench` or --only noise via run.py
+#   make bench-retrain — dry-run-sized deployment-in-the-loop retraining
+#                      comparison (deploy-QAT vs clean finetune, "retrained"
+#                      rows in BENCH_noise.json); full: run.py --only retrain
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make lint        — byte-compile + import sanity (no external deps)
@@ -17,8 +20,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench conv bench-serve bench-mixed bench-noise autotune lint \
-	check ci
+.PHONY: test bench conv bench-serve bench-mixed bench-noise bench-retrain \
+	autotune lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -38,6 +41,9 @@ bench-mixed:
 bench-noise:
 	$(PYTHON) -m benchmarks.noise_sweep --dry-run
 
+bench-retrain:
+	$(PYTHON) -m benchmarks.noise_sweep --retrain --dry-run
+
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
 
@@ -45,6 +51,7 @@ lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
 	$(PYTHON) -c "import repro.kernels.ops, repro.kernels.fq_conv, \
 	repro.kernels.fq_matmul, repro.core.integer_inference, \
+	repro.core.deploy_qat, \
 	repro.models.kws, repro.models.darknet, repro.models.frontends, \
 	repro.serve.cnn_batching, repro.serve.shape_ladder, \
 	repro.train.trainer; print('imports ok')"

@@ -114,19 +114,35 @@ def train_stage_fn(task: BenchTask, data, *, noise: Optional[NoiseConfig]
     return train_stage, accuracy
 
 
+# Keyed cache for the stand-in builder: the serving bench, the noise sweep
+# and the slow tests each rebuild the same init-and-fold stacks many times
+# (module init + BN fold + conversion per call). Keys are fully value-like
+# (module name + frozen dataclass cfg/qcfg + scalars), so a hit is exact.
+# Entries are treated as immutable by every caller (jax arrays are; tests
+# that tweak a layer copy the dict first).
+_STANDIN_CACHE = {}
+
+
 def trained_int_params(module, cfg, names, qcfg, *, s_out=0.2, seed=0):
     """Init-and-fold integer deployment params with a consistent FQ
     hand-off contract (s_in[i+1] == s_out[i]) — a stand-in for a trained
     checkpoint. The single source of truth for this stand-in logic: the
     serving/noise benchmarks use it directly and tests/conftest.py wraps
-    it. Returns (fq_params, state, int_params)."""
+    it. Returns (fq_params, state, int_params), cached per key — callers
+    must not mutate the returned trees in place."""
+    key = (module.__name__, cfg, tuple(names), qcfg, float(s_out), int(seed))
+    hit = _STANDIN_CACHE.get(key)
+    if hit is not None:
+        return hit
     params, state = module.init(jax.random.key(seed), cfg)
     params = module.to_fq(params, state, cfg)
     for n in names:
         params[n]["s_out"] = jnp.float32(s_out)
     for a, b in zip(names, names[1:]):
         params[b]["s_in"] = params[a]["s_out"]
-    return params, state, module.convert_int(params, state, qcfg, cfg)
+    out = (params, state, module.convert_int(params, state, qcfg, cfg))
+    _STANDIN_CACHE[key] = out
+    return out
 
 
 def reduced_int_models(qcfg):

@@ -640,6 +640,15 @@ def bench_noise():
     noise_sweep.bench_noise()
 
 
+def bench_retrain():
+    """Deployment-in-the-loop retraining (ISSUE 5 acceptance): finetune
+    the FQ stand-in through core/deploy_qat's integer forward with and
+    without the deployed noise field; "retrained" rows merge into
+    BENCH_noise.json. ``make bench-retrain`` is the dry-run-sized CLI."""
+    from benchmarks import noise_sweep
+    noise_sweep.bench_retrain()
+
+
 ALL = {
     "table1": bench_table1_gq_ladder,
     "table2": bench_table2_method_comparison,
@@ -653,6 +662,7 @@ ALL = {
     "serve_cnn": bench_serve_cnn,
     "serve_mixed": bench_serve_mixed,
     "noise": bench_noise,
+    "retrain": bench_retrain,
     "dryrun": bench_dryrun_summary,
 }
 

@@ -3,9 +3,16 @@ through the FULL Table-4 ladder on synthetic MFCC data, with checkpointing
 and resume — the training-kind end-to-end example.
 
     PYTHONPATH=src python examples/train_kws_fq.py [--steps 120] [--full]
+                                                   [--retrain]
 
 ``--full`` uses the paper's full 50K-parameter KWS config (CPU-trainable);
-default is the reduced config for a fast demo.
+default is the reduced config for a fast demo. ``--retrain`` appends the
+deployment-in-the-loop loop: convert the FQ net to its integer
+ConvertedStack, finetune it THROUGH the deployed integer path —
+core/deploy_qat's forward is bit-identical with serving, including the
+§4.4 analog-noise field — via a small gradual ladder (clean stage, then
+the noise-field stage), and rederive the deployed codes from the
+retrained floats (the stack's back-map).
 """
 import argparse
 import os
@@ -26,10 +33,96 @@ from repro.train import checkpoint
 from benchmarks import common
 
 
+def retrain_demo(res, task, data, *, steps: int):
+    """Deployment-in-the-loop retraining after the Table-4 ladder.
+
+    A two-stage gradual ladder over the SAME FQ config — first a clean
+    deploy-QAT stage (adapts the net to the deployed integer/hand-off
+    configuration), then the noise-field stage (Table 7's harshest
+    condition, exactly the noise serving will inject) — then the
+    ConvertedStack back-map turns the retrained floats into fresh codes.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import deploy_qat, distill, integer_inference as ii
+    from repro.core.noise import TABLE7_CONDITIONS
+    from repro.optim import schedules, sgd
+    from repro.train.trainer import make_qat_train_step
+
+    module, cfg = task.net.module, task.net.reduced
+    p, s, fq_cfg = res.final.params
+    assert fq_cfg.fq, "retrain demo needs the ladder's FQ stage"
+    names = module.conv_names(cfg)
+    (xtr, ytr), (xte, yte) = data
+    nc = TABLE7_CONDITIONS[-1]
+
+    def noisy_agreement(ip, trials=4):
+        clean = np.asarray(module.int_apply(ip, xte, fq_cfg, cfg))
+        labels = clean.argmax(-1)
+        return float(np.mean([
+            (np.asarray(module.int_apply(
+                ip, xte, fq_cfg, cfg, noise=nc,
+                rng=jax.random.key(50 + t))).argmax(-1) == labels).mean()
+            for t in range(trials)]))
+
+    def qat_stage(noise):
+        """gradual.run_ladder stage: finetune through the deployed path."""
+        def stage(bundle, qcfg, teacher, idx):
+            params, state = bundle
+            opt = sgd.make(schedules.cosine(0.01, steps))
+            ost = opt.init(params)
+
+            def loss_fn(pp, batch, rng):
+                xb, yb = batch
+                logits = module.qat_apply(pp, state, xb, qcfg, cfg,
+                                          noise=noise, rng=rng)
+                onehot = jax.nn.one_hot(yb, cfg.num_classes)
+                return jnp.mean(distill.softmax_cross_entropy(logits,
+                                                              onehot))
+
+            step = make_qat_train_step(loss_fn, opt, clip_norm=1.0)
+            base = jax.random.key(77 + idx)
+            for i in range(steps):
+                sel = jax.random.randint(jax.random.fold_in(base, 2 * i),
+                                         (task.batch,), 0, xtr.shape[0])
+                params, ost, _ = step(params, ost, (xtr[sel], ytr[sel]),
+                                      jnp.int32(i),
+                                      deploy_qat.train_step_key(base,
+                                                                2 * i + 1))
+            ip = module.convert_int(ii.sync_handoff(params, names), state,
+                                    qcfg, cfg)
+            return (params, state), noisy_agreement(ip)
+        return stage
+
+    # the deployed configuration ties the quantizer hand-off; sync once up
+    # front so stage 0 starts from exactly what serving would run
+    p = ii.sync_handoff(p, names)
+    ip0 = module.convert_int(p, s, fq_cfg, cfg)
+    print(f"  deployed (pre-retrain) noisy agreement @ harshest Table-7: "
+          f"{noisy_agreement(ip0):.3f}")
+    stages = [qat_stage(None), qat_stage(nc)]
+    bundle = (p, s)
+    for idx, stage in enumerate(stages):
+        bundle, agr = stage(bundle, fq_cfg, None, idx)
+        kind = "clean deploy-QAT" if idx == 0 else "noise-field deploy-QAT"
+        print(f"  stage {kind}: noisy agreement {agr:.3f}")
+    # the back-map: retrained floats -> fresh deployed codes; the FP
+    # embedding/head retrained too, so rebuild the extras alongside
+    p_new, s_new = ii.sync_handoff(bundle[0], names), bundle[1]
+    ip_new = ip0.rederive({n: p_new[n] for n in ip0.layer_names},
+                          extras=module.int_extras(p_new, s_new, cfg))
+    print(f"  rederived stack noisy agreement: "
+          f"{noisy_agreement(ip_new):.3f} (serve via "
+          f"CNNBatcher.swap_apply_fn without a restart)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--retrain", action="store_true",
+                    help="append the deployment-in-the-loop retraining demo")
     ap.add_argument("--ckpt-dir", default="/tmp/fqconv_kws_ckpt")
     args = ap.parse_args()
 
@@ -71,6 +164,10 @@ def main():
           f"{res.best.val_metric:.3f})")
     print(f"checkpoints in {args.ckpt_dir}: "
           f"{sorted(os.listdir(args.ckpt_dir))[-3:]}")
+    if args.retrain:
+        print("deployment-in-the-loop retraining (paper §4.4 Table 7, on "
+              "the DEPLOYED integer path):")
+        retrain_demo(res, task, data, steps=max(40, args.steps // 3))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,184 @@
+"""Differentiable DEPLOYMENT forward: QAT against the integer noise field.
+
+The paper's Table 7 shows noise resilience is best when the network is
+trained with the noise it will see at deployment. Our deployed noise field
+(core/noise.py, PR 4) is a stateless counter-hash — bit-reproducible on the
+host — so the QAT forward here does better than the usual *simulated*
+quantization (Krishnamoorthi 1806.08342, Nagel et al. 2106.08295): its
+forward pass IS the deployed integer path, bit-identical with serving.
+
+Each unit is a ``jax.custom_vjp`` whose
+
+  * **forward** converts the float FQ layer on the fly
+    (``integer_inference.convert_layer``) and runs the INTEGER path through
+    ``kernels/ops`` — code-domain weight/activation noise, the in-kernel
+    ADC epilogue, ``mac_chunks`` — exactly the ops ``int_apply`` runs at
+    serving time, so codes and noise draws match deployment bit for bit
+    for the same seed/sigma/chunks;
+  * **backward** applies the float FQ/STE gradients from ``core/quant.py``
+    by differentiating the clean ``fq_layers`` surrogate at the *noisy*
+    forward activations — the straight-through linearization of the
+    quantizers around the values the deployed network actually saw.
+
+Units thread a pair ``(h, codes)`` between layers: ``codes`` carry the
+bit-exact integer stream (int8 — no gradient), ``h`` carries the
+differentiable float stream whose *value* is the decoded codes
+(``decode_output``) and whose *gradient* is the surrogate's. Scale hand-off
+is tied structurally: layer i's conversion and surrogate read layer i-1's
+``s_out`` (the ``s_in`` argument), so training cannot drift the FQ
+hand-off contract apart; run ``integer_inference.sync_handoff`` before
+re-converting (the stored inner ``s_in`` go stale by design).
+
+Per-step seeding: fold the train step counter into the base key with
+:func:`train_step_key`; the per-layer split + ``noise.derive_seed``
+folding below it matches ``int_apply``'s, so any training step's noise
+draw can be replayed at serving bit-exactly — deterministic and
+resumable mid-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import fq_layers as fql
+from . import integer_inference as ii
+from .noise import NoiseConfig
+from .quant import QuantConfig, RELU_BOUND
+
+
+def train_step_key(base_key, step):
+    """Per-step noise key: fold the train step counter into the run key.
+
+    Deterministic and resumable — step 1234's noise draws are a pure
+    function of (base_key, 1234), independent of how training got there.
+    """
+    return jax.random.fold_in(base_key, step)
+
+
+def _float0_like(x):
+    """Cotangent for an integer-dtype primal (jax's float0 convention)."""
+    if x is None:
+        return None
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+def _deploy_unit(int_fwd, float_fwd, bits_out: int):
+    """Build the custom_vjp: forward = deployed integer path, backward =
+    the float FQ/STE surrogate's vjp.
+
+    ``int_fwd(p_eff, h, codes, key_data) -> codes_out`` and
+    ``float_fwd(p_eff, h) -> h_out`` must close over static config only
+    (geometry, qcfg, NoiseConfig, impl) — all traced values arrive as
+    arguments. ``codes``/``key_data`` may be None (entry layer / clean
+    path); None threads through as an empty pytree.
+    """
+
+    def primal(p, s_in, h, codes, key_data):
+        p_eff = {**p, "s_in": s_in}
+        codes_out = int_fwd(p_eff, h, codes, key_data)
+        h_out = ii.decode_output(codes_out, p["s_out"], bits_out)
+        return h_out, codes_out
+
+    @jax.custom_vjp
+    def unit(p, s_in, h, codes, key_data):
+        return primal(p, s_in, h, codes, key_data)
+
+    def fwd(p, s_in, h, codes, key_data):
+        return primal(p, s_in, h, codes, key_data), (p, s_in, h, codes,
+                                                     key_data)
+
+    def bwd(res, cts):
+        p, s_in, h, codes, key_data = res
+        ct_h_out, _ct_codes = cts  # codes_out cotangent is float0: dropped
+        _, vjp = jax.vjp(
+            lambda p_, s_, h_: float_fwd({**p_, "s_in": s_}, h_), p, s_in, h)
+        ct_p, ct_s_in, ct_h = vjp(ct_h_out)
+        return ct_p, ct_s_in, ct_h, _float0_like(codes), _float0_like(key_data)
+
+    unit.defvjp(fwd, bwd)
+    return unit
+
+
+def _layer_rng(key_data):
+    if key_data is None:
+        return None
+    return jax.random.wrap_key_data(key_data)
+
+
+def _key_data(rng):
+    return None if rng is None else jax.random.key_data(rng)
+
+
+def qat_conv1d(p, h, codes, qcfg: QuantConfig, *, ksize: int,
+               dilation: int = 1, s_in=None,
+               noise: Optional[NoiseConfig] = None, rng=None,
+               mac_chunks: int = 1, impl=None):
+    """One KWS-style conv1d deploy-QAT unit. Returns ``(h_out, codes_out)``.
+
+    ``codes=None`` marks the entry layer: the integer forward quantizes
+    ``h`` to entry codes itself (``ops.quantize_to_codes`` — the same op
+    ``int_apply`` runs), and the surrogate's own input quantizer supplies
+    the matching STE gradient. ``s_in=None`` uses the layer's stored scale
+    (entry); inner layers pass the previous layer's ``s_out``.
+    """
+    s_in = p["s_in"] if s_in is None else s_in
+
+    def int_fwd(p_eff, h_, codes_, key_data):
+        ip = ii.convert_layer(p_eff, qcfg, relu_out=True, validate=False)
+        if codes_ is None:
+            codes_ = ii.entry_codes(h_, p_eff, qcfg, b_in=RELU_BOUND)
+        return ii.int_conv1d(ip, codes_, ksize=ksize, dilation=dilation,
+                             impl=impl, noise=noise, rng=_layer_rng(key_data),
+                             mac_chunks=mac_chunks)
+
+    def float_fwd(p_eff, h_):
+        return fql.fq_conv1d(p_eff, h_, qcfg, dilation=dilation,
+                             padding="VALID", b_in=RELU_BOUND, relu_out=True)
+
+    unit = _deploy_unit(int_fwd, float_fwd, qcfg.bits_out)
+    return unit(p, s_in, h, codes, _key_data(rng))
+
+
+def qat_conv2d(p, h, codes, qcfg: QuantConfig, *, ksize: int,
+               pool: Optional[int] = None, s_in=None,
+               noise: Optional[NoiseConfig] = None, rng=None,
+               mac_chunks: int = 1, impl=None):
+    """One darknet-style SAME/stride-1 conv2d deploy-QAT unit, optionally
+    with the fused conv+maxpool epilogue (``pool=2``). Returns
+    ``(h_out, codes_out)``; see :func:`qat_conv1d` for ``codes``/``s_in``.
+    """
+    s_in = p["s_in"] if s_in is None else s_in
+
+    def int_fwd(p_eff, h_, codes_, key_data):
+        ip = ii.convert_layer(p_eff, qcfg, relu_out=True, validate=False)
+        if codes_ is None:
+            codes_ = ii.entry_codes(h_, p_eff, qcfg, b_in=RELU_BOUND)
+        kw = dict(ksize=ksize, padding=ksize // 2, impl=impl, noise=noise,
+                  rng=_layer_rng(key_data), mac_chunks=mac_chunks)
+        if pool is None:
+            return ii.int_conv2d(ip, codes_, **kw)
+        return ii.int_conv2d_pool(ip, codes_, pool=pool, **kw)
+
+    def float_fwd(p_eff, h_):
+        y = fql.fq_conv2d(p_eff, h_, qcfg, padding="SAME", b_in=RELU_BOUND,
+                          relu_out=True)
+        if pool is not None:
+            y = ops.maxpool2d(y, window=pool, stride=pool)
+        return y
+
+    unit = _deploy_unit(int_fwd, float_fwd, qcfg.bits_out)
+    return unit(p, s_in, h, codes, _key_data(rng))
+
+
+def qat_maxpool2d(h, codes):
+    """Standalone code-domain maxpool on the (h, codes) pair.
+
+    Monotone quantizer: max commutes with dequant, so pooling the float
+    stream (differentiable) and the code stream (bit-exact) keeps the
+    pair's value == decode(codes) invariant.
+    """
+    return ops.maxpool2d(h), ii.int_maxpool2d(codes)

@@ -8,13 +8,24 @@ bins*: a trained FQ layer collapses to
 and the whole conv stack runs integer-in / integer-out on the fq_matmul
 Pallas kernel. Only the final layer's  e^s / n  escapes to float, to feed the
 full-precision global-average-pool + softmax (paper §3.4, last paragraph).
+
+The deployment artifact is a :class:`ConvertedStack`: per-layer codes +
+rescales + quantizer ranges, plus the float-side extras (FP edge layers,
+entry quantizer, final decode scale). It is mapping-compatible with the
+per-layer dicts it replaced (``stack["conv0"]`` still works), is a
+registered jax pytree, and carries an explicit back-map —
+:meth:`ConvertedStack.rederive` turns *updated* float weights back into
+re-derived codes/rescales, which is what deployment-in-the-loop retraining
+(core/deploy_qat.py) converges around: train floats, rederive, redeploy.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops
 from .noise import NoiseConfig, derive_seed, perturb_codes
@@ -22,12 +33,51 @@ from .quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND, n_levels,
                     quantize_to_int)
 
 
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _validate_layer(p, out, name: Optional[str]):
+    """Conversion-time range validation (raise, don't silently clip).
+
+    ``quantize_to_int`` clips finite weights into range by construction, so
+    out-of-range or garbage codes can only come from non-finite params
+    (NaN/inf weights or scales) — which previously cast to int8 silently.
+    Skipped under tracing (the QAT forward converts inside jit, where the
+    eager conversion that produced the stack already validated).
+    """
+    tag = f"convert_layer({name or 'layer'})"
+    for k in ("s_in", "s_w", "s_out"):
+        if _is_concrete(p[k]) and not np.isfinite(np.asarray(p[k])).all():
+            raise ValueError(f"{tag}: non-finite scale param {k!r}")
+    if _is_concrete(p["w"]) and not np.isfinite(np.asarray(p["w"])).all():
+        raise ValueError(f"{tag}: non-finite weights (quantize_to_int would "
+                         "cast NaN/inf to garbage int8 codes)")
+    codes = out["w_codes"]
+    if _is_concrete(codes):
+        c = np.asarray(codes, dtype=np.int32)
+        if c.min() < -out["n_w"] or c.max() > out["n_w"]:
+            raise ValueError(
+                f"{tag}: weight codes [{c.min()}, {c.max()}] outside the "
+                f"recorded quantizer range [-{out['n_w']}, {out['n_w']}]")
+    scalar = out["alpha"] if "alpha" in out else out["rescale"]
+    if _is_concrete(scalar):
+        s = float(np.asarray(scalar))
+        if not np.isfinite(s) or s <= 0.0:
+            raise ValueError(f"{tag}: folded epilogue scalar is {s!r} "
+                             "(expected finite and > 0)")
+
+
 def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
-                  final: bool = False):
+                  final: bool = False, validate: bool = True,
+                  name: Optional[str] = None):
     """Trained FQ layer params -> integer deployment params.
 
     Returns a dict with int8 ``w_codes`` plus the folded epilogue scalar:
     ``rescale`` (inner layers) or ``alpha`` (final layer, dequant epilogue).
+    ``validate`` checks the produced codes against the recorded quantizer
+    ranges and the folded scalar for finiteness, raising a clear error
+    instead of deploying silently-clipped garbage.
     """
     assert qcfg.fq and qcfg.bits_out is not None and qcfg.bits_w is not None
     w_codes = quantize_to_int(p["w"], p["s_w"], bits=qcfg.bits_w,
@@ -53,7 +103,187 @@ def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
             p["s_in"], p["s_w"], p["s_out"],
             bits_a=qcfg.bits_a, bits_w=qcfg.bits_w, bits_out=qcfg.bits_out,
         )
+    if validate:
+        _validate_layer(p, out, name)
     return out
+
+
+# ---------------------------------------------------------------------------
+# ConvertedStack: the deployment artifact + its back-map
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static per-layer conversion recipe (aux data of the stack pytree)."""
+    name: str
+    relu_out: bool = True
+    final: bool = False
+
+
+class ConvertedStack:
+    """Per-layer integer deployment params + float-side extras, one artifact.
+
+    * ``layers``: {name: converted dict} from :func:`convert_layer` —
+      codes, folded rescale/alpha, quantizer ranges.
+    * ``extras``: everything the integer core does not own (FP edge layers,
+      ``entry`` quantizer scale, ``s_out_last`` decode scale, BN tuples).
+    * ``specs``/``qcfg``: the static conversion recipe, so the stack can
+      re-derive itself from updated float weights (:meth:`rederive`) —
+      the train -> convert -> serve round-trip's back-map.
+
+    Mapping-compatible with the per-layer dict bundles it replaced:
+    ``stack["conv0"]`` resolves layers first, then extras.
+    """
+
+    def __init__(self, qcfg: QuantConfig, specs: Sequence[LayerSpec],
+                 layers: Dict[str, dict], extras: Dict[str, Any]):
+        self.qcfg = qcfg
+        self.specs = tuple(specs)
+        self.layers = dict(layers)
+        self.extras = dict(extras)
+
+    # -- mapping compatibility ---------------------------------------------
+
+    def __getitem__(self, key: str):
+        if key in self.layers:
+            return self.layers[key]
+        return self.extras[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.layers or key in self.extras
+
+    def keys(self):
+        return list(self.layers) + list(self.extras)
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def __len__(self) -> int:
+        return len(self.layers) + len(self.extras)
+
+    def items(self):
+        return [(k, self[k]) for k in self.keys()]
+
+    @property
+    def layer_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.specs)
+
+    # -- the back-map -------------------------------------------------------
+
+    def rederive(self, layer_params: Dict[str, dict], *, extras=None,
+                 check_handoff: bool = True) -> "ConvertedStack":
+        """Updated float layer params -> a freshly converted stack.
+
+        The explicit back-map of the round-trip pipeline: after a
+        deploy-QAT finetune moves the float weights, ``rederive`` re-runs
+        the SAME conversion recipe (specs + qcfg) over the new params.
+        Re-deriving from unchanged params is idempotent (bit-exact codes
+        and rescales).
+
+        Extras that are pure functions of the layer params — the
+        ``entry`` quantizer scale (first layer's s_in) and the
+        ``s_out_last`` decode scale — are RE-DERIVED too: the last
+        layer's new rescale targets its new s_out, so decoding with a
+        stale s_out_last would mis-scale every output. ``extras=None``
+        keeps the remaining extras (FP edge layers); pass rebuilt extras
+        when those retrained as well (models' ``int_extras``).
+        """
+        if check_handoff:
+            _check_handoff(layer_params, self.specs)
+        layers = {
+            s.name: convert_layer(layer_params[s.name], self.qcfg,
+                                  relu_out=s.relu_out, final=s.final,
+                                  name=s.name)
+            for s in self.specs
+        }
+        extras = dict(self.extras if extras is None else extras)
+        if "entry" in extras:
+            extras["entry"] = {"s_in": layer_params[self.specs[0].name]["s_in"]}
+        if "s_out_last" in extras:
+            extras["s_out_last"] = layer_params[self.specs[-1].name]["s_out"]
+        return ConvertedStack(self.qcfg, self.specs, layers, extras)
+
+
+# Python-int fields of a converted layer (kernel grid / epilogue statics).
+# They flatten into pytree AUX data, not leaves, so a ConvertedStack can
+# cross a jit boundary as an argument without tracing n_out/lo into the
+# kernels' static parameters.
+_STATIC_LAYER_KEYS = ("n_out", "lo", "n_w", "n_a")
+
+
+def _stack_flatten(s: ConvertedStack):
+    dyn = {n: {k: v for k, v in d.items() if k not in _STATIC_LAYER_KEYS}
+           for n, d in s.layers.items()}
+    static = tuple(sorted(
+        (n, tuple(sorted((k, d[k]) for k in _STATIC_LAYER_KEYS if k in d)))
+        for n, d in s.layers.items()))
+    return (dyn, s.extras), (s.qcfg, s.specs, static)
+
+
+def _stack_unflatten(aux, children):
+    qcfg, specs, static = aux
+    dyn, extras = children
+    layers = {n: dict(d) for n, d in dyn.items()}
+    for n, kv in static:
+        layers[n].update(dict(kv))
+    return ConvertedStack(qcfg, specs, layers, extras)
+
+
+jax.tree_util.register_pytree_node(ConvertedStack, _stack_flatten,
+                                   _stack_unflatten)
+
+
+def _check_handoff(layer_params: Dict[str, dict], specs: Sequence[LayerSpec],
+                   *, atol: float = 1e-6):
+    """Validate the FQ hand-off contract s_in[i+1] == s_out[i].
+
+    The integer path hands CODES layer-to-layer, which is only meaningful
+    when consecutive quantizers share bin edges; a violated contract used
+    to produce silently-wrong rescales. Skipped for traced params.
+    """
+    for a, b in zip(specs, specs[1:]):
+        s_out = layer_params[a.name]["s_out"]
+        s_in = layer_params[b.name]["s_in"]
+        if not (_is_concrete(s_out) and _is_concrete(s_in)):
+            continue
+        if not np.allclose(np.asarray(s_in), np.asarray(s_out), atol=atol):
+            raise ValueError(
+                f"FQ hand-off contract violated between {a.name!r} and "
+                f"{b.name!r}: s_in={float(np.asarray(s_in)):.6f} != "
+                f"s_out={float(np.asarray(s_out)):.6f}. Run "
+                "integer_inference.sync_handoff(params, names) first "
+                "(independently-trained scales must be tied before the "
+                "codes can hand over).")
+
+
+def sync_handoff(params: Dict[str, dict], names: Sequence[str]):
+    """Enforce s_in[i+1] = s_out[i] along a layer chain, functionally.
+
+    Deploy-QAT training ties the scales structurally (layer i's surrogate
+    reads layer i-1's s_out), leaving the stored s_in of inner layers
+    stale; call this before converting. Returns a new params dict — the
+    input (possibly a cached stand-in) is never mutated.
+    """
+    new = dict(params)
+    for a, b in zip(names, names[1:]):
+        new[b] = {**new[b], "s_in": new[a]["s_out"]}
+    return new
+
+
+def convert_stack(layer_params: Dict[str, dict], qcfg: QuantConfig, *,
+                  specs: Sequence[LayerSpec], extras: Dict[str, Any],
+                  check_handoff: bool = True) -> ConvertedStack:
+    """Convert an ordered chain of trained FQ layers into a ConvertedStack."""
+    specs = tuple(specs)
+    if check_handoff:
+        _check_handoff(layer_params, specs)
+    layers = {
+        s.name: convert_layer(layer_params[s.name], qcfg,
+                              relu_out=s.relu_out, final=s.final, name=s.name)
+        for s in specs
+    }
+    return ConvertedStack(qcfg, specs, layers, extras)
 
 
 def entry_codes(x, p, qcfg: QuantConfig, *, b_in: float = RELU_BOUND):

@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import quant
 from .fq_matmul import fq_matmul
@@ -185,9 +186,14 @@ def maxpool2d(y, *, window: int = 2, stride: int = 2):
 
     On codes this is exact because the learned quantizer is monotone —
     max commutes with (de/re)quantization. Used by the unfused conv+pool
-    oracle below and by ``integer_inference.int_maxpool2d``.
+    oracle below, by ``integer_inference.int_maxpool2d``, and (on f32) as
+    the differentiable pool of core/deploy_qat's float surrogates.
+
+    The init value must be a HOST constant, not a traced ``jnp.asarray``:
+    a tracer-valued reduce_window init breaks ``jax.vjp`` linearization
+    inside jit (unknown-primal assertion), which the QAT backward hits.
     """
-    init = jnp.asarray(-128 if y.dtype == jnp.int8 else -jnp.inf, y.dtype)
+    init = np.asarray(-128 if y.dtype == jnp.int8 else -np.inf, y.dtype)
     return jax.lax.reduce_window(
         y, init, jax.lax.max, (1, window, window, 1),
         (1, stride, stride, 1), "VALID")

@@ -97,20 +97,71 @@ def to_fq(params, state, cfg: DarkNetConfig):
 # ImageNet protocol; everything between runs integer-in/integer-out,
 # maxpools included (the monotone quantizer commutes with max, so pooling
 # operates on int8 codes directly — integer_inference.int_maxpool2d).
+#
+# ONE structure, two interpreters: ``layer_plan`` compiles cfg.layers into
+# the ordered op list (FP edge conv, pools, integer convs with the fused
+# conv+pool lookahead resolved); ``int_apply`` walks it on codes (serving)
+# and ``qat_apply`` walks the SAME plan through core/deploy_qat's units
+# (deployment-in-the-loop retraining) — the duplicated while-loop walks
+# this plan replaces.
 # ---------------------------------------------------------------------------
 
 
+def layer_plan(cfg: DarkNetConfig, fuse_pool: bool = True):
+    """cfg.layers -> ordered steps:
+
+    ``("fp_conv", ks)`` FP first conv; ``("pool",)`` standalone maxpool
+    (float before entry, code-domain after); ``("conv", name, ks, pooled)``
+    integer conv, ``pooled=True`` when the following "M" fused into its
+    epilogue (consumed from the walk).
+    """
+    plan, layers, ci, i = [], list(cfg.layers), 0, 0
+    while i < len(layers):
+        layer = layers[i]
+        if layer == "M":
+            plan.append(("pool",))
+            i += 1
+            continue
+        ks, _ = layer
+        if ci == 0:
+            plan.append(("fp_conv", ks))
+        else:
+            pooled = fuse_pool and i + 1 < len(layers) and \
+                layers[i + 1] == "M"
+            plan.append(("conv", f"conv{ci}", ks, pooled))
+            if pooled:
+                i += 1  # the pool is consumed by the fused epilogue
+        ci += 1
+        i += 1
+    return plan
+
+
+def int_conv_names(cfg: DarkNetConfig):
+    """Names of the code-carrying chain (for sync_handoff / rederive)."""
+    return [s[1] for s in layer_plan(cfg) if s[0] == "conv"]
+
+
+def _layer_rngs(rng, n):
+    return list(jax.random.split(rng, n)) if rng is not None else [None] * n
+
+
+def int_extras(params, state, cfg: DarkNetConfig):
+    """Float-side extras (FP edge convs + entry/decode scales); pass to
+    ``ConvertedStack.rederive`` when the FP edges retrained too."""
+    names = int_conv_names(cfg)
+    return {"conv0": params["conv0"], "head": params["head"],
+            "entry": {"s_in": params[names[0]]["s_in"]},
+            "s_out_last": params[names[-1]]["s_out"]}
+
+
 def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
-    """Trained FQ (BN-folded) params -> integer deployment bundle."""
+    """Trained FQ (BN-folded) params -> ConvertedStack (integer core +
+    the FP edge convs as extras). Validates the FQ hand-off contract."""
     from ..core import integer_inference as ii
-    convs = [l for l in cfg.layers if l != "M"]
-    ip = {"conv0": params["conv0"], "head": params["head"],
-          "entry": {"s_in": params["conv1"]["s_in"]},
-          "s_out_last": params[f"conv{len(convs) - 1}"]["s_out"]}
-    for i in range(1, len(convs)):
-        ip[f"conv{i}"] = ii.convert_layer(params[f"conv{i}"], qcfg,
-                                          relu_out=True)
-    return ip
+    names = int_conv_names(cfg)
+    return ii.convert_stack({n: params[n] for n in names}, qcfg,
+                            specs=[ii.LayerSpec(n) for n in names],
+                            extras=int_extras(params, state, cfg))
 
 
 def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
@@ -131,43 +182,71 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
     they never leave the digital domain.
     """
     from ..core import integer_inference as ii
-    layers = list(cfg.layers)
-    n_noisy = len([l for l in layers if l != "M"]) - 1  # integer convs
-    rngs = list(jax.random.split(rng, n_noisy)) if rng is not None else \
-        [None] * n_noisy
-    h, codes, ci, i = x, None, 0, 0
-    while i < len(layers):
-        layer = layers[i]
-        if layer == "M":
+    plan = layer_plan(cfg, fuse_pool)
+    rngs = _layer_rngs(rng, sum(1 for s in plan if s[0] == "conv"))
+    h, codes, li = x, None, 0
+    for step in plan:
+        if step[0] == "fp_conv":
+            # FP first conv (BN folded into w); same fp-in-fq-mode config
+            # as apply().
+            h = fql.fq_conv2d(ip["conv0"], h, QuantConfig(fq=qcfg.fq),
+                              padding="SAME", b_in=WEIGHT_BOUND)
+        elif step[0] == "pool":
             if codes is None:
                 h = -jax.lax.reduce_window(
                     -h, jnp.inf, jax.lax.min, (1, 2, 2, 1), (1, 2, 2, 1),
                     "VALID")
             else:
                 codes = ii.int_maxpool2d(codes)
-            i += 1
-            continue
-        ks, _ = layer
-        if ci == 0:
-            # FP first conv (BN folded into w); same fp-in-fq-mode config
-            # as apply().
-            h = fql.fq_conv2d(ip["conv0"], h, QuantConfig(fq=qcfg.fq),
-                              padding="SAME", b_in=WEIGHT_BOUND)
         else:
+            _, name, ks, pooled = step
             if codes is None:
                 codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
-            nkw = dict(noise=noise, rng=rngs[ci - 1], mac_chunks=mac_chunks)
-            if fuse_pool and i + 1 < len(layers) and layers[i + 1] == "M":
-                codes = ii.int_conv2d_pool(ip[f"conv{ci}"], codes, ksize=ks,
-                                           padding=ks // 2, impl=impl, **nkw)
-                i += 1  # the pool is consumed by the fused epilogue
+            nkw = dict(ksize=ks, padding=ks // 2, impl=impl, noise=noise,
+                       rng=rngs[li], mac_chunks=mac_chunks)
+            li += 1
+            if pooled:
+                codes = ii.int_conv2d_pool(ip[name], codes, **nkw)
             else:
-                codes = ii.int_conv2d(ip[f"conv{ci}"], codes, ksize=ks,
-                                      padding=ks // 2, impl=impl, **nkw)
-        ci += 1
-        i += 1
+                codes = ii.int_conv2d(ip[name], codes, **nkw)
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = fql.fq_conv2d(ip["head"], h, QuantConfig(), padding="SAME",
+                      b_in=RELU_BOUND)
+    return jnp.mean(h, axis=(1, 2))
+
+
+def qat_apply(params, state, x, qcfg: QuantConfig, cfg: DarkNetConfig, *,
+              impl=None, fuse_pool: bool = True,
+              noise: Optional[NoiseConfig] = None, rng=None,
+              mac_chunks: int = 1):
+    """Deployment-in-the-loop forward: value == ``int_apply`` of the
+    converted params (same codes, same noise draws), gradient == the
+    float FQ/STE path. ``params`` must be BN-folded (post-``to_fq``);
+    ``state`` is unused (BN is folded) and kept for signature symmetry.
+    """
+    from ..core import deploy_qat as dq
+    from ..kernels import ops
+    plan = layer_plan(cfg, fuse_pool)
+    rngs = _layer_rngs(rng, sum(1 for s in plan if s[0] == "conv"))
+    h, codes, s_prev, li = x, None, None, 0
+    for step in plan:
+        if step[0] == "fp_conv":
+            h = fql.fq_conv2d(params["conv0"], h, QuantConfig(fq=qcfg.fq),
+                              padding="SAME", b_in=WEIGHT_BOUND)
+        elif step[0] == "pool":
+            if codes is None:
+                h = ops.maxpool2d(h)  # pre-entry FP pool (differentiable)
+            else:
+                h, codes = dq.qat_maxpool2d(h, codes)
+        else:
+            _, name, ks, pooled = step
+            h, codes = dq.qat_conv2d(params[name], h, codes, qcfg,
+                                     ksize=ks, pool=2 if pooled else None,
+                                     s_in=s_prev, noise=noise, rng=rngs[li],
+                                     mac_chunks=mac_chunks, impl=impl)
+            s_prev = params[name]["s_out"]
+            li += 1
+    h = fql.fq_conv2d(params["head"], h, QuantConfig(), padding="SAME",
                       b_in=RELU_BOUND)
     return jnp.mean(h, axis=(1, 2))
 

@@ -94,28 +94,53 @@ def to_fq(params, state, cfg: KWSConfig):
 # ---------------------------------------------------------------------------
 # Integer deployment (paper §3.4: codes layer-to-layer, float only at edges)
 # ---------------------------------------------------------------------------
+# ONE structure, two interpreters: ``layer_plan`` is the single description
+# of the integer conv core; ``int_apply`` walks it integer-in/integer-out
+# (serving), ``qat_apply`` walks the SAME plan through core/deploy_qat's
+# custom_vjp units (deployment-in-the-loop retraining).
 
 
-def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
-    """Trained FQ params -> integer deployment bundle.
+def layer_plan(cfg: KWSConfig):
+    """The ordered integer core: (layer name, dilation) per conv."""
+    return [(f"conv{i}", d) for i, d in enumerate(cfg.dilations)]
 
-    The conv stack collapses to int8 weight codes + one folded rescale per
-    layer (core/integer_inference.convert_layer); the FP embedding/BN/head
-    stay float. Assumes the FQ hand-off contract s_in[i+1] == s_out[i].
-    """
-    from ..core import integer_inference as ii
-    n = len(cfg.dilations)
-    ip = {
+
+def conv_names(cfg: KWSConfig):
+    """Names of the code-carrying chain (for sync_handoff / rederive)."""
+    return [name for name, _ in layer_plan(cfg)]
+
+
+def _layer_rngs(rng, n):
+    return jax.random.split(rng, n) if rng is not None else [None] * n
+
+
+def int_extras(params, state, cfg: KWSConfig):
+    """The float-side extras of the deployment stack (FP embedding/BN/
+    head + the entry/decode scales). Pass to ``ConvertedStack.rederive``
+    when the FP edges retrained alongside the conv core."""
+    names = conv_names(cfg)
+    return {
         "embed": params["embed"],
         "embed_bn": (params["embed_bn"], state["embed_bn"]),
         "head": params["head"],
         "entry": {"s_in": params["conv0"]["s_in"]},
-        "s_out_last": params[f"conv{n - 1}"]["s_out"],
+        "s_out_last": params[names[-1]]["s_out"],
     }
-    for i in range(n):
-        ip[f"conv{i}"] = ii.convert_layer(params[f"conv{i}"], qcfg,
-                                          relu_out=True)
-    return ip
+
+
+def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
+    """Trained FQ params -> :class:`integer_inference.ConvertedStack`.
+
+    The conv stack collapses to int8 weight codes + one folded rescale per
+    layer; the FP embedding/BN/head ride along as extras. The FQ hand-off
+    contract s_in[i+1] == s_out[i] is validated at conversion time
+    (``integer_inference.sync_handoff`` repairs a violated chain).
+    """
+    from ..core import integer_inference as ii
+    names = conv_names(cfg)
+    return ii.convert_stack({n: params[n] for n in names}, qcfg,
+                            specs=[ii.LayerSpec(n) for n in names],
+                            extras=int_extras(params, state, cfg))
 
 
 def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
@@ -130,18 +155,47 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
     head stay clean — the noise model covers the analog conv core.
     """
     from ..core import integer_inference as ii
+    plan = layer_plan(cfg)
     h = fql.dense(ip["embed"], x)
     h, _ = fql.batchnorm(ip["embed_bn"][0], ip["embed_bn"][1], h, train=False)
     codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
-    rngs = jax.random.split(rng, len(cfg.dilations)) if rng is not None else \
-        [None] * len(cfg.dilations)
-    for i, dil in enumerate(cfg.dilations):
-        codes = ii.int_conv1d(ip[f"conv{i}"], codes, ksize=cfg.ksize,
+    rngs = _layer_rngs(rng, len(plan))
+    for (name, dil), r in zip(plan, rngs):
+        codes = ii.int_conv1d(ip[name], codes, ksize=cfg.ksize,
                               dilation=dil, impl=impl, noise=noise,
-                              rng=rngs[i], mac_chunks=mac_chunks)
+                              rng=r, mac_chunks=mac_chunks)
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
     return fql.dense(ip["head"], h)
+
+
+def qat_apply(params, state, x, qcfg: QuantConfig, cfg: KWSConfig, *,
+              impl=None, noise: Optional[NoiseConfig] = None, rng=None,
+              mac_chunks: int = 1):
+    """Deployment-in-the-loop forward: value == ``int_apply`` of the
+    converted params (same codes, same noise draws for the same
+    seed/sigma/``mac_chunks``), gradient == the float FQ/STE path.
+
+    ``params`` must be BN-folded FQ params (post-``to_fq``). Scale
+    hand-off is tied structurally (layer i reads layer i-1's s_out), so
+    inner stored ``s_in`` go stale during training — sync_handoff before
+    converting. One plan, two interpreters: same rng split as int_apply.
+    """
+    from ..core import deploy_qat as dq
+    plan = layer_plan(cfg)
+    h = fql.dense(params["embed"], x)
+    h, _ = fql.batchnorm(params["embed_bn"], state["embed_bn"], h,
+                         train=False)
+    rngs = _layer_rngs(rng, len(plan))
+    codes, s_prev = None, None
+    for (name, dil), r in zip(plan, rngs):
+        h, codes = dq.qat_conv1d(params[name], h, codes, qcfg,
+                                 ksize=cfg.ksize, dilation=dil, s_in=s_prev,
+                                 noise=noise, rng=r, mac_chunks=mac_chunks,
+                                 impl=impl)
+        s_prev = params[name]["s_out"]
+    h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
+    return fql.dense(params["head"], h)
 
 
 def int_serve_fn(ip, qcfg: QuantConfig, cfg: KWSConfig, **kw):

@@ -130,6 +130,11 @@ class CNNBatcher:
     ``stats["noise_trials"]`` counts the noisy flushes dispatched. A
     ``None`` or all-zero config leaves the batcher on the byte-identical
     clean path.
+
+    **Model hot-swap.** ``swap_apply_fn`` replaces the served model
+    between flushes — e.g. a freshly rederived ``ConvertedStack`` coming
+    out of a deployment-in-the-loop retraining cycle — without dropping
+    queued requests or in-flight results.
     """
 
     def __init__(self, apply_fn: Callable, *, max_batch: int = 8,
@@ -153,16 +158,8 @@ class CNNBatcher:
         self._age: Dict[Tuple, int] = {}
         self._inflight: Deque[InflightFlush] = deque()
         self._tick_no = 0
-        if step_fn is None:
-            donate = (0,) if jax.default_backend() != "cpu" else ()
-            if self._noisy:
-                nc = noise_config
-                step_fn = jax.jit(
-                    lambda x, key: apply_fn(x, noise=nc, rng=key),
-                    donate_argnums=donate)
-            else:
-                step_fn = jax.jit(apply_fn, donate_argnums=donate)
-        self._step = step_fn
+        self._step = step_fn if step_fn is not None \
+            else self._make_step(apply_fn)
         self._signatures: set = set()
         self._wait_hist: Dict[str, Deque[int]] = {}
         self._wait_stats_cache: Optional[Dict] = None
@@ -171,6 +168,31 @@ class CNNBatcher:
             "ladder_hits": 0, "ladder_normalized": 0, "ladder_misses": 0,
             "window_waits": 0, "inflight_peak": 0, "noise_trials": 0,
         }
+
+    def _make_step(self, apply_fn):
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        if self._noisy:
+            nc = self.noise_config
+            return jax.jit(lambda x, key: apply_fn(x, noise=nc, rng=key),
+                           donate_argnums=donate)
+        return jax.jit(apply_fn, donate_argnums=donate)
+
+    def swap_apply_fn(self, apply_fn, *, step_fn=None):
+        """Hot-swap the served model between flushes.
+
+        The round-trip pipeline's serving edge: after a deploy-QAT
+        finetune, ``ConvertedStack.rederive`` (or ``convert_int``) yields
+        a fresh stack whose ``int_serve_fn`` closure swaps in here without
+        restarting the batcher. Queued-but-undispatched requests serve
+        under the NEW model on their next flush; results already in the
+        dispatch-ahead window were computed under the old one and resolve
+        normally. Per-bucket compiled executables for the new closure
+        compile lazily on first flush; ``n_signatures`` keeps counting
+        distinct (shape, slots) keys, not recompiles.
+        """
+        self.apply_fn = apply_fn
+        self._step = step_fn if step_fn is not None \
+            else self._make_step(apply_fn)
 
     # -- request intake -----------------------------------------------------
 

@@ -96,6 +96,33 @@ def make_grad_fn(model_cfg, qcfg: QuantConfig, tc: TrainConfig):
     return grad_fn
 
 
+def make_qat_train_step(qat_loss_fn, opt: Optimizer, *,
+                        clip_norm: Optional[float] = None):
+    """Deployment-in-the-loop train step (core/deploy_qat forward).
+
+    ``qat_loss_fn(params, batch, rng) -> scalar`` must run its forward
+    through a ``qat_apply`` (models/kws, models/darknet): the loss is then
+    evaluated on the DEPLOYED integer path — codes, in-kernel ADC noise,
+    ``mac_chunks`` — while gradients flow through the float FQ/STE
+    surrogate. ``rng`` should be the per-step key
+    (``deploy_qat.train_step_key(base, step_idx)``) so any step's noise
+    draw replays bit-exactly at serving. Returns one jitted
+    ``step(params, opt_state, batch, step_idx, rng) ->
+    (params, opt_state, metrics)``.
+    """
+
+    def step(params, opt_state, batch, step_idx, rng):
+        (l, grads) = jax.value_and_grad(qat_loss_fn)(params, batch, rng)
+        metrics = {"loss": l}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        params, opt_state = opt.update(params, grads, opt_state, step_idx)
+        return params, opt_state, metrics
+
+    return jax.jit(step)
+
+
 def make_train_step(model_cfg, qcfg: QuantConfig, opt: Optimizer,
                     tc: TrainConfig = TrainConfig(), mesh=None):
     """Returns step(params, opt_state, batch, step_idx) — pure function,

@@ -1,0 +1,439 @@
+"""Deployment-in-the-loop pipeline: ConvertedStack round-trip + the
+deploy-QAT forward's bit-parity contract.
+
+What the round-trip refactor must prove:
+  * conversion round-trip idempotence: ConvertedStack -> back-map
+    (``rederive``) -> re-convert is bit-exact (codes AND rescales) for
+    both stacks, pooled/fused layers included,
+  * the QAT forward (core/deploy_qat) is bit-identical to the deployed
+    integer path — zero-noise AND noisy (same codes, same noise draws for
+    the same seed/sigma/mac_chunks) — across the existing impl/pool
+    parity cases,
+  * at zero noise the QAT backward equals the float FQ/STE gradients
+    (the custom_vjp surrogate is exactly core/quant's STE chain),
+  * conversion-time validation raises clear errors (non-finite params,
+    violated hand-off contract) instead of silently clipping,
+  * the stand-in cache (benchmarks.common) hits per key,
+  * CNNBatcher hot-swaps a freshly rederived stack between flushes,
+  * a fast QAT train-step smoke (make ci) and the full Table-7 retrain
+    sweep (@slow).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import trained_int_params
+from repro.core import deploy_qat as dq
+from repro.core import integer_inference as ii
+from repro.core.noise import NoiseConfig, TABLE7_CONDITIONS
+from repro.core.quant import QuantConfig
+from repro.models import darknet, kws
+
+QCFG = QuantConfig(2, 4, 4, fq=True)
+
+
+def _kws():
+    cfg = kws.KWSConfig.reduced()
+    params, state, ip = trained_int_params(kws, cfg, kws.conv_names(cfg),
+                                           QCFG)
+    return cfg, params, state, ip
+
+
+def _darknet():
+    cfg = darknet.DarkNetConfig.reduced()
+    names = [f"conv{i}" for i in
+             range(len([l for l in cfg.layers if l != "M"]))]
+    params, state, ip = trained_int_params(darknet, cfg, names, QCFG,
+                                           s_out=0.2)
+    return cfg, params, state, ip
+
+
+# ---------------------------------------------------------------------------
+# ConvertedStack: round-trip idempotence + mapping compatibility
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ["kws", "darknet"])
+def test_roundtrip_idempotent(which):
+    """stack -> rederive(same params) -> bit-exact codes AND rescales,
+    including the darknet layers whose pools fuse into the conv epilogue."""
+    cfg, params, state, ip = _kws() if which == "kws" else _darknet()
+    again = ip.rederive({n: params[n] for n in ip.layer_names})
+    assert again.layer_names == ip.layer_names
+    for n in ip.layer_names:
+        np.testing.assert_array_equal(np.asarray(ip[n]["w_codes"]),
+                                      np.asarray(again[n]["w_codes"]))
+        np.testing.assert_array_equal(np.asarray(ip[n]["rescale"]),
+                                      np.asarray(again[n]["rescale"]))
+    # and a third generation from the second's specs: still identical
+    third = again.rederive({n: params[n] for n in again.layer_names})
+    for n in ip.layer_names:
+        np.testing.assert_array_equal(np.asarray(ip[n]["w_codes"]),
+                                      np.asarray(third[n]["w_codes"]))
+
+
+def test_stack_mapping_and_pytree():
+    cfg, params, state, ip = _kws()
+    assert "conv0" in ip and "embed" in ip and "missing" not in ip
+    assert set(ip.keys()) >= {"conv0", "embed", "head", "entry",
+                              "s_out_last"}
+    # pytree round-trip preserves layers, extras and the static ints
+    leaves, treedef = jax.tree_util.tree_flatten(ip)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back["conv0"]["n_out"] == ip["conv0"]["n_out"]
+    assert back["conv0"]["lo"] == ip["conv0"]["lo"]
+    np.testing.assert_array_equal(np.asarray(back["conv0"]["w_codes"]),
+                                  np.asarray(ip["conv0"]["w_codes"]))
+    # and it can cross a jit boundary as an argument
+    x = jax.random.normal(jax.random.key(0), (2, cfg.seq_len, cfg.n_mfcc))
+    direct = kws.int_apply(ip, x, QCFG, cfg)
+    jitted = jax.jit(lambda s, x_: kws.int_apply(s, x_, QCFG, cfg))(ip, x)
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(jitted))
+
+
+def test_rederive_refreshes_derivable_extras(node_seed):
+    """The decode scale (s_out_last) and entry scale are functions of the
+    layer params: rederive must refresh them, or the last layer's NEW
+    rescale would pair with the OLD decode scale and mis-scale every
+    output. Regression: rederive(moved scales) == full convert_int."""
+    cfg, params, state, ip = _kws()
+    names = list(ip.layer_names)
+    moved = {n: dict(params[n]) for n in names}
+    for n in names:  # a finetune-like drift of every output scale
+        moved[n]["s_out"] = moved[n]["s_out"] + 0.07
+    moved = ii.sync_handoff(moved, names)
+    fresh = ip.rederive(moved)
+    np.testing.assert_array_equal(np.asarray(fresh["s_out_last"]),
+                                  np.asarray(moved[names[-1]]["s_out"]))
+    full = ii.convert_stack(moved, QCFG,
+                            specs=[ii.LayerSpec(n) for n in names],
+                            extras=kws.int_extras(
+                                {**{n: moved[n] for n in names},
+                                 "embed": params["embed"],
+                                 "embed_bn": params["embed_bn"],
+                                 "head": params["head"]}, state, cfg))
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (2, cfg.seq_len, cfg.n_mfcc))
+    np.testing.assert_array_equal(
+        np.asarray(kws.int_apply(fresh, x, QCFG, cfg)),
+        np.asarray(kws.int_apply(full, x, QCFG, cfg)))
+
+
+def test_rederive_tracks_updated_weights():
+    """The back-map re-derives codes from NEW float weights — moving a
+    weight across a bin boundary must move its code."""
+    cfg, params, state, ip = _kws()
+    new = {n: dict(params[n]) for n in ip.layer_names}
+    new["conv0"]["w"] = -params["conv0"]["w"]  # sign flip: codes negate
+    fresh = ip.rederive(new)
+    c0, c1 = (np.asarray(s["w_codes"], np.int32)
+              for s in (ip["conv0"], fresh["conv0"]))
+    np.testing.assert_array_equal(c0, -c1)
+    # untouched layers stay bit-identical
+    np.testing.assert_array_equal(np.asarray(ip["conv1"]["w_codes"]),
+                                  np.asarray(fresh["conv1"]["w_codes"]))
+
+
+# ---------------------------------------------------------------------------
+# conversion-time validation (raise, don't silently clip)
+# ---------------------------------------------------------------------------
+
+
+def test_convert_layer_rejects_nonfinite():
+    from repro.core.fq_layers import init_fq_conv1d
+    p = init_fq_conv1d(jax.random.key(0), 3, 4, 4)
+    bad = dict(p, w=p["w"].at[0, 0, 0].set(jnp.nan))
+    with pytest.raises(ValueError, match="non-finite weights"):
+        ii.convert_layer(bad, QCFG, name="conv0")
+    bad = dict(p, s_w=jnp.float32(jnp.inf))
+    with pytest.raises(ValueError, match="non-finite scale|scalar"):
+        ii.convert_layer(bad, QCFG, name="conv0")
+    # validate=False (the in-jit QAT path) skips the host checks
+    ii.convert_layer(dict(p), QCFG, validate=False)
+
+
+def test_convert_stack_validates_handoff():
+    cfg, params, state, ip = _kws()
+    broken = {n: dict(params[n]) for n in ip.layer_names}
+    broken["conv1"]["s_in"] = broken["conv1"]["s_in"] + 0.5
+    with pytest.raises(ValueError, match="hand-off contract"):
+        ii.convert_stack(broken, QCFG,
+                         specs=[ii.LayerSpec(n) for n in ip.layer_names],
+                         extras={})
+    # sync_handoff repairs the chain, functionally (input untouched)
+    fixed = ii.sync_handoff(broken, list(ip.layer_names))
+    assert float(broken["conv1"]["s_in"]) != float(fixed["conv1"]["s_in"])
+    ii.convert_stack(fixed, QCFG,
+                     specs=[ii.LayerSpec(n) for n in ip.layer_names],
+                     extras={})
+
+
+# ---------------------------------------------------------------------------
+# QAT forward bit-parity with the deployed integer path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["im2col", "fused"])
+def test_kws_qat_forward_bit_identical(impl, node_seed):
+    cfg, params, state, ip = _kws()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (3, cfg.seq_len, cfg.n_mfcc))
+    # zero noise, with and without an rng threaded
+    for noise, rng in [(None, None),
+                       (NoiseConfig(0, 0, 0), jax.random.key(1))]:
+        yi = kws.int_apply(ip, x, QCFG, cfg, impl=impl, noise=noise, rng=rng)
+        yq = kws.qat_apply(params, state, x, QCFG, cfg, impl=impl,
+                           noise=noise, rng=rng)
+        np.testing.assert_array_equal(np.asarray(yi), np.asarray(yq))
+    # deployed noise field: same seed/sigma/mac_chunks -> same draws
+    for nc in TABLE7_CONDITIONS[-2:]:
+        for chunks in (1, 4):
+            rng = jax.random.key(node_seed + chunks)
+            yi = kws.int_apply(ip, x, QCFG, cfg, impl=impl, noise=nc,
+                               rng=rng, mac_chunks=chunks)
+            yq = kws.qat_apply(params, state, x, QCFG, cfg, impl=impl,
+                               noise=nc, rng=rng, mac_chunks=chunks)
+            np.testing.assert_array_equal(np.asarray(yi), np.asarray(yq))
+
+
+@pytest.mark.parametrize("impl", ["im2col", "fused"])
+@pytest.mark.parametrize("fuse_pool", [False, True])
+def test_darknet_qat_forward_bit_identical(impl, fuse_pool, node_seed):
+    """The existing stride/padding/pool parity cases (fused conv+pool
+    epilogue vs conv-then-code-pool), now proved for the QAT forward."""
+    cfg, params, state, ip = _darknet()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (2, 16, 16, cfg.in_channels))
+    yi = darknet.int_apply(ip, x, QCFG, cfg, impl=impl, fuse_pool=fuse_pool)
+    yq = darknet.qat_apply(params, state, x, QCFG, cfg, impl=impl,
+                           fuse_pool=fuse_pool)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yq))
+    nc = TABLE7_CONDITIONS[-1]
+    rng = jax.random.key(node_seed + 1)
+    yi = darknet.int_apply(ip, x, QCFG, cfg, impl=impl, fuse_pool=fuse_pool,
+                           noise=nc, rng=rng, mac_chunks=2)
+    yq = darknet.qat_apply(params, state, x, QCFG, cfg, impl=impl,
+                           fuse_pool=fuse_pool, noise=nc, rng=rng,
+                           mac_chunks=2)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yq))
+
+
+def test_qat_forward_jit_parity(node_seed):
+    """jit(qat_apply) == eager qat_apply == int_apply (the training step
+    runs jitted; the contract must survive compilation)."""
+    cfg, params, state, ip = _kws()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (2, cfg.seq_len, cfg.n_mfcc))
+    nc = TABLE7_CONDITIONS[-1]
+    rng = jax.random.key(node_seed + 2)
+    eager = kws.qat_apply(params, state, x, QCFG, cfg, noise=nc, rng=rng)
+    jitted = jax.jit(
+        lambda p, x_, r: kws.qat_apply(p, state, x_, QCFG, cfg,
+                                       noise=nc, rng=r))(params, x, rng)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+    np.testing.assert_array_equal(
+        np.asarray(eager),
+        np.asarray(kws.int_apply(ip, x, QCFG, cfg, noise=nc, rng=rng)))
+
+
+# ---------------------------------------------------------------------------
+# QAT backward: the float FQ/STE gradients
+# ---------------------------------------------------------------------------
+
+
+def test_zero_noise_weight_grads_match_float_path(node_seed):
+    """At zero noise the QAT forward's values equal the float FQ path's
+    (proved above), and its custom_vjp backward must reproduce the float
+    path's STE gradients for the conv weights and the FP edge layers.
+    (Scale grads differ in STRUCTURE by design: the QAT forward ties
+    s_in[i] := s_out[i-1], so layer i's input-quantizer gradient lands on
+    s_out[i-1] instead of the stale stored s_in[i].)"""
+    cfg, params, state, ip = _kws()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (4, cfg.seq_len, cfg.n_mfcc))
+
+    def loss_qat(p):
+        return jnp.sum(kws.qat_apply(p, state, x, QCFG, cfg) ** 2)
+
+    def loss_float(p):
+        y, _ = kws.apply(p, state, x, QCFG, cfg, train=False)
+        return jnp.sum(y ** 2)
+
+    g_qat = jax.grad(loss_qat)(params)
+    g_float = jax.grad(loss_float)(params)
+    for n in kws.conv_names(cfg):
+        np.testing.assert_allclose(np.asarray(g_qat[n]["w"]),
+                                   np.asarray(g_float[n]["w"]),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g_qat[n]["s_w"]),
+                                   np.asarray(g_float[n]["s_w"]),
+                                   rtol=1e-4, atol=1e-5)
+    for n in ("embed", "head"):
+        np.testing.assert_allclose(np.asarray(g_qat[n]["w"]),
+                                   np.asarray(g_float[n]["w"]),
+                                   rtol=1e-4, atol=1e-5)
+    # tied-scale bookkeeping: qat's s_out[i-1] grad absorbs float's
+    # s_in[i] grad (the same quantizer, addressed through the tie)
+    for a, b in zip(kws.conv_names(cfg), kws.conv_names(cfg)[1:]):
+        want = np.asarray(g_float[a]["s_out"]) + np.asarray(g_float[b]["s_in"])
+        np.testing.assert_allclose(np.asarray(g_qat[a]["s_out"]), want,
+                                   rtol=1e-4, atol=1e-5)
+        assert float(g_qat[b]["s_in"]) == 0.0  # stale by design
+
+
+def test_noisy_grads_finite_and_nonzero(node_seed):
+    cfg, params, state, ip = _darknet()
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (2, 16, 16, cfg.in_channels))
+    nc = TABLE7_CONDITIONS[-1]
+
+    def loss(p):
+        y = darknet.qat_apply(p, state, x, QCFG, cfg, noise=nc,
+                              rng=jax.random.key(node_seed + 1))
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(params)
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(v)).all() for v in leaves)
+    total = sum(float(jnp.sum(jnp.abs(v))) for v in leaves)
+    assert total > 0.0
+
+
+# ---------------------------------------------------------------------------
+# stand-in cache (benchmarks.common)
+# ---------------------------------------------------------------------------
+
+
+def test_trained_int_params_cache_hits_per_key():
+    import benchmarks.common as common
+    cfg = kws.KWSConfig.reduced()
+    names = kws.conv_names(cfg)
+    a = common.trained_int_params(kws, cfg, names, QCFG)
+    b = common.trained_int_params(kws, cfg, names, QCFG)
+    assert a[0] is b[0] and a[2] is b[2]  # exact hit: same objects
+    c = common.trained_int_params(kws, cfg, names, QCFG, s_out=0.35)
+    assert c[2] is not a[2]               # different key, fresh build
+    d = common.trained_int_params(kws, cfg, names, QCFG, seed=1)
+    assert d[2] is not a[2]
+
+
+# ---------------------------------------------------------------------------
+# serving hot-swap: rederived stack into a live batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_hot_swaps_rederived_stack(node_seed):
+    from repro.serve.cnn_batching import CNNBatcher, CNNRequest
+    cfg, params, state, ip = _kws()
+    rng = np.random.default_rng(node_seed)
+    xs = rng.standard_normal((8, cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+
+    # a "retrained" checkpoint: perturb the conv weights, rederive
+    new_params = {n: dict(params[n]) for n in ip.layer_names}
+    key = jax.random.key(node_seed)
+    for n in ip.layer_names:
+        new_params[n]["w"] = params[n]["w"] + 0.3 * jax.random.normal(
+            jax.random.fold_in(key, hash(n) & 0xFFFF), params[n]["w"].shape)
+    new_ip = ip.rederive(new_params)
+    assert any(
+        not np.array_equal(np.asarray(ip[n]["w_codes"]),
+                           np.asarray(new_ip[n]["w_codes"]))
+        for n in ip.layer_names)
+
+    b = CNNBatcher(kws.int_serve_fn(ip, QCFG, cfg), max_batch=4,
+                   max_wait_ticks=0)
+    out_old = b.run([CNNRequest(rid=i, x=xs[i]) for i in range(4)])
+    b.swap_apply_fn(kws.int_serve_fn(new_ip, QCFG, cfg))
+    out_new = b.run([CNNRequest(rid=4 + i, x=xs[4:][i]) for i in range(4)])
+
+    want_old = np.asarray(kws.int_apply(ip, jnp.asarray(xs[:4]), QCFG, cfg))
+    want_new = np.asarray(kws.int_apply(new_ip, jnp.asarray(xs[4:]),
+                                        QCFG, cfg))
+    for i in range(4):
+        np.testing.assert_array_equal(out_old[i], want_old[i])
+        np.testing.assert_array_equal(out_new[4 + i], want_new[i])
+
+
+def test_hot_swap_inflight_resolves_under_old_model(node_seed):
+    """Dispatch-ahead: results parked in the window before the swap were
+    computed under the OLD stack and must resolve to its outputs."""
+    from repro.serve.cnn_batching import CNNBatcher, CNNRequest
+    cfg, params, state, ip = _kws()
+    new_params = {n: dict(params[n]) for n in ip.layer_names}
+    new_params[ip.layer_names[0]]["w"] = -params[ip.layer_names[0]]["w"]
+    new_ip = ip.rederive(new_params)
+
+    rng = np.random.default_rng(node_seed + 1)
+    xs = rng.standard_normal((4, cfg.seq_len, cfg.n_mfcc)).astype(np.float32)
+    b = CNNBatcher(kws.int_serve_fn(ip, QCFG, cfg), max_batch=4,
+                   max_wait_ticks=0, dispatch_ahead=True, max_inflight=2)
+    reqs = [CNNRequest(rid=i, x=xs[i]) for i in range(4)]
+    b.submit(reqs)
+    b.tick()                      # dispatches under the OLD stack
+    assert b.in_flight == 4
+    b.swap_apply_fn(kws.int_serve_fn(new_ip, QCFG, cfg))
+    b.drain()                     # resolves the parked result
+    want_old = np.asarray(kws.int_apply(ip, jnp.asarray(xs), QCFG, cfg))
+    for i in range(4):
+        np.testing.assert_array_equal(reqs[i].out, want_old[i])
+
+
+# ---------------------------------------------------------------------------
+# QAT training: fast smoke (make ci) + the full retrain sweep (slow)
+# ---------------------------------------------------------------------------
+
+
+def test_qat_train_step_smoke(node_seed):
+    """Two deploy-QAT train steps: loss finite, params move, and the
+    retrained params convert through the back-map (sync + rederive)."""
+    from repro.core import distill
+    from repro.optim import schedules, sgd
+    from repro.train.trainer import make_qat_train_step
+    cfg, params, state, ip = _kws()
+    nc = TABLE7_CONDITIONS[-1]
+    x = jax.random.normal(jax.random.key(node_seed),
+                          (8, cfg.seq_len, cfg.n_mfcc))
+    y = jax.random.randint(jax.random.key(node_seed + 1), (8,), 0,
+                           cfg.num_classes)
+
+    def loss_fn(p, batch, rng):
+        xb, yb = batch
+        logits = kws.qat_apply(p, state, xb, QCFG, cfg, noise=nc, rng=rng)
+        onehot = jax.nn.one_hot(yb, cfg.num_classes)
+        return jnp.mean(distill.softmax_cross_entropy(logits, onehot))
+
+    opt = sgd.make(schedules.constant(0.01))
+    ost = opt.init(params)
+    p = params
+    base = jax.random.key(node_seed + 2)
+    step = make_qat_train_step(loss_fn, opt, clip_norm=1.0)
+    for i in range(2):
+        p, ost, m = step(p, ost, (x, y), jnp.int32(i),
+                         dq.train_step_key(base, i))
+        assert np.isfinite(float(m["loss"]))
+    assert not np.array_equal(np.asarray(p["conv0"]["w"]),
+                              np.asarray(params["conv0"]["w"]))
+    synced = ii.sync_handoff(p, kws.conv_names(cfg))
+    fresh = ip.rederive({n: synced[n] for n in ip.layer_names})
+    out = kws.int_apply(fresh, x, QCFG, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.slow
+def test_table7_retrain_sweep_noise_trained_no_worse(tmp_path):
+    """The full deployment-in-the-loop Table-7 retrain comparison (the
+    acceptance bar): at the two highest conditions, training against the
+    deployed noise field must not lose clean-agreement vs the matched
+    clean-finetune arm, and the QAT forward bit-parity re-proof must
+    hold. Deterministic seeds; bench-sized but writes to a tmp artifact."""
+    from benchmarks import noise_sweep
+    doc = noise_sweep.run_retrain(
+        pretrain_steps=300, ft_steps=200, trials=5, n_eval=128,
+        out_path=str(tmp_path / "BENCH_noise.json"))
+    rows = doc["retrained"]["rows"]
+    assert doc["retrained"]["qat_forward_bit_parity"] is True
+    assert len(rows) == 2
+    for r in rows:
+        assert r["noise_trained_no_worse"], r
+        assert 0.0 <= r["agreement_noise_trained"] <= 1.0
