@@ -12,16 +12,23 @@
 #                      rows in BENCH_noise.json); full: run.py --only retrain
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
+#   make analyze     — static quantization-contract verifier (repro.analysis):
+#                      traces the integer cores (purity + int32 overflow
+#                      proofs at mac_chunks 1/4/16), lints the deployment
+#                      stacks (hand-off/seeds/rescale) and the autotune
+#                      table (schema/BlockSpec/VMEM); writes
+#                      BENCH_analysis.json and exits non-zero on ANY
+#                      unsuppressed finding (docs/ANALYSIS.md)
 #   make lint        — byte-compile + import sanity (no external deps)
-#   make check       — lint + tier-1 tests: the full pre-PR loop
-#   make ci          — lint + fast tests (excludes @pytest.mark.slow, i.e.
-#                      the serve_mixed trace-replay benchmark test)
+#   make check       — lint + analyze + tier-1 tests: the full pre-PR loop
+#   make ci          — lint + analyze + fast tests (excludes
+#                      @pytest.mark.slow and @pytest.mark.mutation)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench conv bench-serve bench-mixed bench-noise bench-retrain \
-	autotune lint check ci
+	autotune analyze lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -47,6 +54,9 @@ bench-retrain:
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
 
+analyze:
+	$(PYTHON) -m repro.analysis --json BENCH_analysis.json
+
 lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
 	$(PYTHON) -c "import repro.kernels.ops, repro.kernels.fq_conv, \
@@ -54,9 +64,11 @@ lint:
 	repro.core.deploy_qat, \
 	repro.models.kws, repro.models.darknet, repro.models.frontends, \
 	repro.serve.cnn_batching, repro.serve.shape_ladder, \
+	repro.analysis, repro.analysis.absint, repro.analysis.intlint, \
+	repro.analysis.planlint, repro.analysis.kernellint, \
 	repro.train.trainer; print('imports ok')"
 
-check: lint test
+check: lint analyze test
 
-ci: lint
-	$(PYTHON) -m pytest -q -m "not slow"
+ci: lint analyze
+	$(PYTHON) -m pytest -q -m "not slow and not mutation"

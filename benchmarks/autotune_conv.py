@@ -36,14 +36,23 @@ from benchmarks import common
 
 # One canonical shape per (kh, kw, stride) table key. B=2 matches the
 # batch-folded serving grid; pooled variants ride the same key (the pool
-# only changes the epilogue, not the blocking trade-off).
+# only changes the epilogue, not the blocking trade-off). ``ks`` is an int
+# (square) or a (kh, kw) pair — the KWS stack serves 1-D convs as
+# (ksize, 1) kernels on (B, T, 1, C) planes, under their own table key.
 SHAPES = [
     # name,            B, H,  W,  cin, cout, ks, stride, pad, pool
     ("darknet_3x3_s1", 2, 28, 28, 32,  64,   3,  1,      1,   None),
     ("darknet_3x3_pool", 2, 28, 28, 32, 64,  3,  1,      1,   2),
     ("downsample_3x3_s2", 2, 28, 28, 64, 128, 3,  2,      1,   None),
     ("pointwise_1x1",  2, 14, 14, 128, 128,  1,  1,      0,   None),
+    # KWS dilated conv1d: dilation only moves the element-offset index map
+    # (it is free), so one undilated (3, 1) sweep covers the whole ladder.
+    ("kws_3x1_s1",     2, 138, 1, 45,  45, (3, 1), 1,    0,   None),
 ]
+
+
+def _khkw(ks):
+    return ks if isinstance(ks, tuple) else (ks, ks)
 
 # --dry-run: one tiny shape, minimal candidates — exercises the full
 # sweep -> verify -> persist pipeline in seconds (schema/round-trip tests).
@@ -52,7 +61,7 @@ DRY_SHAPES = [
 ]
 
 
-def _candidates(*, ho, cin, cout, pool, full: bool):
+def _candidates(*, ho, wo, cin, cout, kh, kw, pool, full: bool):
     bhos = [8, 16, 32, 64, 128] if full else [8, 32, 128]
     bcos = [32, 64, 128, 256] if full else [64, 128]
     bcs = [d for d in (8, 16, 32, 64, 128, 256) if cin % d == 0] or [cin]
@@ -65,7 +74,7 @@ def _candidates(*, ho, cin, cout, pool, full: bool):
                 # normalize to what pick_blocks will actually use, so the
                 # sweep doesn't time the same effective blocking twice
                 eff = fq_conv.pick_blocks(
-                    ho=ho, wo=ho, cin=cin, cout=cout, kh=3, kw=3,
+                    ho=ho, wo=wo, cin=cin, cout=cout, kh=kh, kw=kw,
                     stride=(1, 1), pool=(pool, pool) if pool else None,
                     bho=bho, bco=bco, bc=bc)
                 if eff in seen:
@@ -77,9 +86,11 @@ def _candidates(*, ho, cin, cout, pool, full: bool):
 
 def _time_one(a, w, scale, *, ks, stride, pad, pool, bho, bco, bc, interpret,
               reps=2):
+    kh, kw = _khkw(ks)
+
     def call():
         return fq_conv.fq_conv2d(
-            a, w, scale, kh=ks, kw=ks, stride=(stride, stride),
+            a, w, scale, kh=kh, kw=kw, stride=(stride, stride),
             padding=(pad, pad), pool=(pool, pool) if pool else None,
             n_out=15, lo=0, bho=bho, bco=bco, bc=bc, interpret=interpret)
     return call, common.timer(call, reps=reps)
@@ -91,22 +102,24 @@ def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
     rows, winners = [], {}
     k1, k2 = jax.random.split(jax.random.key(0))
     for name, B, H, W, cin, cout, ks, stride, pad, pool in shapes:
+        kh, kw = _khkw(ks)
         a = jax.random.randint(k1, (B, H, W, cin), 0, 16).astype(jnp.int8)
-        w = jax.random.randint(k2, (ks * ks * cin, cout), -7, 8
+        w = jax.random.randint(k2, (kh * kw * cin, cout), -7, 8
                                ).astype(jnp.int8)
         scale = jnp.float32(0.01)
-        ho = (H + 2 * pad - ks) // stride + 1
+        ho = (H + 2 * pad - kh) // stride + 1
+        wo = (W + 2 * pad - kw) // stride + 1
         ref_call, _ = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
                                 pool=pool, bho=None, bco=None, bc=None,
                                 interpret=interpret, reps=reps)
         ref = np.asarray(ref_call())
         best = None
-        for bho, bco, bc in _candidates(ho=ho, cin=cin, cout=cout, pool=pool,
-                                        full=full):
+        for bho, bco, bc in _candidates(ho=ho, wo=wo, cin=cin, cout=cout,
+                                        kh=kh, kw=kw, pool=pool, full=full):
             call, us = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
                                  pool=pool, bho=bho, bco=bco, bc=bc,
                                  interpret=interpret, reps=reps)
-            rows.append(dict(shape=name, kh=ks, kw=ks, stride=stride,
+            rows.append(dict(shape=name, kh=kh, kw=kw, stride=stride,
                              pool=pool, bho=bho, bco=bco, bc=bc,
                              wall_us=round(us, 1)))
             if best is None or us < best[0]:
@@ -115,11 +128,11 @@ def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
         us, (bho, bco, bc), call = best
         # blocking must never change the codes — verify the winner
         np.testing.assert_array_equal(np.asarray(call()), ref)
-        key = (ks, ks, stride)
+        key = (kh, kw, stride)
         # the unpooled canonical shape owns the key; pooled variant only
         # claims it if nothing else has
         if key not in winners or pool is None:
-            winners[key] = dict(kh=ks, kw=ks, stride=stride, bho=bho,
+            winners[key] = dict(kh=kh, kw=kw, stride=stride, bho=bho,
                                 bco=bco, bc=bc, wall_us=round(us, 1),
                                 shape=name, ho=ho)
             # a bho that equals the sweep shape's (pool-rounded) output
@@ -128,6 +141,12 @@ def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
             plane = ho - (ho % pool) if pool else ho
             if bho >= plane:
                 winners[key].pop("bho")
+            # likewise bc == cin is "no channel blocking", not a measured
+            # sub-blocking choice; persisting it would force a non-divisor
+            # (rounded-down) bc onto served shapes with a different cin
+            # under the same key (e.g. kws conv0's embed width)
+            if bc >= cin:
+                winners[key].pop("bc")
         print(f"autotune,{name}_winner,bho={bho} bco={bco} bc={bc},{us:.0f}us")
     return backend, rows, winners
 

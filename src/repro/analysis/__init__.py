@@ -1,0 +1,27 @@
+"""Static quantization-contract verifier for the integer deployment path.
+
+Three passes over the FQ-Conv serving stacks, one report, one exit code:
+
+* :mod:`.intlint` — traces the integer cores (``int_core``) to jaxprs and
+  abstractly interprets them (:mod:`.absint`): integer purity (no float
+  promotion of code-derived data outside the sanctioned requant/dequant
+  edges) and int32 accumulator safety at worst-case contract bounds, for
+  every impl x noise x ``mac_chunks`` configuration served;
+* :mod:`.planlint` — deployment-artifact lints: scale hand-off, rescale
+  representability, fused-pool legality, noise-seed uniqueness, pytree
+  static-aux consistency;
+* :mod:`.kernellint` — autotune-table schema, BlockSpec/grid divisibility
+  and static VMEM footprint for every served conv geometry.
+
+Run ``python -m repro.analysis`` (or ``make analyze``); findings gate CI
+via the exit code (any unsuppressed finding at/above ``--fail-on``,
+default ``warning``). Suppressions are explicit and reasoned — see
+docs/ANALYSIS.md.
+"""
+from .report import Finding, Report, Severity, Suppression  # noqa: F401
+from .targets import (  # noqa: F401
+    darknet_target,
+    default_targets,
+    kws_target,
+    run_analysis,
+)

@@ -1,0 +1,256 @@
+"""kernellint: autotune-table schema + BlockSpec/grid/VMEM checks.
+
+A bad ``autotune_table.json`` row should be a lint error, not a Mosaic
+crash (or a silent fallback). Three layers of checking:
+
+* **schema** — the raw JSON is validated directly (format tag, backend
+  string, integer knobs, positive values), *independently* of the active
+  backend: the loader silently skips malformed entries, the linter does
+  not;
+* **per-shape** — every conv geometry a stack actually serves is pushed
+  through ``pick_blocks`` and the resulting (bho, bco, bc) is checked
+  for grid divisibility (bc | cin, pool-aligned bho, positive grid) and
+  static VMEM footprint against the per-backend budget;
+* **coverage** — served shape keys without a *measured* entry for the
+  active backend are counted as structured misses (mirroring
+  ``fq_conv.AutotuneMissWarning`` at serve time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from ..kernels import fq_conv
+from .report import Report
+
+# Hard lint ceiling for one grid step's static VMEM: the picker *targets*
+# fq_conv._VMEM_BUDGET, but explicit/table knobs may exceed it; past 2x the
+# target a TPU core's ~16 MiB VMEM (double-buffered pipelines, both
+# operands resident) is at real risk, so the linter draws the line there.
+VMEM_LINT_BUDGET = {
+    "tpu": 2 * fq_conv._VMEM_BUDGET,
+    # interpret-mode backends have no VMEM, but keeping the same ceiling
+    # means a table tuned on CPU cannot smuggle an over-budget row onto TPU
+    "cpu": 2 * fq_conv._VMEM_BUDGET,
+    "gpu": 2 * fq_conv._VMEM_BUDGET,
+}
+
+_KNOBS = ("bho", "bco", "bc")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """One conv geometry a stack serves (post-padding output extents)."""
+
+    name: str                      # "kws/conv3"
+    ho: int
+    wo: int
+    cin: int
+    cout: int
+    kh: int
+    kw: int
+    stride: Tuple[int, int] = (1, 1)
+    pool: Optional[Tuple[int, int]] = None
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.kh, self.kw, self.stride[0])
+
+
+def lint_table_schema(report: Report,
+                      path: str = fq_conv.AUTOTUNE_TABLE_PATH):
+    """Validate the raw JSON: every row must be loadable on its backend."""
+    subject = f"autotune:{path.rsplit('/', 1)[-1]}"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError:
+        report.info("kernellint/table-schema", subject,
+                    "no autotune table on disk — builtin defaults only")
+        return
+    except ValueError as e:
+        report.error("kernellint/table-schema", subject,
+                     f"unparseable JSON: {e}")
+        return
+    if not isinstance(doc, dict):
+        report.error("kernellint/table-schema", subject,
+                     f"top level is {type(doc).__name__}, expected object")
+        return
+    if doc.get("format") != 1:
+        report.error("kernellint/table-schema", subject,
+                     f"format={doc.get('format')!r} (expected 1) — the "
+                     "loader ignores the whole file")
+    if not isinstance(doc.get("backend"), str) or not doc.get("backend"):
+        report.error("kernellint/table-schema", subject,
+                     f"backend={doc.get('backend')!r} is not a non-empty "
+                     "string — entries can never match any backend")
+    entries = doc.get("entries", [])
+    if not isinstance(entries, list):
+        report.error("kernellint/table-schema", subject,
+                     f"entries is {type(entries).__name__}, expected list")
+        return
+    seen = {}
+    bad = 0
+    for i, e in enumerate(entries):
+        esub = f"{subject}[{i}]"
+        if not isinstance(e, dict):
+            bad += 1
+            report.error("kernellint/table-schema", esub,
+                         f"entry is {type(e).__name__}, expected object")
+            continue
+        try:
+            key = (int(e["kh"]), int(e["kw"]), int(e["stride"]))
+        except (KeyError, TypeError, ValueError):
+            bad += 1
+            report.error(
+                "kernellint/table-schema", esub,
+                f"missing/non-integer shape key fields in {e!r} — the "
+                "loader silently skips this row", entry=repr(e))
+            continue
+        if any(k <= 0 for k in key):
+            bad += 1
+            report.error("kernellint/table-schema", esub,
+                         f"non-positive shape key {key}", key=key)
+        knobs = {}
+        for k in _KNOBS:
+            if k not in e or e[k] is None:
+                continue
+            if not isinstance(e[k], int) or isinstance(e[k], bool) \
+                    or e[k] < 1:
+                bad += 1
+                report.error(
+                    "kernellint/table-schema", esub,
+                    f"knob {k}={e[k]!r} is not a positive int — the "
+                    "loader silently drops this row", knob=k,
+                    value=repr(e[k]))
+            else:
+                knobs[k] = e[k]
+        if not knobs:
+            report.warning("kernellint/table-schema", esub,
+                           f"entry {key} carries no block knobs — it "
+                           "overrides builtins with nothing", key=key)
+        if key in seen:
+            report.error("kernellint/table-schema", esub,
+                         f"duplicate entry for key {key} (first at index "
+                         f"{seen[key]}) — last-writer-wins is ambiguous",
+                         key=key, first=seen[key])
+        else:
+            seen[key] = i
+    report.count("kernellint/table-entries", len(entries))
+    if not bad and entries:
+        report.prove("kernellint/table-schema", subject,
+                     f"all {len(entries)} rows well-formed "
+                     f"(backend={doc.get('backend')!r})")
+
+
+def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
+                backend: Optional[str] = None,
+                table: Optional[dict] = None,
+                measured: Optional[set] = None):
+    """Push every served geometry through the block picker and check the
+    result. ``table``/``measured`` default to the live fq_conv caches
+    (pass explicit values to lint a candidate table file)."""
+    backend = backend or jax.default_backend()
+    budget = VMEM_LINT_BUDGET.get(backend, 2 * fq_conv._VMEM_BUDGET)
+    if table is None:
+        table = fq_conv._autotune_table()
+        measured = fq_conv.MEASURED_KEYS or set()
+    measured = measured or set()
+
+    clean = True
+    missed = {}
+    for s in shapes:
+        sub = s.name
+        over = table.get(s.key, {})
+        # mirror serve-time semantics for the table's bc knob: pick_blocks
+        # rounds a table bc down to a cin divisor (only an *explicit* bc
+        # must divide exactly), so a non-divisor row serves fine — but the
+        # measured winner silently doesn't apply, which is worth a warning
+        over_bc = over.get("bc")
+        if over_bc is not None and s.cin % over_bc != 0:
+            eff = fq_conv._divisor_at_most(s.cin, over_bc)
+            report.warning(
+                "kernellint/table-drift", sub,
+                f"table bc={over_bc} for key {s.key} does not divide "
+                f"cin={s.cin} — serving rounds down to bc={eff}, so the "
+                "measured winner is not what actually runs",
+                key=s.key, table_bc=over_bc, effective_bc=eff)
+            over_bc = eff
+        try:
+            bho, bco, bc = fq_conv.pick_blocks(
+                ho=s.ho, wo=s.wo, cin=s.cin, cout=s.cout, kh=s.kh,
+                kw=s.kw, stride=s.stride, pool=s.pool,
+                bho=over.get("bho"), bco=over.get("bco"), bc=over_bc)
+        except ValueError as e:
+            clean = False
+            report.error("kernellint/blockspec", sub,
+                         f"pick_blocks rejected table knobs {over} for "
+                         f"{s}: {e}", key=s.key, knobs=over)
+            continue
+
+        # grid divisibility invariants the kernel's index maps assume
+        if s.cin % bc != 0:
+            clean = False
+            report.error(
+                "kernellint/blockspec", sub,
+                f"bc={bc} does not divide cin={s.cin} — weight-row reads "
+                "cross a tap boundary", bc=bc, cin=s.cin)
+        if s.pool is not None and bho % s.pool[0] != 0:
+            clean = False
+            report.error(
+                "kernellint/blockspec", sub,
+                f"bho={bho} not a multiple of fused pool height "
+                f"{s.pool[0]} — pool windows straddle the row tile",
+                bho=bho, pool=s.pool)
+        if bco < 1 or bho < 1 or bc < 1:
+            clean = False
+            report.error("kernellint/blockspec", sub,
+                         f"non-positive block ({bho}, {bco}, {bc})")
+        n_red = s.kh * s.kw * (s.cin // max(bc, 1))
+        grid = (math.ceil(s.ho / bho) * 1, math.ceil(s.cout / bco), n_red)
+        if any(g < 1 for g in grid):
+            clean = False
+            report.error("kernellint/blockspec", sub,
+                         f"degenerate grid {grid}", grid=grid)
+
+        vmem = fq_conv.vmem_footprint(bho=bho, wo=s.wo, bco=bco, bc=bc,
+                                      stride=s.stride)
+        report.count("kernellint/shapes-checked")
+        if vmem > budget:
+            clean = False
+            report.error(
+                "kernellint/vmem", sub,
+                f"static VMEM footprint {vmem / 2**20:.2f} MiB for blocks "
+                f"({bho}, {bco}, {bc}) exceeds the {backend} lint budget "
+                f"{budget / 2**20:.2f} MiB — this row OOMs before it "
+                "computes", vmem_bytes=vmem, budget=budget,
+                blocks=(bho, bco, bc))
+
+        if s.key not in measured:
+            missed.setdefault(s.key, []).append(s.name)
+
+    for key, names in sorted(missed.items()):
+        report.warning(
+            "kernellint/autotune-miss", names[0],
+            f"served shape key {key} has no measured autotune entry for "
+            f"backend {backend!r} ({len(names)} layer(s): "
+            f"{', '.join(names)}) — serving falls back to builtin "
+            "defaults", key=key, backend=backend, layers=names)
+        report.count("kernellint/autotune-misses")
+
+    if clean and shapes:
+        report.prove(
+            "kernellint/blockspec", f"{len(shapes)} served shapes",
+            f"block picks divide their grids and fit the {backend} VMEM "
+            f"lint budget ({budget / 2**20:.1f} MiB)",
+            shapes=len(shapes))
+
+
+def runtime_miss_counters(report: Report):
+    """Fold fq_conv's serve-time miss counters into the report."""
+    for key, n in sorted(fq_conv.AUTOTUNE_MISSES.items()):
+        report.count(f"kernellint/runtime-miss:{key}", n)

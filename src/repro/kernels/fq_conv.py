@@ -46,6 +46,7 @@ from __future__ import annotations
 import functools
 import json
 import os
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -69,6 +70,22 @@ _BUILTIN_TABLE: dict = {
 
 AUTOTUNE_TABLE_PATH = os.path.join(os.path.dirname(__file__),
                                    "autotune_table.json")
+
+
+class AutotuneMissWarning(UserWarning):
+    """A served conv shape has no *measured* autotune entry for the active
+    backend family — block sizes fall back to builtin defaults / the VMEM
+    heuristic. Structured: ``.key`` is the (kh, kw, stride) lookup key and
+    ``.backend`` the backend it was missing for, so the analysis report
+    can count misses instead of scraping warning text."""
+
+    def __init__(self, key: Tuple[int, int, int], backend: str):
+        self.key = key
+        self.backend = backend
+        super().__init__(
+            f"no measured autotune entry for conv shape key {key} on "
+            f"backend {backend!r}; falling back to builtin defaults "
+            "(run benchmarks/autotune_conv.py --record to measure it)")
 
 
 def load_autotune_table(path: str = AUTOTUNE_TABLE_PATH) -> dict:
@@ -102,13 +119,58 @@ def load_autotune_table(path: str = AUTOTUNE_TABLE_PATH) -> dict:
 # asks jax for the backend, and forcing backend initialization as an import
 # side effect would break callers that configure platforms after import.
 AUTOTUNE_TABLE: Optional[dict] = None
+# Keys whose knobs came from a measured (backend-matching) JSON entry, as
+# opposed to the builtin defaults — the miss warning keys off this set.
+MEASURED_KEYS: Optional[set] = None
+# (kh, kw, stride) -> number of pick_blocks lookups that missed a measured
+# entry; repro.analysis folds these counts into its report.
+AUTOTUNE_MISSES: dict = {}
+_WARNED_KEYS: set = set()
+
+
+def measured_keys(path: str = AUTOTUNE_TABLE_PATH) -> set:
+    """Lookup keys with a measured entry for the active backend."""
+    keys = set()
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return keys
+    if not isinstance(doc, dict) or doc.get("format") != 1 \
+            or doc.get("backend") != jax.default_backend():
+        return keys
+    for e in doc.get("entries", []):
+        try:
+            keys.add((int(e["kh"]), int(e["kw"]), int(e["stride"])))
+        except (KeyError, TypeError, ValueError):
+            continue
+    return keys
 
 
 def _autotune_table() -> dict:
-    global AUTOTUNE_TABLE
+    global AUTOTUNE_TABLE, MEASURED_KEYS
     if AUTOTUNE_TABLE is None:
         AUTOTUNE_TABLE = load_autotune_table()
+        MEASURED_KEYS = measured_keys()
     return AUTOTUNE_TABLE
+
+
+def reset_autotune_cache():
+    """Drop the memoized table + warn/miss state (tests, table swaps)."""
+    global AUTOTUNE_TABLE, MEASURED_KEYS
+    AUTOTUNE_TABLE = None
+    MEASURED_KEYS = None
+    AUTOTUNE_MISSES.clear()
+    _WARNED_KEYS.clear()
+
+
+def _note_autotune_miss(key: Tuple[int, int, int]):
+    AUTOTUNE_MISSES[key] = AUTOTUNE_MISSES.get(key, 0) + 1
+    if key not in _WARNED_KEYS:
+        _WARNED_KEYS.add(key)
+        warnings.warn(AutotuneMissWarning(key, jax.default_backend()),
+                      stacklevel=3)
+
 
 _VMEM_BUDGET = 4 * 1024 * 1024  # conservative half-ish of usable VMEM
 
@@ -118,6 +180,22 @@ def _divisor_at_most(n: int, cap: int) -> int:
         if n % d == 0:
             return d
     return 1
+
+
+def vmem_footprint(*, bho: int, wo: int, bco: int, bc: int,
+                   stride: Tuple[int, int]) -> int:
+    """Static VMEM bytes of one grid step: int8 x-window + int8 weight
+    slice + int32 accumulator scratch + the out tile (worst case f32).
+    Shared with repro.analysis.kernellint, which checks it against the
+    per-backend budget so a bad autotune row is a lint error rather than
+    a Mosaic OOM."""
+    bhi = (bho - 1) * stride[0] + 1
+    bwi = (wo - 1) * stride[1] + 1
+    x_b = bhi * bwi * bc          # int8 window
+    w_b = bc * bco                # int8 weight slice
+    acc = 4 * bho * wo * bco      # int32 scratch
+    out = bho * wo * bco          # int8/f32 out tile (worst: 4x)
+    return x_b + w_b + acc + 4 * out
 
 
 def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
@@ -137,7 +215,13 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
     """
     if bc is not None and cin % bc != 0:
         raise ValueError(f"bc={bc} must divide cin={cin}")
-    over = _autotune_table().get((kh, kw, stride[0]), {})
+    key = (kh, kw, stride[0])
+    over = _autotune_table().get(key, {})
+    if (bho is None or bco is None or bc is None) \
+            and key not in (MEASURED_KEYS or ()):
+        # only a real table consultation counts as a miss; fully-explicit
+        # knobs never look at the table
+        _note_autotune_miss(key)
     bco = bco or over.get("bco")
     bho = bho or over.get("bho")
     bc = bc or over.get("bc")
@@ -145,18 +229,10 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
     bco = min(bco or 128, cout)
     bc = _divisor_at_most(cin, bc or 512)
 
-    def vmem_bytes(bh):
-        bhi = (bh - 1) * stride[0] + 1
-        bwi = (wo - 1) * stride[1] + 1
-        x_b = bhi * bwi * bc          # int8 window
-        w_b = bc * bco                # int8 weight slice
-        acc = 4 * bh * wo * bco       # int32 scratch
-        out = bh * wo * bco           # int8/f32 out tile (worst: 4x)
-        return x_b + w_b + acc + 4 * out
-
     if bho is None:
         bho = min(ho, 128)
-        while bho > 1 and vmem_bytes(bho) > _VMEM_BUDGET:
+        while bho > 1 and vmem_footprint(bho=bho, wo=wo, bco=bco, bc=bc,
+                                         stride=stride) > _VMEM_BUDGET:
             bho = (bho + 1) // 2
     bho = min(bho, ho)
     if pool is not None:

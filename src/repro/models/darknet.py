@@ -164,6 +164,49 @@ def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
                             extras=int_extras(params, state, cfg))
 
 
+def _split_plan(plan):
+    """Index of the first integer conv step — the entry of the code core.
+
+    Steps before it are the FP prefix (edge conv + pre-entry float pools);
+    every step from it onward operates on int8 codes.
+    """
+    for i, step in enumerate(plan):
+        if step[0] == "conv":
+            return i
+    return len(plan)
+
+
+def int_core(ip, codes, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
+             fuse_pool: bool = True, noise: Optional[NoiseConfig] = None,
+             rng=None, mac_chunks: int = 1):
+    """The integer segment alone: int8 codes in -> int8 codes out.
+
+    Walks the code-domain suffix of ``layer_plan`` (integer convs, fused
+    or standalone code pools). Single source of truth: ``int_apply``
+    calls it, and ``repro.analysis`` traces it to prove integer purity
+    and accumulator safety. The rng split mirrors int_apply's per-conv
+    schedule bit-for-bit ("conv" steps only exist in this suffix).
+    """
+    from ..core import integer_inference as ii
+    plan = layer_plan(cfg, fuse_pool)
+    core = plan[_split_plan(plan):]
+    rngs = _layer_rngs(rng, sum(1 for s in core if s[0] == "conv"))
+    li = 0
+    for step in core:
+        if step[0] == "pool":
+            codes = ii.int_maxpool2d(codes)
+        else:
+            _, name, ks, pooled = step
+            nkw = dict(ksize=ks, padding=ks // 2, impl=impl, noise=noise,
+                       rng=rngs[li], mac_chunks=mac_chunks)
+            li += 1
+            if pooled:
+                codes = ii.int_conv2d_pool(ip[name], codes, **nkw)
+            else:
+                codes = ii.int_conv2d(ip[name], codes, **nkw)
+    return codes
+
+
 def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
               fuse_pool: bool = True, noise: Optional[NoiseConfig] = None,
               rng=None, mac_chunks: int = 1):
@@ -183,32 +226,20 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: DarkNetConfig, *, impl=None,
     """
     from ..core import integer_inference as ii
     plan = layer_plan(cfg, fuse_pool)
-    rngs = _layer_rngs(rng, sum(1 for s in plan if s[0] == "conv"))
-    h, codes, li = x, None, 0
-    for step in plan:
+    h = x
+    for step in plan[:_split_plan(plan)]:
         if step[0] == "fp_conv":
             # FP first conv (BN folded into w); same fp-in-fq-mode config
             # as apply().
             h = fql.fq_conv2d(ip["conv0"], h, QuantConfig(fq=qcfg.fq),
                               padding="SAME", b_in=WEIGHT_BOUND)
-        elif step[0] == "pool":
-            if codes is None:
-                h = -jax.lax.reduce_window(
-                    -h, jnp.inf, jax.lax.min, (1, 2, 2, 1), (1, 2, 2, 1),
-                    "VALID")
-            else:
-                codes = ii.int_maxpool2d(codes)
-        else:
-            _, name, ks, pooled = step
-            if codes is None:
-                codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
-            nkw = dict(ksize=ks, padding=ks // 2, impl=impl, noise=noise,
-                       rng=rngs[li], mac_chunks=mac_chunks)
-            li += 1
-            if pooled:
-                codes = ii.int_conv2d_pool(ip[name], codes, **nkw)
-            else:
-                codes = ii.int_conv2d(ip[name], codes, **nkw)
+        else:  # pre-entry float pool
+            h = -jax.lax.reduce_window(
+                -h, jnp.inf, jax.lax.min, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
+    codes = int_core(ip, codes, qcfg, cfg, impl=impl, fuse_pool=fuse_pool,
+                     noise=noise, rng=rng, mac_chunks=mac_chunks)
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = fql.fq_conv2d(ip["head"], h, QuantConfig(), padding="SAME",
                       b_in=RELU_BOUND)

@@ -143,6 +143,27 @@ def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
                             extras=int_extras(params, state, cfg))
 
 
+def int_core(ip, codes, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
+             noise: Optional[NoiseConfig] = None, rng=None,
+             mac_chunks: int = 1):
+    """The integer segment alone: int8 codes in -> int8 codes out.
+
+    This is the exact op sequence ``int_apply`` runs between the entry
+    quantizer and the final dequant (single source of truth: int_apply
+    calls it, and ``repro.analysis`` traces it to prove integer purity
+    and accumulator safety). The rng split mirrors int_apply's per-layer
+    schedule bit-for-bit.
+    """
+    from ..core import integer_inference as ii
+    plan = layer_plan(cfg)
+    rngs = _layer_rngs(rng, len(plan))
+    for (name, dil), r in zip(plan, rngs):
+        codes = ii.int_conv1d(ip[name], codes, ksize=cfg.ksize,
+                              dilation=dil, impl=impl, noise=noise,
+                              rng=r, mac_chunks=mac_chunks)
+    return codes
+
+
 def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
               noise: Optional[NoiseConfig] = None, rng=None,
               mac_chunks: int = 1):
@@ -155,15 +176,11 @@ def int_apply(ip, x, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,
     head stay clean — the noise model covers the analog conv core.
     """
     from ..core import integer_inference as ii
-    plan = layer_plan(cfg)
     h = fql.dense(ip["embed"], x)
     h, _ = fql.batchnorm(ip["embed_bn"][0], ip["embed_bn"][1], h, train=False)
     codes = ii.entry_codes(h, ip["entry"], qcfg, b_in=RELU_BOUND)
-    rngs = _layer_rngs(rng, len(plan))
-    for (name, dil), r in zip(plan, rngs):
-        codes = ii.int_conv1d(ip[name], codes, ksize=cfg.ksize,
-                              dilation=dil, impl=impl, noise=noise,
-                              rng=r, mac_chunks=mac_chunks)
+    codes = int_core(ip, codes, qcfg, cfg, impl=impl, noise=noise, rng=rng,
+                     mac_chunks=mac_chunks)
     h = ii.decode_output(codes, ip["s_out_last"], qcfg.bits_out)
     h = jnp.mean(h, axis=1)  # FP global average pool (paper §3.4)
     return fql.dense(ip["head"], h)

@@ -78,7 +78,18 @@ def _tuple_axis_constraints_ok() -> bool:
     Constraints are layout hints — correctness may not depend on them —
     so on the CPU backend (tests, dry-runs) multi-axis entries are
     dropped instead; TPU/GPU keep them (the miscompile is CPU-specific).
+
+    ``REPRO_TUPLE_AXIS_CONSTRAINTS=keep|drop`` overrides the backend
+    gate: ``keep`` re-enables tuple-axis constraints on CPU (used by
+    tests/test_sharding_rules.py's version-gated probe, which re-runs
+    the miscompile repro and fails "workaround removable" once a jax
+    upgrade fixes it), ``drop`` forces the CPU behaviour everywhere.
     """
+    force = os.environ.get("REPRO_TUPLE_AXIS_CONSTRAINTS")
+    if force == "keep":
+        return True
+    if force == "drop":
+        return False
     return jax.default_backend() != "cpu"
 
 

@@ -1,0 +1,257 @@
+"""repro.analysis clean-path units: report machinery, the abstract
+interpreter on known-bound programs, clean passes over the reduced
+stacks, runtime miss counters, and the CLI end-to-end.
+
+The adversarial half — injected violations that each pass must catch —
+lives in tests/test_analysis_mutations.py.
+"""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import absint, intlint, kernellint, planlint, targets
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.report import Report, Severity, Suppression
+from repro.kernels import fq_conv
+
+
+# ---------------------------------------------------------------------------
+# report machinery
+# ---------------------------------------------------------------------------
+
+
+def test_report_exit_gate():
+    r = Report()
+    assert r.exit_code() == 0 and r.worst() is None
+    r.info("c/a", "s", "fyi")
+    assert r.exit_code() == 0                      # info never gates
+    r.warning("c/b", "s", "hm")
+    assert r.exit_code() == 1
+    assert r.exit_code(fail_on=Severity.ERROR) == 0
+    r.error("c/c", "s", "bad")
+    assert r.exit_code(fail_on=Severity.ERROR) == 1
+    assert r.worst() == Severity.ERROR
+
+
+def test_suppression_requires_reason():
+    with pytest.raises(ValueError, match="reason"):
+        Suppression("intlint/*", "*", "  ")
+
+
+def test_suppressed_findings_are_recorded_not_dropped():
+    r = Report([Suppression("planlint/handoff", "kws/*",
+                            "known-stale dev stack")])
+    assert r.error("planlint/handoff", "kws/conv1", "mismatch") is None
+    r.error("planlint/handoff", "darknet/conv2", "mismatch")
+    assert len(r.findings) == 1                    # non-matching kept
+    assert len(r.suppressed) == 1                  # matching moved, not lost
+    assert r.suppressed[0]["reason"] == "known-stale dev stack"
+    assert r.exit_code() == 1
+    d = r.to_dict()
+    assert d["summary"]["suppressed"] == 1
+    assert d["format"] == 1 and d["tool"] == "repro.analysis"
+
+
+def test_report_json_round_trip(tmp_path):
+    r = Report()
+    r.warning("k/x", "s", "m", key=(3, 1, 1), val=np.int64(7))
+    r.prove("k/y", "s", "holds", bound=127.0)
+    r.count("k/n", 3)
+    p = tmp_path / "rep.json"
+    r.write_json(str(p))
+    d = json.loads(p.read_text())
+    assert d["findings"][0]["details"]["key"] == [3, 1, 1]
+    assert d["findings"][0]["details"]["val"] == 7
+    assert d["counters"]["k/n"] == 3
+    assert d["proofs"][0]["statement"] == "holds"
+
+
+# ---------------------------------------------------------------------------
+# abstract interpreter on known-bound programs
+# ---------------------------------------------------------------------------
+
+
+def _interp_bounds(fn, *example):
+    """Trace fn and return the abstract output bounds for int8-tainted
+    integer inputs / concrete float inputs."""
+    closed = jax.make_jaxpr(fn)(*example)
+    vals = []
+    for leaf in jax.tree_util.tree_leaves(list(example)):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.integer):
+            vals.append(absint.dtype_interval(arr.dtype, tainted=True))
+        else:
+            vals.append(absint.abs_of_concrete(arr))
+    return absint.Interp(absint.Checker()).run_closed(closed, vals)
+
+
+def test_absint_dot_bound_is_depth_times_product():
+    k = 64
+    w = jnp.ones((k, 4), jnp.int8)
+
+    def f(codes):
+        return jax.lax.dot_general(
+            codes.astype(jnp.int32), w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())))
+
+    (out,) = _interp_bounds(f, jnp.zeros((2, k), jnp.int8))
+    # codes tainted at dtype range [-128, 127]; w is a concrete const of
+    # ones -> bound = depth x per-element product, exactly
+    assert out.hi == 127 * k
+    assert out.lo == -128 * k
+    assert out.tainted
+
+
+def test_absint_requant_epilogue_bound():
+    """clip(round(acc * rescale), lo, n) lands exactly in [lo, n]."""
+    def f(acc):
+        v = jnp.round(acc.astype(jnp.float32) * 0.01)
+        return jnp.clip(v, 0, 15).astype(jnp.int8)
+
+    (out,) = _interp_bounds(f, jnp.zeros((4,), jnp.int32))
+    assert (out.lo, out.hi) == (0.0, 15.0)
+
+
+def test_absint_pallas_grid_accumulation():
+    """The sequential-grid walk bounds a K-step accumulator exactly."""
+    from repro.kernels.fq_matmul import fq_matmul
+    a = jnp.zeros((8, 256), jnp.int8)
+    b = jnp.ones((256, 8), jnp.int8)   # concrete const: |b| bound = 1
+    s = jnp.float32(0.01)
+
+    def f(a):
+        return fq_matmul(a, b, s, n_out=15, lo=0, bk=64, interpret=True)
+
+    (out,) = _interp_bounds(f, a)
+    assert (out.lo, out.hi) == (0.0, 15.0)   # requant clamps the output
+
+
+def test_absint_signed_wrap_hook_fires():
+    hits = []
+
+    class C(absint.Checker):
+        def on_signed_wrap(self, interp, eqn, raw, dtype):
+            hits.append((raw.lo, raw.hi, np.dtype(dtype).name))
+
+    def f(x):
+        y = x.astype(jnp.int32) * (2**25)    # 128 * 2^25 > |int32| range
+        return y
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((2,), jnp.int8))
+    absint.Interp(C()).run_closed(
+        closed, [absint.dtype_interval(np.dtype(np.int8), tainted=True)])
+    assert hits and hits[0][2] == "int32"
+
+
+# ---------------------------------------------------------------------------
+# clean passes over the reduced stacks
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kws_t():
+    return targets.kws_target(reduced=True)
+
+
+@pytest.fixture(scope="module")
+def dark_t():
+    return targets.darknet_target(reduced=True)
+
+
+def test_planlint_clean_on_reduced_stacks(kws_t, dark_t):
+    r = Report()
+    for t in (kws_t, dark_t):
+        planlint.lint_handoff(t.fq_params, t.chain, r, t.name)
+        planlint.lint_stack(t.stack, r, t.name, layer_params=t.fq_params)
+        planlint.lint_noise_seeds(t.chain, r, t.name)
+    planlint.lint_fused_pools(dark_t.plan, dark_t.n_pool_markers, r,
+                              dark_t.name, stack=dark_t.stack)
+    assert r.findings == [], [f.message for f in r.findings]
+    checks = {p["check"] for p in r.proofs}
+    assert {"planlint/handoff", "planlint/static-aux", "planlint/rescale",
+            "planlint/seed-collision", "planlint/fused-pool"} <= checks
+
+
+def test_intlint_clean_trace_proves(kws_t):
+    r = Report()
+    (spec,) = targets.core_traces(kws_t, impls=("im2col",), mac_chunks=())
+    intlint.lint_trace(spec, r)
+    assert r.findings == [], [f.message for f in r.findings]
+    (proof,) = [p for p in r.proofs if p["check"] == "intlint"]
+    d = proof["details"]
+    assert d["contractions"] >= len(kws_t.chain)
+    assert 0 < d["max_int_bound"] <= 2**31 - 1
+    assert d["int32_headroom"] > 0
+
+
+def test_intlint_noise_trace_clean(kws_t):
+    r = Report()
+    specs = targets.core_traces(kws_t, impls=("fused",), mac_chunks=(4,))
+    for spec in specs:
+        intlint.lint_trace(spec, r)
+    assert r.findings == [], [f.message for f in r.findings]
+    assert len([p for p in r.proofs if p["check"] == "intlint"]) == 2
+
+
+def test_kernellint_checked_in_table_is_clean():
+    r = Report()
+    kernellint.lint_table_schema(r)
+    assert r.findings == [], [f.message for f in r.findings]
+    assert r.counters["kernellint/table-entries"] >= 4
+
+
+def test_kernellint_full_size_shapes_covered(kws_t):
+    """Full-size declared geometries: every key measured, blocks legal."""
+    cfg_shapes = targets.kws_conv_shapes(targets.kws.KWSConfig()) + \
+        targets.darknet_conv_shapes(targets.darknet.DarkNetConfig(),
+                                    targets.DARKNET_INPUT)
+    r = Report()
+    kernellint.lint_shapes(cfg_shapes, r)
+    assert r.findings == [], [f.message for f in r.findings]
+    assert r.counters["kernellint/shapes-checked"] == len(cfg_shapes)
+
+
+def test_runtime_miss_counter_and_warning():
+    fq_conv.reset_autotune_cache()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fq_conv.pick_blocks(ho=8, wo=8, cin=8, cout=8, kh=5, kw=5,
+                                stride=(1, 1))
+            fq_conv.pick_blocks(ho=8, wo=8, cin=8, cout=8, kh=5, kw=5,
+                                stride=(1, 1))
+        misses = [x for x in w
+                  if isinstance(x.message, fq_conv.AutotuneMissWarning)]
+        assert len(misses) == 1                 # warn once per key
+        assert misses[0].message.key == (5, 5, 1)
+        assert fq_conv.AUTOTUNE_MISSES[(5, 5, 1)] == 2   # but count all
+        r = Report()
+        kernellint.runtime_miss_counters(r)
+        assert r.counters["kernellint/runtime-miss:(5, 5, 1)"] == 2
+    finally:
+        fq_conv.reset_autotune_cache()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_reduced_kws_exit_zero(tmp_path, capsys):
+    out = tmp_path / "analysis.json"
+    rc = cli_main(["--stack", "kws", "--reduced", "--impl", "im2col",
+                   "--mac-chunks", "1", "--json", str(out)])
+    assert rc == 0, capsys.readouterr().out
+    d = json.loads(out.read_text())
+    assert d["summary"]["findings"] == 0
+    assert d["summary"]["proofs"] > 0
+    assert d["counters"]["intlint/traces"] == 2   # clean + mac_chunks=1
+
+
+def test_cli_rejects_bad_mac_chunks():
+    with pytest.raises(SystemExit):
+        cli_main(["--mac-chunks", "0"])

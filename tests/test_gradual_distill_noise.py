@@ -24,6 +24,72 @@ def test_ladder_driver_initializes_from_previous():
     assert res.best.val_metric == 10.0
 
 
+@pytest.mark.parametrize("name", sorted(LADDERS))
+def test_ladder_bitwidths_monotone(name):
+    """§3.2 curriculum: every ladder starts FP and never RAISES a
+    bitwidth — each stage quantizes at least as aggressively as the
+    previous one (weights and activations independently)."""
+    ladder = LADDERS[name]
+    assert ladder[0].is_fp, f"{name} ladder must start full-precision"
+
+    def bits(v):
+        return 32 if v is None else v
+
+    for prev, cur in zip(ladder, ladder[1:]):
+        assert bits(cur.bits_w) <= bits(prev.bits_w), \
+            f"{name}: bits_w rises {prev.label()} -> {cur.label()}"
+        assert bits(cur.bits_a) <= bits(prev.bits_a), \
+            f"{name}: bits_a rises {prev.label()} -> {cur.label()}"
+    # FQ stages (quantized conv outputs) only ever terminate a ladder:
+    # once norm is folded and the quantizer is the nonlinearity there is
+    # no going back to pre-FQ training.
+    fq_flags = [q.fq for q in ladder]
+    assert fq_flags == sorted(fq_flags), \
+        f"{name}: fq stage followed by a non-fq stage"
+
+
+def test_ladder_driver_previous_teacher_mode():
+    """use_best_teacher=False: the teacher is always the immediately
+    preceding stage's params, even when accuracy regresses."""
+    seen = []
+
+    def train_stage(params, qcfg, teacher, idx):
+        seen.append(teacher)
+        return params + 1, float(10 - idx)  # metric strictly decreasing
+
+    gradual.run_ladder(LADDERS["kws"], 0, train_stage,
+                       use_best_teacher=False)
+    # stage 0 has no teacher; stage i>0 distills from stage i-1's output
+    assert seen == [None] + list(range(1, len(LADDERS["kws"])))
+
+
+def test_distillation_grad_zero_at_teacher():
+    """KL(teacher || student) is minimized exactly at student == teacher:
+    the pure-distillation gradient (alpha=1) must vanish there."""
+    t = jax.random.normal(jax.random.key(9), (4, 10))
+    labels = jnp.argmax(t, -1)
+    g = jax.grad(lambda s: distill.distillation_loss(
+        s, t, labels, alpha=1.0))(t)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-6)
+    # with hard labels mixed in (alpha<1) the gradient need not vanish
+    g_mix = jax.grad(lambda s: distill.distillation_loss(
+        s, t, labels, alpha=0.5))(t)
+    assert float(jnp.linalg.norm(g_mix)) > 1e-4
+
+
+def test_label_refinery_grad_zero_at_teacher():
+    """d/ds CE(softmax(t) || softmax(s)) = softmax(s) - softmax(t): zero
+    at s == t, and pointing from teacher to student elsewhere."""
+    t = jax.random.normal(jax.random.key(10), (6, 8))
+    g = jax.grad(distill.label_refinery_loss)(t, t)
+    np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-6)
+    s = t + 0.5
+    g_off = jax.grad(distill.label_refinery_loss)(s, t)
+    expected = (jax.nn.softmax(s, -1) - jax.nn.softmax(t, -1)) / t.shape[0]
+    np.testing.assert_allclose(np.asarray(g_off), np.asarray(expected),
+                               atol=1e-6)
+
+
 def test_no_gq_baseline_jumps_straight():
     calls = []
 
