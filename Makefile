@@ -10,6 +10,10 @@
 #   make bench-retrain — dry-run-sized deployment-in-the-loop retraining
 #                      comparison (deploy-QAT vs clean finetune, "retrained"
 #                      rows in BENCH_noise.json); full: run.py --only retrain
+#   make bench-fleet — dry-run-sized fleet incident demo: fault-injected
+#                      canary breach -> auto-retrain -> hot-swap with
+#                      bit-exact replay (BENCH_fleet.json); full:
+#                      run.py --only fleet (docs/FLEET.md)
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make analyze     — static quantization-contract verifier (repro.analysis):
@@ -28,7 +32,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench conv bench-serve bench-mixed bench-noise bench-retrain \
-	autotune analyze lint check ci
+	bench-fleet autotune analyze lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -51,6 +55,9 @@ bench-noise:
 bench-retrain:
 	$(PYTHON) -m benchmarks.noise_sweep --retrain --dry-run
 
+bench-fleet:
+	$(PYTHON) -m benchmarks.fleet_demo --dry-run
+
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
 
@@ -64,6 +71,7 @@ lint:
 	repro.core.deploy_qat, \
 	repro.models.kws, repro.models.darknet, repro.models.frontends, \
 	repro.serve.cnn_batching, repro.serve.shape_ladder, \
+	repro.serve.fleet, repro.serve.faults, repro.serve.trace, \
 	repro.analysis, repro.analysis.absint, repro.analysis.intlint, \
 	repro.analysis.planlint, repro.analysis.kernellint, \
 	repro.train.trainer; print('imports ok')"

@@ -1,0 +1,288 @@
+"""Fleet incident demo: canary breach -> auto-retrain -> hot-swap,
+under injected device faults, with bit-exact replay (ISSUE 7 acceptance).
+
+    PYTHONPATH=src python -m benchmarks.fleet_demo [--dry-run]
+    PYTHONPATH=src python -m benchmarks.run --only fleet      # full size
+
+One seeded end-to-end incident on the REAL integer stacks:
+
+* a two-model registry (reduced kws + darknet ``ConvertedStack``s)
+  serves behind per-model ``CNNBatcher``s with SLOs, the device boundary
+  wrapped in an active ``FaultPlan`` (flush failures, stuck in-flight
+  results, canary corruption) the whole time;
+* at a fixed tick the kws deployment drifts to the highest Table-7
+  noise condition — the noise canary's rolling median breaches the
+  clean-agreement baseline;
+* the runtime runs a background deploy-QAT finetune (``QATFinetuneJob``,
+  a few steps per scheduler tick, serving never stops), then
+  ``rederive()`` + ``swap_apply_fn`` hot-swaps the retrained stack;
+* every submitted request is served exactly once within its SLO
+  deadline or shed with a structured error — audited, not assumed;
+* ``trace.replay`` re-drives the recorded schedule through a freshly
+  built fleet and must reproduce every event — output digests, fault
+  draws, canary agreements, retrain losses — bit-exactly.
+
+Results go to ``BENCH_fleet.json``. The dry-run sizing is what
+``make bench-fleet`` and the fleet-marked test run; ``run.py --only
+fleet`` uses the full retrain budget.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core.noise import TABLE7_CONDITIONS
+from repro.core.quant import QuantConfig
+from repro.serve import trace as trace_mod
+from repro.serve.faults import FaultPlan
+from repro.serve.fleet import (FleetRuntime, ModelSLO, QATFinetuneJob,
+                               RequestSpec)
+from benchmarks import common
+
+SEED = 0
+
+# the incident schedule (ticks are the only clock)
+PRE_DRIFT_TICKS = 8          # clean era: baseline anchors here
+DRIFT_CONDITION = TABLE7_CONDITIONS[-1]   # w30%/a30%/mac150%
+POST_DRIFT_TICKS = 40        # breach -> retrain -> swap -> re-baseline
+KWS_PER_TICK = 2             # request arrivals
+DN_EVERY = 3                 # darknet request every Nth tick
+
+PLAN = FaultPlan(seed=SEED + 13, p_flush_fail=0.15, p_stuck=0.2,
+                 max_stuck_ticks=2, p_canary_corrupt=0.08,
+                 max_retries=3, backoff_ticks=1)
+# drop threshold 0.25: the drift condition costs ~0.5 agreement (breach
+# is unambiguous) while the post-swap noisy-canary medians wobble with
+# std ~0.06 — 0.15 sat at ~2.4 sigma and re-breached on sampling noise
+KWS_SLO = ModelSLO(deadline_ticks=8, max_agreement_drop=0.25,
+                   canary_every=1, canary_window=4, baseline_obs=3,
+                   retrain_steps_per_tick=10)
+DN_SLO = ModelSLO(deadline_ticks=8, max_agreement_drop=0.5,
+                  canary_every=2, canary_window=4, baseline_obs=2)
+
+# sizing: dry-run finishes the background job in a few ticks; the full
+# run uses the Table-7 retrain bench's pretrain/finetune budgets
+SIZES = {
+    "dry": dict(pre_steps=60, ft_steps=30, n_train=128, ft_batch=32),
+    "full": dict(pre_steps=300, ft_steps=200, n_train=512, ft_batch=64),
+}
+
+# pretrained-kws cache: build_fleet runs twice per demo (live + replay)
+# and the pretrain is deterministic, so recomputing it only burns time
+_PRETRAINED = {}
+
+
+def _pretrained_kws(size_name):
+    """The fleet's deployed kws: pretrained on the finetune data (the
+    retrain bench's recipe) so the breach-time finetune starts from a
+    fitted model — finetuning the init-and-fold stand-in instead walks
+    it toward chance loss and *shrinks* logit margins, which reads as a
+    post-swap canary regression."""
+    hit = _PRETRAINED.get(size_name)
+    if hit is not None:
+        return hit
+    from repro.data import synthetic
+    from repro.models import kws
+    from benchmarks import noise_sweep
+    size = SIZES[size_name]
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    cfg = kws.KWSConfig.reduced()
+    params0, state, _ = common.trained_int_params(
+        kws, cfg, kws.conv_names(cfg), qcfg)
+    kd1, kd2 = jax.random.split(jax.random.key(SEED + 5))
+
+    def make_data(key, n):
+        return synthetic.make_mfcc_dataset(
+            key, n=n, seq_len=cfg.seq_len, n_mfcc=cfg.n_mfcc,
+            num_classes=cfg.num_classes,
+            noise=noise_sweep.RETRAIN_DATA_NOISE)
+    data = make_data(kd1, size["n_train"])
+    # canary probe: held-out samples from the DATA distribution. An
+    # off-manifold probe (random normal) collapses to one predicted
+    # class, so every noise draw flips the whole batch together and the
+    # agreement becomes a coin flip no probe size can stabilize.
+    probe, _ = make_data(kd2, 64)
+    pre = noise_sweep._qat_train(
+        kws, params0, state, None, steps=size["pre_steps"],
+        lr=noise_sweep.RETRAIN_PRETRAIN_LR, qcfg=qcfg, cfg=cfg, data=data)
+    stack = noise_sweep._convert_synced(kws, pre, state, qcfg, cfg)
+    out = (cfg, qcfg, pre, state, data, np.asarray(probe), stack)
+    _PRETRAINED[size_name] = out
+    return out
+
+
+def build_fleet(config, trace):
+    """Rebuild the runtime exactly as recorded — shared by the live run
+    and ``trace.replay`` (the soundness requirement: same builders, same
+    order, same seeds; everything else comes from the trace)."""
+    from repro.models import darknet, kws
+    # re-emit the config event so the fresh trace lines up event-for-event
+    # with the recording (replay compares from event 0)
+    trace.emit("config", **{k: v for k, v in config.items() if k != "e"})
+    size = SIZES[config["size"]]
+    kws_cfg, qcfg, kws_pre, kws_state, data, kws_probe, kws_ip = \
+        _pretrained_kws(config["size"])
+    _, _, dn_cfg, dn_ip = common.reduced_int_models(qcfg)
+
+    rng = np.random.default_rng(SEED)
+    dn_probe = rng.standard_normal(
+        (8, 16, 16, dn_cfg.in_channels)).astype(np.float32)
+
+    def kws_factory(stack, condition):
+        # the pretrained float params the CURRENT stack was derived
+        # from; the job finetunes them against the breached condition
+        # and hands back (layer_params, extras) for stack.rederive
+        return QATFinetuneJob(
+            kws, kws_pre, kws_state, kws_cfg, qcfg, condition,
+            data=data, steps=size["ft_steps"], lr=0.01,
+            batch=size["ft_batch"], draws=4, seed=7)
+
+    fleet = FleetRuntime(fault_plan=PLAN, trace=trace)
+    fleet.register(
+        "kws", kws_ip, lambda s: kws.int_serve_fn(s, qcfg, kws_cfg),
+        slo=KWS_SLO, probe=kws_probe, canary_seed=SEED + 31,
+        finetune_factory=kws_factory,
+        batcher_kw=dict(max_batch=8, max_wait_ticks=1,
+                        dispatch_ahead=True, max_inflight=2))
+    fleet.register(
+        "darknet", dn_ip, lambda s: darknet.int_serve_fn(s, qcfg, dn_cfg),
+        slo=DN_SLO, probe=dn_probe, canary_seed=SEED + 47,
+        batcher_kw=dict(max_batch=4, max_wait_ticks=1,
+                        dispatch_ahead=True, max_inflight=2))
+    fleet.shapes = {
+        "kws": (kws_cfg.seq_len, kws_cfg.n_mfcc),
+        "darknet": (16, 16, dn_cfg.in_channels),
+    }
+    return fleet
+
+
+def drive(fleet):
+    """The recorded schedule: steady traffic, drift at a fixed tick."""
+    rid = {"kws": 0, "darknet": 10_000}
+
+    def arrive(model, n):
+        fleet.submit(model, [
+            RequestSpec(rid=rid[model] + i, seed=SEED + 3,
+                        shape=fleet.shapes[model])
+            for i in range(n)])
+        rid[model] += n
+
+    for t in range(PRE_DRIFT_TICKS):
+        arrive("kws", KWS_PER_TICK)
+        if t % DN_EVERY == 0:
+            arrive("darknet", 1)
+        fleet.tick()
+    fleet.set_condition("kws", DRIFT_CONDITION)
+    for t in range(POST_DRIFT_TICKS):
+        arrive("kws", KWS_PER_TICK)
+        if t % DN_EVERY == 0:
+            arrive("darknet", 1)
+        fleet.tick()
+    fleet.drain()
+
+
+def _canary_medians(trace):
+    """Pre-drift / pre-swap / post-swap kws canary medians (corrupted
+    observations excluded — the runtime's median filter rides over them,
+    the summary should too)."""
+    drift_tick = trace.of_type("set-condition")[0]["tick"]
+    swaps = trace.of_type("swap")
+    swap_tick = swaps[0]["tick"] if swaps else None
+    eras = {"pre_drift": [], "drifted": [], "post_swap": []}
+    for c in trace.of_type("canary"):
+        if c["model"] != "kws" or c["corrupted"]:
+            continue
+        if c["tick"] < drift_tick:
+            eras["pre_drift"].append(c["agreement"])
+        elif swap_tick is None or c["tick"] < swap_tick:
+            eras["drifted"].append(c["agreement"])
+        else:
+            eras["post_swap"].append(c["agreement"])
+    return {k: (round(float(np.median(v)), 4) if v else None)
+            for k, v in eras.items()}
+
+
+def run_demo(*, size: str, out_path: str = "BENCH_fleet.json"):
+    trace = trace_mod.Trace()
+    config = dict(size=size, seed=SEED, plan=PLAN.to_dict(),
+                  drift_condition=[DRIFT_CONDITION.sigma_w,
+                                   DRIFT_CONDITION.sigma_a,
+                                   DRIFT_CONDITION.sigma_mac])
+    fleet = build_fleet(config, trace)
+    drive(fleet)
+
+    audits = {name: fleet.audit(name) for name in fleet.models}
+    stats = fleet.stats()
+    breaches = trace.of_type("breach")
+    swaps = trace.of_type("swap")
+    retrains = trace.of_type("retrain")
+    medians = _canary_medians(trace)
+
+    report = trace_mod.replay(trace, build_fleet)
+
+    doc = {"fleet": {
+        "benchmark": "fleet_canary_retrain_hotswap_incident",
+        "backend": jax.default_backend(),
+        "seed": SEED,
+        "size": size,
+        "fault_plan": PLAN.to_dict(),
+        "slo": {"kws": KWS_SLO.to_dict(), "darknet": DN_SLO.to_dict()},
+        "n_events": len(trace),
+        "breach_tick": breaches[0]["tick"] if breaches else None,
+        "breach_drop": round(breaches[0]["drop"], 4) if breaches else None,
+        "swap_tick": swaps[0]["tick"] if swaps else None,
+        "retrain_ticks": len(retrains),
+        "retrain_final_loss": round(retrains[-1]["loss"], 4)
+        if retrains else None,
+        "canary_medians_kws": medians,
+        "audits": audits,
+        "counters": {
+            name: {k: stats[name][k] for k in
+                   ("served", "shed", "flush_faults", "retries",
+                    "stuck_flushes", "generation")}
+            for name in fleet.models},
+        "replay_bit_exact": report.bit_exact,
+        "exactly_once_all": all(a["exactly_once"] for a in audits.values()),
+        "within_slo_all": all(a["within_slo"] for a in audits.values()),
+        "incident_healed": bool(breaches and swaps
+                                and stats["kws"]["state"] == "HEALTHY"),
+    }}
+
+    for k in ("breach_tick", "swap_tick", "retrain_ticks",
+              "replay_bit_exact", "exactly_once_all", "within_slo_all",
+              "incident_healed"):
+        print(f"fleet,{k},{doc['fleet'][k]},seeded incident ({size})")
+    for name, a in audits.items():
+        print(f"fleet,{name}_served,{a['served']},"
+              f"of {a['n']} ({a['shed']} shed: {a['shed_codes']})")
+    print(f"fleet,canary_medians_kws,{medians},"
+          "clean-agreement median per era")
+    print(report.summary())
+    common.merge_bench_json(out_path, doc)
+    print(f"fleet,artifact,{out_path},written")
+    return doc
+
+
+def bench_fleet():
+    """benchmarks/run.py --only fleet: the full-size incident."""
+    print("# Fleet control plane — fault-injected canary/retrain/hot-swap")
+    run_demo(size="full")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small retrain budget (make bench-fleet)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+    run_demo(size="dry" if args.dry_run else "full", out_path=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

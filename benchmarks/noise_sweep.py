@@ -122,8 +122,8 @@ RETRAIN_BATCH = 64
 RETRAIN_FULL = dict(pretrain_steps=300, ft_steps=200, trials=8, n_eval=128)
 
 
-def _qat_train(params, state, nc_train, *, steps: int, lr: float, qcfg,
-               cfg, data, draws: int = 1, seed: int = 0):
+def _qat_train(module, params, state, nc_train, *, steps: int, lr: float,
+               qcfg, cfg, data, draws: int = 1, seed: int = 0):
     """Train/finetune through the deploy-QAT forward; returns raw params.
 
     ``nc_train=None`` runs the identical loop (same data order, same
@@ -132,48 +132,80 @@ def _qat_train(params, state, nc_train, *, steps: int, lr: float, qcfg,
     loss over several independent draws of the noise field per step (the
     per-step key folds the draw index), cutting the gradient variance the
     analog noise injects without changing its distribution.
+
+    The loop itself is ``train.trainer.QATFinetune`` — the fleet's
+    background retrain job — run to completion, so the bench measures
+    the exact engine the control plane hot-swaps from.
     """
     import jax.numpy as jnp
-    from repro.core import deploy_qat, distill
-    from repro.models import kws
+    from repro.core import distill
     from repro.optim import schedules, sgd
-    from repro.train.trainer import make_qat_train_step
-
-    (xtr, ytr) = data
-    opt = sgd.make(schedules.cosine(lr, steps))
-    ost = opt.init(params)
+    from repro.train.trainer import QATFinetune
 
     def loss_fn(p, batch, rng):
         xb, yb = batch
         onehot = jax.nn.one_hot(yb, cfg.num_classes)
         total = 0.0
         for d in range(draws if nc_train is not None else 1):
-            logits = kws.qat_apply(p, state, xb, qcfg, cfg, noise=nc_train,
-                                   rng=jax.random.fold_in(rng, d))
+            logits = module.qat_apply(p, state, xb, qcfg, cfg,
+                                      noise=nc_train,
+                                      rng=jax.random.fold_in(rng, d))
             total = total + jnp.mean(
                 distill.softmax_cross_entropy(logits, onehot))
         return total / (draws if nc_train is not None else 1)
 
-    step = make_qat_train_step(loss_fn, opt, clip_norm=1.0)
-    base = jax.random.key(1000 + seed)
-    n = xtr.shape[0]
-    for i in range(steps):
-        idx = jax.random.randint(jax.random.fold_in(base, 2 * i),
-                                 (RETRAIN_BATCH,), 0, n)
-        rng = deploy_qat.train_step_key(base, 2 * i + 1)
-        params, ost, _ = step(params, ost, (xtr[idx], ytr[idx]),
-                              jnp.int32(i), rng)
-    return params
+    opt = sgd.make(schedules.cosine(lr, steps))
+    ft = QATFinetune(loss_fn, params, opt, data=data, steps=steps,
+                     batch=RETRAIN_BATCH, seed=seed, clip_norm=1.0)
+    return ft.run()
 
 
-def _convert_synced(params, state, qcfg, cfg):
+def _stack_names(module, cfg):
+    """The code-carrying chain: kws exposes conv_names, darknet
+    int_conv_names — one helper so multi-stack callers don't branch."""
+    names_fn = getattr(module, "conv_names", None) \
+        or module.int_conv_names
+    return names_fn(cfg)
+
+
+def _convert_synced(module, params, state, qcfg, cfg):
     """sync_handoff + convert: deploy-QAT ties scales structurally, so the
     stored inner s_in go stale during training — sync, then the back-map
     (ConvertedStack conversion) validates the repaired contract."""
     from repro.core import integer_inference as ii
-    from repro.models import kws
-    return kws.convert_int(ii.sync_handoff(params, kws.conv_names(cfg)),
-                           state, qcfg, cfg)
+    return module.convert_int(
+        ii.sync_handoff(params, _stack_names(module, cfg)),
+        state, qcfg, cfg)
+
+
+def _retrain_stack(name):
+    """Per-stack retrain descriptor: (module, cfg, eval shape, data maker).
+
+    The kws path keeps the exact seeds/constants the original kws-only
+    bench used, so its checked-in rows stay bit-identical; darknet
+    derives its own keys (offset per stack index below)."""
+    from repro.data import synthetic
+    from repro.models import darknet, kws
+    if name == "kws":
+        cfg = kws.KWSConfig.reduced()
+
+        def make_data(key, n):
+            return synthetic.make_mfcc_dataset(
+                key, n=n, seq_len=cfg.seq_len, n_mfcc=cfg.n_mfcc,
+                num_classes=cfg.num_classes, noise=RETRAIN_DATA_NOISE)
+        return kws, cfg, make_data
+    if name == "darknet":
+        cfg = darknet.DarkNetConfig.reduced()
+
+        def make_data(key, n):
+            return synthetic.make_image_dataset(
+                key, n=n, shape=(16, 16, cfg.in_channels),
+                num_classes=cfg.num_classes)
+        return darknet, cfg, make_data
+    raise SystemExit(f"unknown retrain stack {name!r} (kws/darknet)")
+
+
+RETRAIN_STACK_IDX = {"kws": 0, "darknet": 1}  # key-derivation offsets
 
 
 def _self_agreement(fn, x, nc, *, trials, key):
@@ -186,71 +218,52 @@ def _self_agreement(fn, x, nc, *, trials, key):
     return a_m, d_m
 
 
-def run_retrain(*, pretrain_steps: int, ft_steps: int, trials: int,
-                n_eval: int, n_train: int = 512, conditions=None,
-                out_path: str = "BENCH_noise.json"):
-    """Clean-trained vs noise-trained Table-7 agreement at matched sigmas.
-
-    The paper's protocol (§4.4: retrain an already-trained net with the
-    noise it will see): pretrain the reduced KWS stack clean through the
-    deploy-QAT forward (shared checkpoint), then run two matched finetune
-    arms per condition — one clean, one against the DEPLOYED noise field
-    (bit-identical with serving, multi-draw loss averaging) — convert both
-    back through the ConvertedStack round-trip and replay the noisy
-    integer stack. Acceptance: at the two highest conditions, the
-    noise-trained arm's clean-agreement must be >= the clean-trained
-    baseline's.
-    """
-    from repro.data import synthetic
-    from repro.models import kws
-    qcfg = QuantConfig(2, 4, 4, fq=True)
-    cfg = kws.KWSConfig.reduced()
-    conditions = conditions or TABLE7_CONDITIONS[-2:]
-    kd1, kd2 = jax.random.split(jax.random.key(SEED + 5))
-    data = synthetic.make_mfcc_dataset(
-        kd1, n=n_train, seq_len=cfg.seq_len, n_mfcc=cfg.n_mfcc,
-        num_classes=cfg.num_classes, noise=RETRAIN_DATA_NOISE)
-    x_eval, y_eval = synthetic.make_mfcc_dataset(
-        kd2, n=n_eval, seq_len=cfg.seq_len, n_mfcc=cfg.n_mfcc,
-        num_classes=cfg.num_classes, noise=RETRAIN_DATA_NOISE)
-    y_eval = np.asarray(y_eval)
+def _retrain_one_stack(stack_name, *, qcfg, pretrain_steps, ft_steps,
+                       trials, n_eval, n_train, conditions):
+    """One stack's clean-vs-noise-trained comparison; returns
+    (parity_bool, rows)."""
+    module, cfg, make_data = _retrain_stack(stack_name)
+    off = 100 * RETRAIN_STACK_IDX[stack_name]  # kws (off=0): legacy keys
+    kd1, kd2 = jax.random.split(jax.random.key(SEED + 5 + off))
+    data = make_data(kd1, n_train)
+    x_eval, _ = make_data(kd2, n_eval)
 
     # bit-parity re-proof: the QAT forward IS the deployed integer path
     params0, state, ip0 = common.trained_int_params(
-        kws, cfg, kws.conv_names(cfg), qcfg)
-    rng_par = jax.random.key(SEED + 9)
-    qat = np.asarray(kws.qat_apply(params0, state, x_eval, qcfg, cfg,
-                                   noise=conditions[-1], rng=rng_par))
-    intp = np.asarray(kws.int_apply(ip0, x_eval, qcfg, cfg,
-                                    noise=conditions[-1], rng=rng_par))
+        module, cfg, _stack_names(module, cfg), qcfg)
+    rng_par = jax.random.key(SEED + 9 + off)
+    qat = np.asarray(module.qat_apply(params0, state, x_eval, qcfg, cfg,
+                                      noise=conditions[-1], rng=rng_par))
+    intp = np.asarray(module.int_apply(ip0, x_eval, qcfg, cfg,
+                                       noise=conditions[-1], rng=rng_par))
     parity = bool((qat == intp).all())
-    print(f"retrain,kws_qat_forward_bit_parity,{parity},"
+    print(f"retrain,{stack_name}_qat_forward_bit_parity,{parity},"
           "qat_apply == int_apply under the deployed noise field")
 
     tkw = dict(qcfg=qcfg, cfg=cfg, data=data)
-    pre = _qat_train(params0, state, None, steps=pretrain_steps,
+    pre = _qat_train(module, params0, state, None, steps=pretrain_steps,
                      lr=RETRAIN_PRETRAIN_LR, **tkw)
-    clean_params = _qat_train(pre, state, None, steps=ft_steps,
+    clean_params = _qat_train(module, pre, state, None, steps=ft_steps,
                               lr=RETRAIN_FT_LR, seed=7, **tkw)
-    clean_ip = _convert_synced(clean_params, state, qcfg, cfg)
+    clean_ip = _convert_synced(module, clean_params, state, qcfg, cfg)
 
     def fn(ip):
-        return lambda x, n_, r_, mac_chunks=1: kws.int_apply(
+        return lambda x, n_, r_, mac_chunks=1: module.int_apply(
             ip, x, qcfg, cfg, noise=n_, rng=r_, mac_chunks=mac_chunks)
 
     rows = []
     for ci, nc in enumerate(conditions):
-        noisy_params = _qat_train(pre, state, nc, steps=ft_steps,
+        noisy_params = _qat_train(module, pre, state, nc, steps=ft_steps,
                                   lr=RETRAIN_FT_LR, seed=7,
                                   draws=RETRAIN_NOISE_DRAWS, **tkw)
-        noisy_ip = _convert_synced(noisy_params, state, qcfg, cfg)
-        key = jax.random.fold_in(jax.random.key(SEED + 23), ci)
+        noisy_ip = _convert_synced(module, noisy_params, state, qcfg, cfg)
+        key = jax.random.fold_in(jax.random.key(SEED + 23 + off), ci)
         a_clean, d_clean = _self_agreement(fn(clean_ip), x_eval, nc,
                                            trials=trials, key=key)
         a_noise, d_noise = _self_agreement(fn(noisy_ip), x_eval, nc,
                                            trials=trials, key=key)
         rows.append(dict(
-            stack="kws", condition=condition_tag(nc),
+            stack=stack_name, condition=condition_tag(nc),
             sigma_w=nc.sigma_w, sigma_a=nc.sigma_a, sigma_mac=nc.sigma_mac,
             pretrain_steps=pretrain_steps, ft_steps=ft_steps,
             noise_draws=RETRAIN_NOISE_DRAWS, trials=trials,
@@ -261,16 +274,69 @@ def run_retrain(*, pretrain_steps: int, ft_steps: int, trials: int,
             logit_dev_clean_trained=round(d_clean, 5),
             logit_dev_noise_trained=round(d_noise, 5),
             noise_trained_no_worse=bool(a_noise >= a_clean)))
-        print(f"retrain,kws_{condition_tag(nc)},{a_noise:.4f},"
+        print(f"retrain,{stack_name}_{condition_tag(nc)},{a_noise:.4f},"
               f"noise-trained agreement vs {a_clean:.4f} clean-trained "
               f"({ft_steps} deploy-QAT finetune steps)")
+    return parity, rows
+
+
+def run_retrain(*, pretrain_steps: int, ft_steps: int, trials: int,
+                n_eval: int, n_train: int = 512, conditions=None,
+                stacks=("kws",), out_path: str = "BENCH_noise.json"):
+    """Clean-trained vs noise-trained Table-7 agreement at matched sigmas.
+
+    The paper's protocol (§4.4: retrain an already-trained net with the
+    noise it will see): pretrain the reduced stack clean through the
+    deploy-QAT forward (shared checkpoint), then run two matched finetune
+    arms per condition — one clean, one against the DEPLOYED noise field
+    (bit-identical with serving, multi-draw loss averaging) — convert both
+    back through the ConvertedStack round-trip and replay the noisy
+    integer stack. Acceptance: at the two highest conditions, the
+    noise-trained arm's clean-agreement must be >= the clean-trained
+    baseline's.
+
+    ``stacks`` selects kws and/or darknet; rows MERGE by stack into the
+    existing ``retrained`` section, so a darknet-only (dry-run-sized) run
+    composes with the checked-in full-size kws rows instead of clobbering
+    them.
+    """
+    import json
+    import os
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    conditions = conditions or TABLE7_CONDITIONS[-2:]
+    parity_by_stack, rows = {}, []
+    for stack_name in stacks:
+        parity, srows = _retrain_one_stack(
+            stack_name, qcfg=qcfg, pretrain_steps=pretrain_steps,
+            ft_steps=ft_steps, trials=trials, n_eval=n_eval,
+            n_train=n_train, conditions=conditions)
+        parity_by_stack[stack_name] = parity
+        rows.extend(srows)
+
+    # merge by stack: keep other stacks' existing rows (and parity flags)
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                old = json.load(f).get("retrained", {})
+        except (OSError, ValueError):
+            old = {}
+        rows = [r for r in old.get("rows", [])
+                if r.get("stack") not in stacks] + rows
+        for k, v in old.get("qat_forward_bit_parity_by_stack", {}).items():
+            parity_by_stack.setdefault(k, v)
+        # pre-multi-stack artifacts recorded only the scalar kws flag
+        old_scalar = old.get("qat_forward_bit_parity")
+        if old_scalar is not None:
+            for r in rows:
+                parity_by_stack.setdefault(r["stack"], old_scalar)
 
     doc = {"retrained": {
         "benchmark": "table7_deployment_in_the_loop_retraining",
         "backend": jax.default_backend(),
         "seed": SEED,
         "qcfg": qcfg.label(),
-        "qat_forward_bit_parity": parity,
+        "qat_forward_bit_parity": all(parity_by_stack.values()),
+        "qat_forward_bit_parity_by_stack": parity_by_stack,
         "metric_note": (
             "agreement = noisy trials vs the SAME retrained stack's clean "
             "integer argmax at the matched (trained) sigma; shared clean "
@@ -375,16 +441,22 @@ def main(argv=None):
     ap.add_argument("--retrain", action="store_true",
                     help="run the deployment-in-the-loop retraining "
                          "comparison instead of the inference sweep")
+    ap.add_argument("--stacks", default="kws",
+                    help="comma-separated retrain stacks (kws,darknet); "
+                         "rows merge by stack into BENCH_noise.json")
     args = ap.parse_args(argv)
     if args.retrain:
+        stacks = tuple(s for s in args.stacks.split(",") if s)
         print("# Table 7 (integer) — deployment-in-the-loop retraining"
               + (" [dry-run]" if args.dry_run else ""))
         if args.dry_run:
             run_retrain(pretrain_steps=60, ft_steps=40,
-                        trials=args.trials or 2, n_eval=32, n_train=128)
+                        trials=args.trials or 2, n_eval=32, n_train=128,
+                        stacks=stacks)
         else:
             run_retrain(**{**RETRAIN_FULL,
-                           "trials": args.trials or RETRAIN_FULL["trials"]})
+                           "trials": args.trials or RETRAIN_FULL["trials"]},
+                        stacks=stacks)
         return 0
     trials = args.trials or (2 if args.dry_run else 5)
     n_eval = 8 if args.dry_run else 32

@@ -649,6 +649,16 @@ def bench_retrain():
     noise_sweep.bench_retrain()
 
 
+def bench_fleet():
+    """Fleet control plane (ISSUE 7 acceptance): one seeded incident —
+    canary breach under the top Table-7 condition, background deploy-QAT
+    retrain, hot-swap — under an active fault plan, with the recorded
+    trace replayed bit-exactly. Writes BENCH_fleet.json; ``make
+    bench-fleet`` is the dry-run-sized CLI."""
+    from benchmarks import fleet_demo
+    fleet_demo.bench_fleet()
+
+
 ALL = {
     "table1": bench_table1_gq_ladder,
     "table2": bench_table2_method_comparison,
@@ -663,6 +673,7 @@ ALL = {
     "serve_mixed": bench_serve_mixed,
     "noise": bench_noise,
     "retrain": bench_retrain,
+    "fleet": bench_fleet,
     "dryrun": bench_dryrun_summary,
 }
 

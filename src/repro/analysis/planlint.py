@@ -290,3 +290,82 @@ def lint_seed_values(seeds: Sequence[int], names: Sequence[str],
         report.error(
             "planlint/seed-collision", subject,
             f"seed collision across layers {where}", layers=where)
+
+
+def lint_fleet(models: Sequence, report: Report, subject: str = "fleet",
+               *, max_stuck_ticks: int = 0):
+    """Registry invariants for the fleet control plane (serve/fleet.py).
+
+    ``models`` is a sequence of ``(name, slo, canary_seed, stack)``
+    descriptors (``stack`` may be None for an opaque model). Checks:
+
+    * ``planlint/fleet-name`` — model names non-empty and unique (the
+      registry, traces and replay all key on them);
+    * ``planlint/fleet-slo`` — SLO fields in range: ``deadline_ticks``
+      must exceed ``1 + max_stuck_ticks`` (a stuck in-flight result may
+      legally take that long, so a tighter deadline makes the
+      within-SLO guarantee unsatisfiable by construction),
+      ``max_agreement_drop`` in (0, 1], window/baseline/retrain budgets
+      positive;
+    * ``planlint/fleet-seed`` — canary seeds pairwise distinct (two
+      models sharing a seed draw CORRELATED canary noise — a drift on
+      one masks or mimics a drift on the other);
+    * each non-None stack passes the full :func:`lint_stack`.
+
+    ``FleetRuntime.register`` runs this over the would-be registry and
+    refuses registration on any ERROR finding.
+    """
+    before = len(report.findings)
+    seen: Dict[str, int] = {}
+    seeds: Dict[int, str] = {}
+    for name, slo, canary_seed, stack in models:
+        subj = f"{subject}/{name}"
+        if not name or not isinstance(name, str):
+            report.error("planlint/fleet-name", subj,
+                         f"model name {name!r} is not a non-empty string")
+            continue
+        if name in seen:
+            report.error("planlint/fleet-name", subj,
+                         f"duplicate model name {name!r} in the registry")
+        seen[name] = 1
+        min_deadline = 2 + max_stuck_ticks
+        if slo.deadline_ticks < min_deadline:
+            report.error(
+                "planlint/fleet-slo", subj,
+                f"deadline_ticks={slo.deadline_ticks} < {min_deadline} "
+                "(dispatch->resolve alone may take "
+                f"1 + max_stuck_ticks={max_stuck_ticks} ticks; the "
+                "within-SLO guarantee would be unsatisfiable)",
+                deadline_ticks=slo.deadline_ticks,
+                max_stuck_ticks=max_stuck_ticks)
+        if not (0.0 < slo.max_agreement_drop <= 1.0):
+            report.error(
+                "planlint/fleet-slo", subj,
+                f"max_agreement_drop={slo.max_agreement_drop} not in "
+                "(0, 1] — breach would fire never or always",
+                max_agreement_drop=slo.max_agreement_drop)
+        for field, lo in (("canary_window", 1), ("baseline_obs", 1),
+                          ("retrain_steps_per_tick", 1), ("canary_every", 0)):
+            v = getattr(slo, field, None)
+            if v is None or v < lo:
+                report.error("planlint/fleet-slo", subj,
+                             f"{field}={v!r} must be >= {lo}", field=field,
+                             value=v)
+        cs = int(canary_seed)
+        if cs in seeds:
+            report.error(
+                "planlint/fleet-seed", subj,
+                f"canary_seed={cs} collides with model "
+                f"{seeds[cs]!r} — the two canary tiers would draw "
+                "correlated noise", canary_seed=cs, other=seeds[cs])
+        else:
+            seeds[cs] = name
+        if stack is not None and hasattr(stack, "qcfg"):
+            # opaque (non-ConvertedStack) model objects — toy stacks in
+            # unit tests — only get the registry-level checks
+            lint_stack(stack, report, subj)
+    if len(report.findings) == before:
+        report.prove("planlint/fleet", subject,
+                     f"registry of {len(tuple(models))} models validated "
+                     "(names unique, SLOs satisfiable, canary seeds "
+                     "distinct, stacks clean)", models=len(tuple(models)))

@@ -286,6 +286,49 @@ def convert_stack(layer_params: Dict[str, dict], qcfg: QuantConfig, *,
     return ConvertedStack(qcfg, specs, layers, extras)
 
 
+def stack_digest(stack: ConvertedStack) -> str:
+    """Short content digest of a deployment artifact.
+
+    Covers the full serving identity: the conversion recipe (qcfg label +
+    specs), every layer's arrays and static aux, and every extras leaf —
+    two stacks digest equal iff they serve bit-identically. The fleet
+    control plane records it at register/swap time so an incident replay
+    can prove the rebuilt (or retrained) stack matches the recorded one
+    before comparing any outputs.
+    """
+    import hashlib
+    h = hashlib.blake2s(digest_size=10)
+    h.update(stack.qcfg.label().encode())
+    for s in stack.specs:
+        h.update(f"{s.name}:{int(s.relu_out)}:{int(s.final)}".encode())
+
+    def leaf(x):
+        if isinstance(x, (int, float, bool)):
+            h.update(repr(x).encode())
+        else:
+            a = np.ascontiguousarray(np.asarray(x))
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+
+    def walk(x):
+        if isinstance(x, dict):
+            for k in sorted(x):
+                h.update(str(k).encode())
+                walk(x[k])
+        elif isinstance(x, (list, tuple)):
+            for v in x:
+                walk(v)
+        else:
+            leaf(x)
+
+    for name in stack.layer_names:
+        h.update(name.encode())
+        walk(stack.layers[name])
+    walk(stack.extras)
+    return h.hexdigest()
+
+
 def entry_codes(x, p, qcfg: QuantConfig, *, b_in: float = RELU_BOUND):
     """Quantize a float tensor entering the integer stack to int8 codes."""
     return ops.quantize_to_codes(x, p["s_in"], bits=qcfg.bits_a, b=b_in)

@@ -56,13 +56,34 @@ Scheduling model — a ``tick()`` is one host scheduling quantum:
 Observability (``stats``): counters (``flushes``, ``served``,
 ``padded_rows``, ``ladder_hits``, ``ladder_normalized``,
 ``ladder_misses``, ``window_waits``, ``inflight_peak``,
-``noise_trials`` — flushes dispatched under a noise canary config) plus
-per-bucket
+``noise_trials`` — flushes dispatched under a noise canary config;
+``flush_faults``/``retries``/``stuck_flushes``/``shed`` — fault-layer
+counters, see below) plus per-bucket
 ``wait_ticks`` percentiles — ``{bucket: {n, p50, p99, max}}`` where wait
-is submit-to-dispatch in ticks. Dead buckets (emptied queues) are
-garbage-collected after every tick/drain so bucket state stays bounded
-under high shape cardinality; wait histograms are kept (bounded per
-bucket, capped bucket count) so end-of-run stats survive the GC.
+is submit-to-dispatch in ticks — and ``inflight_age`` (dispatch-to-
+resolve ticks: n/mean/max, the stuck-result metric). Dead buckets
+(emptied queues) are garbage-collected after every tick/drain so bucket
+state stays bounded under high shape cardinality; wait histograms are
+kept (bounded per bucket, capped bucket count) so end-of-run stats
+survive the GC.
+
+Fault boundary (``device``, serve/faults.py): when a device boundary is
+installed, every flush dispatch first asks it for a fate. A failed
+dispatch never reaches the jitted step — the batch requeues at the
+FRONT of its bucket (order preserved), the bucket backs off
+``max(1, backoff_ticks * attempt)`` ticks, and after ``max_retries``
+consecutive failures the batch is shed with a structured
+``flush-fault`` error instead of stalling the scheduler. A "stuck"
+fate parks the dispatch-ahead result for extra ticks
+(``InflightFlush.ready_tick``) — bounded head-of-line latency the
+``inflight_age`` stats expose. ``shed_expired(max_age)`` sheds queued
+requests past a deadline with a structured ``deadline`` error
+(``CNNRequest.error``; ``done`` is set so accounting stays
+exactly-once). Every request carries the ``generation`` of the model
+that served it (``swap_apply_fn`` bumps it), stamped at dispatch time —
+in-flight results keep the OLD generation across a swap. ``on_event``
+receives every decision (flush/fault/retry/shed/resolve/swap) for the
+fleet trace.
 """
 from __future__ import annotations
 
@@ -87,6 +108,9 @@ class CNNRequest:
     x_served: Optional[np.ndarray] = None  # ladder-normalized payload
     submit_tick: int = -1
     wait_ticks: int = -1                   # submit -> dispatch, in ticks
+    finish_tick: int = -1                  # resolve/shed tick
+    generation: int = -1                   # model generation that served it
+    error: Optional[Dict] = None           # structured shed error, else None
 
 
 @dataclasses.dataclass
@@ -96,6 +120,8 @@ class InflightFlush:
     reqs: List[CNNRequest]
     dev_out: object                  # un-fetched device result
     dispatch_tick: int
+    generation: int = 0              # model generation at dispatch
+    ready_tick: int = 0              # dispatch_tick + 1 + injected stuck ticks
 
 
 def batch_bucket(n: int, max_batch: int) -> int:
@@ -143,7 +169,9 @@ class CNNBatcher:
                  dispatch_ahead: bool = False, max_inflight: int = 2,
                  step_fn: Optional[Callable] = None,
                  noise_config: Optional[NoiseConfig] = None,
-                 noise_seed: int = 0):
+                 noise_seed: int = 0,
+                 device=None,
+                 on_event: Optional[Callable[[str, Dict], None]] = None):
         assert max_batch >= 1 and max_inflight >= 1
         self.apply_fn = apply_fn
         self.max_batch = max_batch
@@ -154,8 +182,13 @@ class CNNBatcher:
         self.noise_config = noise_config
         self._noisy = noise_config is not None and noise_config.enabled
         self._noise_key = jax.random.key(noise_seed) if self._noisy else None
+        self._device = device          # serve.faults boundary (or None)
+        self._on_event = on_event
+        self.generation = 0            # bumped by every swap_apply_fn
         self._queues: Dict[Tuple, List[CNNRequest]] = {}
         self._age: Dict[Tuple, int] = {}
+        self._backoff: Dict[Tuple, int] = {}        # bucket -> eligible tick
+        self._flush_attempts: Dict[Tuple, int] = {}  # consecutive faults
         self._inflight: Deque[InflightFlush] = deque()
         self._tick_no = 0
         self._step = step_fn if step_fn is not None \
@@ -163,11 +196,19 @@ class CNNBatcher:
         self._signatures: set = set()
         self._wait_hist: Dict[str, Deque[int]] = {}
         self._wait_stats_cache: Optional[Dict] = None
+        self._inflight_age_sum = 0
+        self._inflight_age_n = 0
         self._counters = {
             "flushes": 0, "served": 0, "padded_rows": 0,
             "ladder_hits": 0, "ladder_normalized": 0, "ladder_misses": 0,
             "window_waits": 0, "inflight_peak": 0, "noise_trials": 0,
+            "flush_faults": 0, "retries": 0, "stuck_flushes": 0, "shed": 0,
+            "inflight_age_max": 0,
         }
+
+    def _emit(self, etype: str, **kw):
+        if self._on_event is not None:
+            self._on_event(etype, kw)
 
     def _make_step(self, apply_fn):
         donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -189,10 +230,16 @@ class CNNBatcher:
         normally. Per-bucket compiled executables for the new closure
         compile lazily on first flush; ``n_signatures`` keeps counting
         distinct (shape, slots) keys, not recompiles.
+
+        Each swap bumps ``generation``; requests record the generation
+        that computed them (stamped at dispatch), so traces and tests
+        can attribute every output to a serving model generation.
         """
         self.apply_fn = apply_fn
         self._step = step_fn if step_fn is not None \
             else self._make_step(apply_fn)
+        self.generation += 1
+        self._emit("swap", generation=self.generation, tick=self._tick_no)
 
     # -- request intake -----------------------------------------------------
 
@@ -238,18 +285,31 @@ class CNNBatcher:
 
     def _flush(self, key: Tuple, reqs: List[CNNRequest]) -> int:
         """Dispatch one padded batch. Returns #requests COMPLETED now
-        (sync: all of them; dispatch-ahead: 0, they resolve later)."""
+        (sync: all of them; dispatch-ahead: 0, they resolve later).
+
+        With a fault boundary installed the dispatch can fail BEFORE
+        reaching the device: the batch requeues at the front of its
+        bucket under backoff, or — past the bounded retry budget — sheds
+        with a structured error."""
         shape, dtype = key
+        stuck = 0
+        if self._device is not None:
+            fate = self._device.flush_fate(tick=self._tick_no)
+            if fate.fail:
+                return self._flush_fault(key, reqs)
+            stuck = fate.stuck_ticks if self.dispatch_ahead else 0
         slots = batch_bucket(len(reqs), self.max_batch)
         x = np.zeros((slots,) + shape, dtype=np.dtype(dtype))
         for i, r in enumerate(reqs):
             x[i] = r.x_served
             r.wait_ticks = self._tick_no - r.submit_tick
+            r.generation = self.generation
         self._record_waits(key, reqs)
         self._signatures.add((key, slots))
         self._counters["flushes"] += 1
         self._counters["padded_rows"] += slots - len(reqs)
         self._age[key] = 0  # every flush restarts the bucket's wait clock
+        self._flush_attempts.pop(key, None)  # success resets retry budget
         if self._noisy:
             # one fresh key per flush: noisy trials differ flush-to-flush
             # but the whole canary run replays bit-exact from noise_seed
@@ -259,13 +319,76 @@ class CNNBatcher:
             dev = self._step(x, key_n)
         else:
             dev = self._step(x)
+        self._emit("flush", key=key, tick=self._tick_no, n=len(reqs),
+                   slots=slots, generation=self.generation, stuck=stuck)
         if self.dispatch_ahead:
+            if stuck:
+                self._counters["stuck_flushes"] += 1
             self._inflight.append(
-                InflightFlush(key, reqs, dev, self._tick_no))
+                InflightFlush(key, reqs, dev, self._tick_no,
+                              generation=self.generation,
+                              ready_tick=self._tick_no + 1 + stuck))
             self._counters["inflight_peak"] = max(
                 self._counters["inflight_peak"], len(self._inflight))
             return 0
-        return self._finish(reqs, dev)
+        n = self._finish(reqs, dev)
+        self._emit("resolve", key=key, tick=self._tick_no, reqs=reqs,
+                   generation=self.generation, age=0)
+        return n
+
+    def _flush_fault(self, key: Tuple, reqs: List[CNNRequest]) -> int:
+        """A dispatch the fault layer failed: bounded retry w/ backoff,
+        then shed. The step never ran, so requeueing is lossless."""
+        attempt = self._flush_attempts.get(key, 0) + 1
+        self._flush_attempts[key] = attempt
+        self._counters["flush_faults"] += 1
+        self._emit("fault", kind="flush-fail", key=key, tick=self._tick_no,
+                   attempt=attempt)
+        if attempt > self._device.max_retries:
+            self._flush_attempts.pop(key, None)
+            self._backoff.pop(key, None)
+            self._shed(reqs, code="flush-fault", attempts=attempt)
+            return 0
+        self._queues.setdefault(key, [])[:0] = reqs  # front: order kept
+        self._age.setdefault(key, 0)
+        until = self._tick_no + max(1, self._device.backoff_ticks * attempt)
+        self._backoff[key] = until
+        self._counters["retries"] += 1
+        self._emit("retry", key=key, tick=self._tick_no, attempt=attempt,
+                   backoff_until=until)
+        return 0
+
+    def _shed(self, reqs: List[CNNRequest], *, code: str, **details):
+        """Shed requests with a structured error (exactly-once: ``done``
+        is set, so a later serve attempt would raise double-served)."""
+        for r in reqs:
+            if r.done:
+                raise RuntimeError(f"request {r.rid} double-served (shed)")
+            r.error = {"code": code, "rid": r.rid, "tick": self._tick_no,
+                       "submit_tick": r.submit_tick, **details}
+            r.finish_tick = self._tick_no
+            r.done = True
+            self._counters["shed"] += 1
+            self._emit("shed", rid=r.rid, code=code, tick=self._tick_no,
+                       submit_tick=r.submit_tick, **details)
+
+    def shed_expired(self, max_age_ticks: int) -> List[CNNRequest]:
+        """Shed queued requests older than ``max_age_ticks`` (submit ->
+        now) with a structured ``deadline`` error, instead of letting
+        them stall behind backoff or a full window. Returns the shed
+        requests; in-flight results are never shed (they resolve)."""
+        out = []
+        for key, q in self._queues.items():
+            keep = []
+            for r in q:
+                age = self._tick_no - r.submit_tick
+                if age > max_age_ticks:
+                    out.append(r)
+                else:
+                    keep.append(r)
+            self._queues[key] = keep
+        self._shed(out, code="deadline", deadline_ticks=max_age_ticks)
+        return out
 
     def _finish(self, reqs: List[CNNRequest], dev) -> int:
         y = np.asarray(jax.device_get(dev))
@@ -273,17 +396,31 @@ class CNNBatcher:
             if r.done:
                 raise RuntimeError(f"request {r.rid} double-served")
             r.out = y[i]
+            r.finish_tick = self._tick_no
             r.done = True
         self._counters["served"] += len(reqs)
         return len(reqs)
 
+    def _resolve_one(self) -> int:
+        """Pop + fetch the head in-flight flush, recording its window age."""
+        f = self._inflight.popleft()
+        age = self._tick_no - f.dispatch_tick
+        self._counters["inflight_age_max"] = max(
+            self._counters["inflight_age_max"], age)
+        self._inflight_age_sum += age
+        self._inflight_age_n += 1
+        n = self._finish(f.reqs, f.dev_out)
+        self._emit("resolve", key=f.key, tick=self._tick_no, reqs=f.reqs,
+                   generation=f.generation, age=age)
+        return n
+
     def _resolve_older_than(self, tick: int) -> int:
-        """Fetch in-flight results dispatched before ``tick`` (the device
-        had the inter-tick interval to run them)."""
+        """Fetch in-flight results that are ready by ``tick`` (the device
+        had the inter-tick interval to run them; a stuck result's
+        ``ready_tick`` was pushed out by the fault layer)."""
         n = 0
-        while self._inflight and self._inflight[0].dispatch_tick < tick:
-            f = self._inflight.popleft()
-            n += self._finish(f.reqs, f.dev_out)
+        while self._inflight and self._inflight[0].ready_tick <= tick:
+            n += self._resolve_one()
         return n
 
     def _candidate(self) -> Optional[Tuple]:
@@ -292,6 +429,8 @@ class CNNBatcher:
         for key, q in self._queues.items():
             if not q:
                 continue
+            if self._backoff.get(key, 0) > self._tick_no:
+                continue  # faulted bucket still backing off
             fill = len(q) / self.max_batch
             if fill < 1.0 and self._age[key] <= self.max_wait_ticks:
                 continue
@@ -305,6 +444,11 @@ class CNNBatcher:
         for key in [k for k, q in self._queues.items() if not q]:
             del self._queues[key]
             self._age.pop(key, None)
+            self._backoff.pop(key, None)
+            self._flush_attempts.pop(key, None)
+        for key in [k for k, t in self._backoff.items()
+                    if t <= self._tick_no]:
+            del self._backoff[key]  # expired backoff, state stays bounded
 
     def tick(self) -> int:
         """One host scheduling quantum. Returns #requests completed.
@@ -342,20 +486,28 @@ class CNNBatcher:
 
     def drain(self) -> int:
         """Flush every pending request and resolve every in-flight result
-        now (shutdown / end of load). Returns #requests completed."""
+        now (shutdown / end of load). Returns #requests completed.
+
+        Dispatch faults during drain retry immediately (no ticks are
+        advancing to serve a backoff): a faulted batch lands back in its
+        queue and the outer loop re-attempts it until it dispatches or
+        exhausts the retry budget and sheds — drain terminates either
+        way, with every request completed exactly once."""
         served = 0
-        for key in list(self._queues):
-            q, self._queues[key] = self._queues[key], []
-            while q:
-                batch, q = q[:self.max_batch], q[self.max_batch:]
-                if self.dispatch_ahead and \
-                        len(self._inflight) >= self.max_inflight:
-                    f = self._inflight.popleft()  # window back-pressure
-                    served += self._finish(f.reqs, f.dev_out)
-                served += self._flush(key, batch)
+        while True:
+            keys = [k for k, q in self._queues.items() if q]
+            if not keys:
+                break
+            for key in keys:
+                q, self._queues[key] = self._queues[key], []
+                while q:
+                    batch, q = q[:self.max_batch], q[self.max_batch:]
+                    if self.dispatch_ahead and \
+                            len(self._inflight) >= self.max_inflight:
+                        served += self._resolve_one()  # window back-pressure
+                    served += self._flush(key, batch)
         while self._inflight:
-            f = self._inflight.popleft()
-            served += self._finish(f.reqs, f.dev_out)
+            served += self._resolve_one()
         self._gc_buckets()
         return served
 
@@ -396,7 +548,14 @@ class CNNBatcher:
     @property
     def stats(self) -> Dict:
         d = dict(self._counters)
+        d["generation"] = self.generation
         d["wait_ticks"] = self.wait_stats()
+        d["inflight_age"] = {
+            "n": self._inflight_age_n,
+            "mean": (self._inflight_age_sum / self._inflight_age_n
+                     if self._inflight_age_n else 0.0),
+            "max": self._counters["inflight_age_max"],
+        }
         return d
 
     # -- convenience --------------------------------------------------------

@@ -123,6 +123,67 @@ def make_qat_train_step(qat_loss_fn, opt: Optimizer, *,
     return jax.jit(step)
 
 
+class QATFinetune:
+    """Budgeted, resumable deploy-QAT finetune — the fleet's background
+    retrain job, and the engine under the Table-7 retrain benchmark.
+
+    Wraps :func:`make_qat_train_step` with the deterministic per-step
+    schedule the retrain benchmark established: step ``i`` samples its
+    batch with ``fold_in(base, 2*i)`` and draws its deployed-noise key
+    with ``deploy_qat.train_step_key(base, 2*i + 1)`` where ``base =
+    jax.random.key(1000 + seed)``. The schedule is a pure function of
+    ``(seed, i)``, so a finetune advanced ``k`` steps at a time (the
+    control plane runs a few steps per scheduler tick to keep serving)
+    is bit-identical with one run to completion — which is what makes
+    a retraining incident replayable.
+
+    ``loss_fn(params, batch, rng) -> scalar`` must run its forward
+    through a ``qat_apply`` (models/kws, models/darknet); ``data`` is the
+    full ``(x, y)`` training set the schedule samples from.
+    """
+
+    def __init__(self, loss_fn, params, opt: Optimizer, *, data,
+                 steps: int, batch: int, seed: int = 0,
+                 clip_norm: Optional[float] = 1.0):
+        self._step_fn = make_qat_train_step(loss_fn, opt,
+                                            clip_norm=clip_norm)
+        self._opt = opt
+        self._opt_state = opt.init(params)
+        self.params = params
+        self._data = data
+        self.steps = int(steps)
+        self.batch = int(batch)
+        self.steps_done = 0
+        self._base = jax.random.key(1000 + seed)
+        self.last_loss: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.steps
+
+    def step(self, n: int = 1) -> dict:
+        """Advance up to ``n`` steps (bounded by the remaining budget)."""
+        from ..core import deploy_qat
+        xtr, ytr = self._data
+        ntr = xtr.shape[0]
+        for _ in range(min(int(n), self.steps - self.steps_done)):
+            i = self.steps_done
+            idx = jax.random.randint(jax.random.fold_in(self._base, 2 * i),
+                                     (self.batch,), 0, ntr)
+            rng = deploy_qat.train_step_key(self._base, 2 * i + 1)
+            self.params, self._opt_state, m = self._step_fn(
+                self.params, self._opt_state, (xtr[idx], ytr[idx]),
+                jnp.int32(i), rng)
+            self.steps_done += 1
+            self.last_loss = float(m["loss"])
+        return {"steps_done": self.steps_done, "loss": self.last_loss}
+
+    def run(self):
+        """Run the remaining budget to completion; returns the params."""
+        self.step(self.steps - self.steps_done)
+        return self.params
+
+
 def make_train_step(model_cfg, qcfg: QuantConfig, opt: Optimizer,
                     tc: TrainConfig = TrainConfig(), mesh=None):
     """Returns step(params, opt_state, batch, step_idx) — pure function,

@@ -338,3 +338,50 @@ def test_continuous_batcher_queue_initialized():
     b = ContinuousBatcher(T.make_params(jax.random.key(0), cfg), cfg,
                           QuantConfig(8, 8), slots=2, max_len=16)
     assert b._queue == []
+
+
+def test_stats_expose_fault_and_age_counters():
+    """ISSUE 7 satellite: per-flush retry/shed/in-flight-age counters in
+    stats(), and the swap-generation stamp on every result."""
+    from repro.serve.faults import FaultPlan, FaultyDevice
+    plan = FaultPlan(seed=9, p_flush_fail=0.5, p_stuck=0.6,
+                     max_stuck_ticks=3, max_retries=2, backoff_ticks=1)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=0,
+                   dispatch_ahead=True, max_inflight=2,
+                   device=FaultyDevice(plan))
+    rng = np.random.default_rng(3)
+    reqs = _reqs([(6, 3)] * 10, rng)
+    b.submit(reqs)
+    for _ in range(60):
+        if not b.outstanding():
+            break
+        b.tick()
+    b.drain()
+    st = b.stats
+    for k in ("flush_faults", "retries", "stuck_flushes", "shed"):
+        assert k in st and st[k] >= 0
+    assert st["flush_faults"] > 0 and st["retries"] > 0
+    age = st["inflight_age"]
+    assert age["n"] > 0 and age["max"] >= 1  # stuck results aged
+    assert age["mean"] <= age["max"]
+    assert st["served"] + st["shed"] == len(reqs)
+
+
+def test_results_carry_generation_stamp():
+    """Every served result records the swap generation that computed it;
+    the stamp is applied at FLUSH time, not submit time."""
+    b = CNNBatcher(_mark_fn, max_batch=4, max_wait_ticks=0)
+    rng = np.random.default_rng(4)
+    first = _reqs([(6, 3)] * 2, rng)
+    b.submit(first)
+    b.drain()
+    b.swap_apply_fn(lambda x: _mark_fn(x) + 1.0)
+    b.swap_apply_fn(lambda x: _mark_fn(x) + 2.0)
+    second = [CNNRequest(rid=10 + i,
+                         x=rng.standard_normal((6, 3)).astype(np.float32))
+              for i in range(2)]
+    b.submit(second)
+    b.drain()
+    assert b.generation == 2 and b.stats["generation"] == 2
+    assert all(r.generation == 0 for r in first)
+    assert all(r.generation == 2 for r in second)

@@ -1,0 +1,316 @@
+"""Fleet control plane (ISSUE 7 tentpole): registry invariants, the
+canary -> breach -> retrain -> hot-swap loop, fault degradation, and
+bit-exact incident replay — all on a toy generation-observable model so
+every assertion is exact. The real-stack end-to-end incident (kws under
+a Table-7 condition with injected faults) lives in benchmarks/fleet_demo
+and is exercised by test_fleet_demo_dry_run below.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.report import Report, Severity
+from repro.analysis import planlint
+from repro.serve import trace as tr
+from repro.serve.faults import FaultPlan, FaultyDevice, FlushFate
+from repro.serve.fleet import (BREACHED, DEGRADED, HEALTHY, RETRAINING,
+                               FleetConfigError, FleetRuntime, ModelSLO,
+                               RequestSpec)
+
+pytestmark = pytest.mark.fleet
+
+
+class ToyStack:
+    """gain is observable in every output, so a swap is detectable."""
+
+    def __init__(self, gain):
+        self.gain = float(gain)
+
+    def rederive(self, layer_params, *, extras=None, check_handoff=True):
+        return ToyStack(self.gain + 1.0)
+
+
+def toy_builder(stack):
+    g = stack.gain
+
+    def fn(x, noise=None, rng=None):
+        y = x * g
+        if noise is not None and rng is not None:
+            # drift model: deployment noise scrambles the outputs
+            y = y + jax.random.normal(rng, y.shape) * noise.sigma_mac * 100.0
+        return y
+    return fn
+
+
+class ToyJob:
+    """Deterministic stand-in for QATFinetuneJob."""
+
+    def __init__(self, steps=25):
+        self.n, self.steps = 0, steps
+
+    @property
+    def done(self):
+        return self.n >= self.steps
+
+    def step(self, k):
+        self.n = min(self.n + k, self.steps)
+        return {"steps_done": self.n, "loss": 1.0 / (1 + self.n)}
+
+    def result(self):
+        return {}, None
+
+
+PROBE = np.random.default_rng(0).standard_normal((8, 6, 3)).astype(np.float32)
+SLO = ModelSLO(deadline_ticks=8, max_agreement_drop=0.2, canary_every=1,
+               canary_window=3, baseline_obs=2, retrain_steps_per_tick=10)
+
+
+def make_fleet(fresh_trace, *, plan=None, factory=lambda s, c: ToyJob(),
+               slo=SLO, dispatch_ahead=True):
+    fresh_trace.emit("config", note="toy")
+    fl = FleetRuntime(fault_plan=plan, trace=fresh_trace)
+    fl.register("toy", ToyStack(2.0), toy_builder, slo=slo, probe=PROBE,
+                canary_seed=11, finetune_factory=factory,
+                batcher_kw=dict(max_batch=4, max_wait_ticks=1,
+                                dispatch_ahead=dispatch_ahead,
+                                max_inflight=2))
+    return fl
+
+
+# -- registry invariants -----------------------------------------------------
+
+def test_register_rejects_duplicate_name_and_seed():
+    fl = make_fleet(tr.Trace())
+    with pytest.raises(FleetConfigError, match="fleet-name"):
+        fl.register("toy", ToyStack(1.0), toy_builder, probe=PROBE,
+                    canary_seed=12)
+    with pytest.raises(FleetConfigError, match="fleet-seed"):
+        fl.register("toy2", ToyStack(1.0), toy_builder, probe=PROBE,
+                    canary_seed=11)
+    assert fl.models == ("toy",)  # failed registrations left no trace
+
+
+def test_register_rejects_unsatisfiable_deadline():
+    plan = FaultPlan(seed=0, p_stuck=0.5, max_stuck_ticks=3,
+                     p_flush_fail=0.1)
+    fl = FleetRuntime(fault_plan=plan, trace=tr.Trace())
+    with pytest.raises(FleetConfigError, match="deadline_ticks"):
+        fl.register("m", ToyStack(1.0), toy_builder, probe=PROBE,
+                    canary_seed=1,
+                    slo=ModelSLO(deadline_ticks=4))  # < 2 + 3
+    fl.register("m", ToyStack(1.0), toy_builder, probe=PROBE,
+                canary_seed=1, slo=ModelSLO(deadline_ticks=5))
+
+
+def test_lint_fleet_findings():
+    report = Report()
+    bad_slo = ModelSLO(deadline_ticks=8, max_agreement_drop=1.5,
+                       canary_window=0)
+    planlint.lint_fleet(
+        [("a", SLO, 1, None), ("a", SLO, 1, None), ("", SLO, 2, None),
+         ("c", bad_slo, 3, None)],
+        report)
+    checks = {f.check for f in report.findings
+              if f.severity >= Severity.ERROR}
+    assert checks == {"planlint/fleet-name", "planlint/fleet-seed",
+                      "planlint/fleet-slo"}
+    clean = Report()
+    planlint.lint_fleet([("a", SLO, 1, None), ("b", SLO, 2, None)], clean)
+    assert not clean.findings and clean.proofs
+
+
+def test_unknown_model_raises():
+    fl = make_fleet(tr.Trace())
+    with pytest.raises(FleetConfigError, match="unknown model"):
+        fl.submit("nope", [RequestSpec(rid=0, seed=0, shape=(6, 3))])
+    with pytest.raises(ValueError, match="duplicate rid"):
+        fl.submit("toy", [RequestSpec(rid=0, seed=0, shape=(6, 3)),
+                          RequestSpec(rid=0, seed=1, shape=(6, 3))])
+
+
+# -- the healing loop --------------------------------------------------------
+
+def drive_incident(fl, *, pre=5, post=15):
+    rid = 0
+    for _ in range(pre):
+        fl.submit("toy", [RequestSpec(rid=rid, seed=42, shape=(6, 3))])
+        rid += 1
+        fl.tick()
+    fl.set_condition("toy", (0.3, 0.3, 1.5))
+    for _ in range(post):
+        fl.submit("toy", [RequestSpec(rid=rid, seed=42, shape=(6, 3))])
+        rid += 1
+        fl.tick()
+    fl.drain()
+
+
+def test_breach_retrain_swap_loop():
+    t = tr.Trace()
+    fl = make_fleet(t)
+    drive_incident(fl)
+    assert len(t.of_type("breach")) == 1
+    breach = t.of_type("breach")[0]
+    assert breach["baseline"] == 1.0 and breach["median"] < 0.8
+    swaps = t.of_type("swap")
+    assert len(swaps) == 1 and swaps[0]["generation"] == 1
+    assert swaps[0]["tick"] > breach["tick"]
+    assert t.of_type("retrain")  # background steps ran between the two
+    m = fl.stats()["toy"]
+    assert m["state"] == HEALTHY and m["generation"] == 1
+    # the baseline re-anchored for the new generation (no re-breach flap)
+    baselines = t.of_type("baseline")
+    assert [b["generation"] for b in baselines] == [0, 1]
+    audit = fl.audit("toy")
+    assert audit["exactly_once"] and audit["within_slo"]
+    # requests flushed after the swap carry the new generation tag
+    gens = {r.generation for r in fl.requests("toy") if r.error is None}
+    assert gens == {0, 1}
+
+
+def test_breach_without_factory_flags_breached():
+    t = tr.Trace()
+    fl = make_fleet(t, factory=None)
+    drive_incident(fl, post=10)
+    assert fl.stats()["toy"]["state"] == BREACHED
+    assert len(t.of_type("breach")) == 1
+    assert not t.of_type("swap") and not t.of_type("retrain")
+    assert fl.audit("toy")["exactly_once"]  # serving never stopped
+
+
+def test_incident_replay_bit_exact(tmp_path):
+    """The full loop — faults + drift + retrain + swap — replays
+    bit-exactly, including through a JSONL round-trip."""
+    plan = FaultPlan(seed=3, p_flush_fail=0.3, p_stuck=0.3,
+                     max_stuck_ticks=2, p_canary_corrupt=0.1)
+    t = tr.Trace()
+    fl = make_fleet(t, plan=plan)
+    drive_incident(fl)
+    assert t.of_type("fault")  # the plan actually fired
+    rep = tr.replay(t, lambda cfg, fresh: make_fleet(fresh, plan=plan))
+    assert rep.bit_exact, rep.summary()
+    p = tmp_path / "incident.jsonl"
+    t.save(str(p))
+    loaded = tr.Trace.load(str(p))
+    rep2 = tr.replay(loaded, lambda cfg, fresh: make_fleet(fresh, plan=plan))
+    assert rep2.bit_exact, rep2.summary()
+    # every line is valid JSON with a type tag (the observability side)
+    for line in p.read_text().splitlines():
+        assert "e" in json.loads(line)
+
+
+def test_replay_detects_divergence():
+    """A drifted model builder must be CAUGHT, not silently accepted."""
+    t = tr.Trace()
+    fl = make_fleet(t)
+    drive_incident(fl, pre=2, post=0)
+
+    def drifted(cfg, fresh):
+        fresh.emit("config", note="toy")
+        f = FleetRuntime(trace=fresh)
+        f.register("toy", ToyStack(3.0), toy_builder, slo=SLO, probe=PROBE,
+                   canary_seed=11, finetune_factory=lambda s, c: ToyJob(),
+                   batcher_kw=dict(max_batch=4, max_wait_ticks=1,
+                                   dispatch_ahead=True, max_inflight=2))
+        return f
+    rep = tr.replay(t, drifted)
+    assert not rep.bit_exact and rep.divergence_index is not None
+
+
+# -- fault degradation -------------------------------------------------------
+
+def test_flush_exhaustion_degrades_to_last_good():
+    t = tr.Trace()
+    fl = make_fleet(t)
+    drive_incident(fl)                       # produces a swap: last_good set
+    m = fl._model("toy")
+    assert m.last_good is not None
+    old_gain = m.last_good[0].gain
+    m.exhausted = True                       # as the shed bridge would set
+    fl.tick()
+    assert m.state == DEGRADED and m.stack.gain == old_gain
+    degrades = t.of_type("degrade")
+    assert degrades and degrades[-1]["reason"] == "flush-retries-exhausted"
+    # last_good captured the PRE-swap stack and its generation tag
+    assert degrades[-1]["to_generation"] == 0
+
+
+def test_exhaustion_without_last_good_keeps_serving():
+    """All-failing device from the start: every request sheds with a
+    structured flush-fault error, the model has no previous stack to
+    fall back to, and the runtime keeps running."""
+    plan = FaultPlan(seed=0, p_flush_fail=1.0, max_retries=2,
+                     backoff_ticks=1)
+    t = tr.Trace()
+    fl = make_fleet(t, plan=plan)
+    rid = 0
+    for _ in range(12):
+        fl.submit("toy", [RequestSpec(rid=rid, seed=1, shape=(6, 3))])
+        rid += 1
+        fl.tick()
+    fl.drain()
+    audit = fl.audit("toy")
+    assert audit["exactly_once"] and audit["served"] == 0
+    assert audit["shed_codes"] == ["flush-fault"]
+    degrades = t.of_type("degrade")
+    assert degrades and all(d["to_generation"] is None for d in degrades)
+    assert fl.stats()["toy"]["state"] == HEALTHY  # nothing to degrade TO
+
+
+def test_deadline_shed_is_structured():
+    """Queued requests that would miss the SLO deadline shed with a
+    deadline error before they can stall the window."""
+    plan = FaultPlan(seed=5, p_flush_fail=0.8, max_retries=5,
+                     backoff_ticks=2, max_stuck_ticks=1, p_stuck=0.5)
+    t = tr.Trace()
+    fl = make_fleet(t, plan=plan,
+                    slo=ModelSLO(deadline_ticks=4, canary_every=0))
+    rid = 0
+    for _ in range(15):
+        fl.submit("toy", [RequestSpec(rid=rid, seed=2, shape=(6, 3))])
+        rid += 1
+        fl.tick()
+    fl.drain()
+    audit = fl.audit("toy")
+    assert audit["exactly_once"] and audit["within_slo"]
+    shed = [r for r in fl.requests("toy") if r.error is not None]
+    assert any(r.error["code"] == "deadline" for r in shed)
+    for r in shed:
+        assert r.error["rid"] == r.rid and "tick" in r.error
+
+
+@pytest.mark.slow
+def test_fleet_demo_dry_run(tmp_path):
+    """The real-stack incident (ISSUE 7 acceptance, dry-run size): kws
+    breaches under the top Table-7 condition with active flush faults,
+    background-retrains, hot-swaps once, and the whole trace replays
+    bit-exactly — every request served exactly once within SLO."""
+    from benchmarks import fleet_demo
+    doc = fleet_demo.run_demo(
+        size="dry", out_path=str(tmp_path / "BENCH_fleet.json"))["fleet"]
+    assert doc["exactly_once_all"] and doc["within_slo_all"]
+    assert doc["replay_bit_exact"]
+    assert doc["incident_healed"]
+    assert doc["breach_tick"] is not None
+    assert doc["swap_tick"] > doc["breach_tick"]
+    assert doc["counters"]["kws"]["generation"] == 1  # no flapping
+    assert doc["counters"]["kws"]["flush_faults"] > 0  # faults were live
+    assert (tmp_path / "BENCH_fleet.json").exists()
+
+
+def test_canary_corruption_median_filtered():
+    """A corrupted canary observation (junk agreement) must not breach a
+    healthy model: the median over the window rides over isolated junk."""
+    plan = FaultPlan(seed=2, p_canary_corrupt=0.15)
+    t = tr.Trace()
+    fl = make_fleet(t, plan=plan,
+                    slo=ModelSLO(deadline_ticks=8, canary_window=7,
+                                 baseline_obs=3))
+    for _ in range(30):
+        fl.tick()
+    canaries = t.of_type("canary")
+    assert any(c["corrupted"] for c in canaries)  # corruption DID fire
+    assert not t.of_type("breach")
+    assert fl.stats()["toy"]["state"] == HEALTHY

@@ -183,3 +183,171 @@ def test_submit_atomic_on_malformed_payload():
     assert b.pending() == 0 and good.x_served is None
     b.submit([good])  # the good request is cleanly retryable
     assert b.pending() == 1
+
+
+# -- fault + hot-swap fuzz (ISSUE 7 tentpole) --------------------------------
+#
+# The same exactly-once contract, now with the device boundary wrapped in
+# a seeded FaultPlan (flush failures + stuck in-flight results) and random
+# hot-swaps/deadline-sheds interleaved. Every submitted request must end
+# DONE in exactly one of two terminal states:
+#   * served: bit-exact vs the generation it was flushed under;
+#   * shed: a structured error (deadline / flush-fault) and no output.
+
+from repro.serve.faults import FaultPlan, FaultyDevice
+
+
+def _gen_toy(g):
+    """The fuzz model family: generation g is observable in the output,
+    so a request served under the wrong generation fails exact parity."""
+    def fn(x, noise=None, rng=None):
+        xi = jnp.round(x.astype(jnp.float32) * 8.0).astype(jnp.int32)
+        axes = tuple(range(1, x.ndim))
+        return jnp.sum(xi * xi, axis=axes) * (3 + g) \
+            + jnp.max(xi, axis=axes) - g
+    return fn
+
+
+_GEN_STEPS = {}  # shared jit cache: one compile per generation
+
+
+def _gen_step(g):
+    if g not in _GEN_STEPS:
+        _GEN_STEPS[g] = jax.jit(_gen_toy(g))
+    return _GEN_STEPS[g]
+
+
+def _run_fault_schedule(seed, dispatch_ahead, *, n_ops=18):
+    rng = np.random.default_rng(seed)
+    plan = FaultPlan(seed=seed, p_flush_fail=float(rng.choice([0.2, 0.4])),
+                     p_stuck=float(rng.choice([0.0, 0.3])),
+                     max_stuck_ticks=2, p_canary_corrupt=0.0,
+                     max_retries=int(rng.integers(1, 4)), backoff_ticks=1)
+    b = CNNBatcher(
+        _gen_toy(0), max_batch=int(rng.choice([2, 4])),
+        max_wait_ticks=int(rng.integers(0, 3)),
+        dispatch_ahead=dispatch_ahead,
+        max_inflight=int(rng.integers(1, 4)),
+        step_fn=_gen_step(0), device=FaultyDevice(plan))
+    reqs = []
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.45:
+            rs = [_mk_request(rng, len(reqs) + i, _SHAPES)
+                  for i in range(int(rng.integers(1, 4)))]
+            b.submit(rs)
+            reqs.extend(rs)
+        elif op < 0.75:
+            b.tick()
+        elif op < 0.85:
+            b.shed_expired(int(rng.integers(2, 6)))
+        elif op < 0.95:
+            g = b.generation + 1
+            b.swap_apply_fn(_gen_toy(g), step_fn=_gen_step(g))
+        else:
+            b.drain()
+    for _ in range(800):
+        if not b.outstanding():
+            break
+        b.tick()
+        if rng.random() < 0.1:  # keep shedding stale work while settling
+            b.shed_expired(4)
+    b.drain()
+    assert not b.outstanding(), f"seed {seed}: requests stuck"
+    return b, reqs
+
+
+def _check_fault_schedule(b, reqs, seed):
+    served = shed = 0
+    for r in reqs:
+        assert r.done, (seed, r.rid)
+        if r.error is not None:
+            shed += 1
+            assert r.out is None, (seed, r.rid)
+            assert r.error["code"] in ("deadline", "flush-fault"), r.error
+            assert r.error["rid"] == r.rid
+        else:
+            served += 1
+            assert r.generation >= 0, (seed, r.rid)
+            want = np.asarray(
+                _gen_toy(r.generation)(jnp.asarray(r.x_served)[None]))[0]
+            assert np.array_equal(np.asarray(r.out), want), (seed, r.rid)
+            assert r.finish_tick >= r.submit_tick >= 0
+    st = b.stats
+    assert served + shed == len(reqs), seed
+    assert st["served"] == served and st["shed"] == shed, seed
+    assert st["retries"] <= st["flush_faults"], seed
+    assert b._queues == {} and not b._inflight, seed
+
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("dispatch_ahead", [False, True])
+def test_fuzz_faults_and_swaps_exactly_once(dispatch_ahead):
+    """Seeded fault schedules, both flush modes: exactly-once with
+    generation-correct outputs or structured shed errors."""
+    for seed in range(30):
+        b, reqs = _run_fault_schedule(2000 + seed, dispatch_ahead)
+        _check_fault_schedule(b, reqs, 2000 + seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch_ahead", [False, True])
+def test_fuzz_faults_and_swaps_long(dispatch_ahead):
+    """The long sweep (>=100 seeds per mode) for nightly runs."""
+    for seed in range(120):
+        b, reqs = _run_fault_schedule(5000 + seed, dispatch_ahead,
+                                      n_ops=30)
+        _check_fault_schedule(b, reqs, 5000 + seed)
+
+
+def test_fault_shed_after_retry_budget():
+    """A bucket that keeps faulting sheds with flush-fault after
+    max_retries consecutive failures — it never wedges the scheduler."""
+    plan = FaultPlan(seed=0, p_flush_fail=1.0, max_retries=2,
+                     backoff_ticks=1)
+    b = CNNBatcher(_gen_toy(0), max_batch=2, max_wait_ticks=0,
+                   step_fn=_gen_step(0), device=FaultyDevice(plan))
+    rs = [CNNRequest(rid=i, x=np.ones((5, 3), np.float32))
+          for i in range(2)]
+    b.submit(rs)
+    for _ in range(20):
+        b.tick()
+        if all(r.done for r in rs):
+            break
+    assert all(r.done and r.error["code"] == "flush-fault" for r in rs)
+    assert all(r.out is None for r in rs)
+    assert b.stats["shed"] == 2
+    assert b.stats["flush_faults"] >= 3  # initial + retries
+    assert b.drain() == 0
+
+
+def test_backoff_delays_retry():
+    """After a fault, the bucket is not retried until the backoff tick
+    passes (attempt-scaled), and a clean device then serves it."""
+    class OneShot:
+        """Fails the first flush attempt only."""
+        def __init__(self):
+            self.dev = FaultyDevice(FaultPlan(seed=1, p_flush_fail=1.0))
+            self.calls = 0
+            self.max_retries = 3
+            self.backoff_ticks = 2
+        def flush_fate(self, *, tick=-1):
+            self.calls += 1
+            if self.calls == 1:
+                return self.dev.flush_fate(tick=tick)
+            from repro.serve.faults import FlushFate
+            return FlushFate(False, 0, -1)
+    dev = OneShot()
+    b = CNNBatcher(_gen_toy(0), max_batch=2, max_wait_ticks=0,
+                   step_fn=_gen_step(0), device=dev)
+    r = CNNRequest(rid=0, x=np.ones((5, 3), np.float32))
+    b.submit([r])
+    b.tick()                      # faults; backoff until tick + 2
+    assert not r.done and b.stats["retries"] == 1
+    b.tick()                      # still backing off: no flush attempt
+    assert dev.calls == 1 and not r.done
+    b.tick()                      # backoff expired: retries and serves
+    assert r.done and r.error is None
+    assert np.array_equal(
+        np.asarray(r.out),
+        np.asarray(_gen_toy(0)(jnp.asarray(r.x_served)[None]))[0])
