@@ -25,7 +25,8 @@
 #                      unsuppressed finding (docs/ANALYSIS.md)
 #   make lint        — byte-compile + import sanity (no external deps)
 #   make check       — lint + analyze + tier-1 tests: the full pre-PR loop
-#   make ci          — lint + analyze + fast tests (excludes
+#   make ci          — lint + analyze + the packed-kernel parity gate
+#                      (@pytest.mark.packed) + fast tests (excludes
 #                      @pytest.mark.slow and @pytest.mark.mutation)
 
 PYTHON ?= python
@@ -79,4 +80,8 @@ lint:
 check: lint analyze test
 
 ci: lint analyze
-	$(PYTHON) -m pytest -q -m "not slow and not mutation"
+	# packed parity gate first: a bit-exactness break fails fast with a
+	# clear signal, then the rest of the fast suite (packed excluded so
+	# the parity grid doesn't run twice)
+	$(PYTHON) -m pytest -q -m packed
+	$(PYTHON) -m pytest -q -m "not slow and not mutation and not packed"

@@ -31,6 +31,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
+from repro.core import quant
 from repro.kernels import fq_conv
 from benchmarks import common
 
@@ -54,19 +55,29 @@ SHAPES = [
 def _khkw(ks):
     return ks if isinstance(ks, tuple) else (ks, ks)
 
+# Weight formats swept per shape: each gets its own table key (kh, kw,
+# stride, format). Packed formats fix bc to the factor-padded cin (whole
+# byte rows), so their candidate grid is bho x bco only.
+FORMATS = ("int8", "ternary", "int4")
+
 # --dry-run: one tiny shape, minimal candidates — exercises the full
 # sweep -> verify -> persist pipeline in seconds (schema/round-trip tests).
 DRY_SHAPES = [
     ("dry_3x3_s1", 1, 8, 8, 8, 8, 3, 1, 1, None),
 ]
+DRY_FORMATS = ("int8", "ternary")
 
 
-def _candidates(*, ho, wo, cin, cout, kh, kw, pool, full: bool):
+def _candidates(*, ho, wo, cin, cout, kh, kw, pool, full: bool,
+                weight_format: str = "int8"):
     bhos = [8, 16, 32, 64, 128] if full else [8, 32, 128]
     bcos = [32, 64, 128, 256] if full else [64, 128]
-    bcs = [d for d in (8, 16, 32, 64, 128, 256) if cin % d == 0] or [cin]
-    if not full:
-        bcs = bcs[-2:]
+    if weight_format != "int8":
+        bcs = [None]  # pick_blocks fixes packed bc to the padded cin
+    else:
+        bcs = [d for d in (8, 16, 32, 64, 128, 256) if cin % d == 0] or [cin]
+        if not full:
+            bcs = bcs[-2:]
     seen, out = set(), []
     for bho in bhos:
         for bco in bcos:
@@ -76,7 +87,7 @@ def _candidates(*, ho, wo, cin, cout, kh, kw, pool, full: bool):
                 eff = fq_conv.pick_blocks(
                     ho=ho, wo=wo, cin=cin, cout=cout, kh=kh, kw=kw,
                     stride=(1, 1), pool=(pool, pool) if pool else None,
-                    bho=bho, bco=bco, bc=bc)
+                    bho=bho, bco=bco, bc=bc, weight_format=weight_format)
                 if eff in seen:
                     continue
                 seen.add(eff)
@@ -85,18 +96,20 @@ def _candidates(*, ho, wo, cin, cout, kh, kw, pool, full: bool):
 
 
 def _time_one(a, w, scale, *, ks, stride, pad, pool, bho, bco, bc, interpret,
-              reps=2):
+              weight_format="int8", reps=2):
     kh, kw = _khkw(ks)
 
     def call():
         return fq_conv.fq_conv2d(
             a, w, scale, kh=kh, kw=kw, stride=(stride, stride),
             padding=(pad, pad), pool=(pool, pool) if pool else None,
-            n_out=15, lo=0, bho=bho, bco=bco, bc=bc, interpret=interpret)
+            n_out=15, lo=0, bho=bho, bco=bco, bc=bc, interpret=interpret,
+            weight_format=weight_format)
     return call, common.timer(call, reps=reps)
 
 
-def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
+def sweep(full: bool = False, shapes=SHAPES, reps: int = 2,
+          formats=FORMATS):
     backend = jax.default_backend()
     interpret = backend != "tpu"
     rows, winners = [], {}
@@ -104,50 +117,64 @@ def sweep(full: bool = False, shapes=SHAPES, reps: int = 2):
     for name, B, H, W, cin, cout, ks, stride, pad, pool in shapes:
         kh, kw = _khkw(ks)
         a = jax.random.randint(k1, (B, H, W, cin), 0, 16).astype(jnp.int8)
-        w = jax.random.randint(k2, (kh * kw * cin, cout), -7, 8
-                               ).astype(jnp.int8)
         scale = jnp.float32(0.01)
         ho = (H + 2 * pad - kh) // stride + 1
         wo = (W + 2 * pad - kw) // stride + 1
-        ref_call, _ = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
-                                pool=pool, bho=None, bco=None, bc=None,
-                                interpret=interpret, reps=reps)
-        ref = np.asarray(ref_call())
-        best = None
-        for bho, bco, bc in _candidates(ho=ho, wo=wo, cin=cin, cout=cout,
-                                        kh=kh, kw=kw, pool=pool, full=full):
-            call, us = _time_one(a, w, scale, ks=ks, stride=stride, pad=pad,
-                                 pool=pool, bho=bho, bco=bco, bc=bc,
-                                 interpret=interpret, reps=reps)
-            rows.append(dict(shape=name, kh=kh, kw=kw, stride=stride,
-                             pool=pool, bho=bho, bco=bco, bc=bc,
-                             wall_us=round(us, 1)))
-            if best is None or us < best[0]:
-                best = (us, (bho, bco, bc), call)
-            print(f"autotune,{name},bho={bho} bco={bco} bc={bc},{us:.0f}us")
-        us, (bho, bco, bc), call = best
-        # blocking must never change the codes — verify the winner
-        np.testing.assert_array_equal(np.asarray(call()), ref)
-        key = (kh, kw, stride)
-        # the unpooled canonical shape owns the key; pooled variant only
-        # claims it if nothing else has
-        if key not in winners or pool is None:
-            winners[key] = dict(kh=kh, kw=kw, stride=stride, bho=bho,
-                                bco=bco, bc=bc, wall_us=round(us, 1),
-                                shape=name, ho=ho)
-            # a bho that equals the sweep shape's (pool-rounded) output
-            # plane was clipped, not chosen — persisting it would cap row
-            # blocking on larger planes that were never measured
-            plane = ho - (ho % pool) if pool else ho
-            if bho >= plane:
-                winners[key].pop("bho")
-            # likewise bc == cin is "no channel blocking", not a measured
-            # sub-blocking choice; persisting it would force a non-divisor
-            # (rounded-down) bc onto served shapes with a different cin
-            # under the same key (e.g. kws conv0's embed width)
-            if bc >= cin:
-                winners[key].pop("bc")
-        print(f"autotune,{name}_winner,bho={bho} bco={bco} bc={bc},{us:.0f}us")
+        for fmt in formats:
+            # codes drawn in the format's own range, packed to its layout
+            n_w = quant.format_range(fmt)
+            w_int8 = jax.random.randint(
+                k2, (kh * kw * cin, cout), -n_w, n_w + 1).astype(jnp.int8)
+            w = w_int8 if fmt == "int8" else \
+                quant.pack_im2col_codes(w_int8, kh * kw, fmt)
+            fname = name if fmt == "int8" else f"{name}_{fmt}"
+            ref_call, _ = _time_one(
+                a, w, scale, ks=ks, stride=stride, pad=pad, pool=pool,
+                bho=None, bco=None, bc=None, interpret=interpret,
+                weight_format=fmt, reps=reps)
+            ref = np.asarray(ref_call())
+            best = None
+            for bho, bco, bc in _candidates(
+                    ho=ho, wo=wo, cin=cin, cout=cout, kh=kh, kw=kw,
+                    pool=pool, full=full, weight_format=fmt):
+                call, us = _time_one(
+                    a, w, scale, ks=ks, stride=stride, pad=pad, pool=pool,
+                    bho=bho, bco=bco, bc=bc, interpret=interpret,
+                    weight_format=fmt, reps=reps)
+                rows.append(dict(shape=fname, kh=kh, kw=kw, stride=stride,
+                                 format=fmt, pool=pool, bho=bho, bco=bco,
+                                 bc=bc, wall_us=round(us, 1)))
+                if best is None or us < best[0]:
+                    best = (us, (bho, bco, bc), call)
+                print(f"autotune,{fname},bho={bho} bco={bco} bc={bc},"
+                      f"{us:.0f}us")
+            us, (bho, bco, bc), call = best
+            # blocking must never change the codes — verify the winner
+            # against the default blocking of the SAME format
+            np.testing.assert_array_equal(np.asarray(call()), ref)
+            key = (kh, kw, stride, fmt)
+            # the unpooled canonical shape owns the key; pooled variant
+            # only claims it if nothing else has
+            if key not in winners or pool is None:
+                winners[key] = dict(kh=kh, kw=kw, stride=stride, format=fmt,
+                                    bho=bho, bco=bco, bc=bc,
+                                    wall_us=round(us, 1), shape=fname, ho=ho)
+                # a bho that equals the sweep shape's (pool-rounded) output
+                # plane was clipped, not chosen — persisting it would cap
+                # row blocking on larger planes that were never measured
+                plane = ho - (ho % pool) if pool else ho
+                if bho >= plane:
+                    winners[key].pop("bho")
+                # likewise bc == cin is "no channel blocking", not a
+                # measured sub-blocking choice; persisting it would force a
+                # non-divisor (rounded-down) bc onto served shapes with a
+                # different cin under the same key (e.g. kws conv0's embed
+                # width). Packed entries never carry bc: serving fixes it
+                # to the factor-padded cin of whatever shape is served.
+                if fmt != "int8" or bc >= cin:
+                    winners[key].pop("bc")
+            print(f"autotune,{fname}_winner,bho={bho} bco={bco} bc={bc},"
+                  f"{us:.0f}us")
     return backend, rows, winners
 
 
@@ -178,7 +205,8 @@ def main(argv=None):
     backend, rows, winners = sweep(
         full=args.full,
         shapes=DRY_SHAPES if args.dry_run else SHAPES,
-        reps=1 if args.dry_run else 2)
+        reps=1 if args.dry_run else 2,
+        formats=DRY_FORMATS if args.dry_run else FORMATS)
     doc = {
         "format": 1,
         "backend": backend,
@@ -187,7 +215,8 @@ def main(argv=None):
                  "entries on other backends" if backend != "tpu"
                  else "compiled Mosaic timings"),
         "entries": sorted(winners.values(),
-                          key=lambda e: (e["kh"], e["kw"], e["stride"])),
+                          key=lambda e: (e["kh"], e["kw"], e["stride"],
+                                         e["format"])),
     }
     with open(args.record, "w") as f:
         json.dump({"benchmark": "fq_conv_autotune_sweep", "backend": backend,

@@ -242,14 +242,21 @@ def bench_kernels():
     print(f"kernels,ref_matmul_us,{us_r:.0f},jnp oracle")
 
 
-def _conv_bytes_model(B, H, W, cin, cout, ks, stride, padding):
-    """Analytic HBM bytes moved per conv, int8 codes (the memory roofline
-    the fused kernel attacks — compulsory traffic only, perfect caching)."""
+def _conv_bytes_model(B, H, W, cin, cout, ks, stride, padding,
+                      weight_format="int8"):
+    """Analytic HBM bytes moved per conv (the memory roofline the fused
+    kernel attacks — compulsory traffic only, perfect caching). Activations
+    are int8 codes; weights are int8 or the packed ``weight_format``
+    layout (int4: 2 codes/byte, ternary: 4 codes/byte, cin padded to the
+    pack factor)."""
+    from repro.core import quant
     hp, wp = H + 2 * padding, W + 2 * padding
     ho = (hp - ks) // stride + 1
     wo = (wp - ks) // stride + 1
+    factor = quant.format_factor(weight_format)
+    cin_p = -(-cin // factor) * factor
     x_b = B * hp * wp * cin                       # read (padded) input codes
-    w_b = ks * ks * cin * cout                    # read weight codes
+    w_b = ks * ks * cin_p * cout // factor        # read (packed) weight bytes
     out_b = B * ho * wo * cout                    # write output codes
     # Both paths edge-pad first: one read of the raw input + one write of
     # the padded copy (O(input), not the ksize**2 patch blow-up).
@@ -258,7 +265,7 @@ def _conv_bytes_model(B, H, W, cin, cout, ks, stride, padding):
     im2col = pad_copy + x_b + patches + patches + w_b + out_b
     fused = pad_copy + x_b + w_b + out_b          # windows gathered in VMEM
     return dict(ho=ho, wo=wo, im2col=im2col, fused=fused,
-                blowup=round(im2col / fused, 2))
+                blowup=round(im2col / fused, 2), w_bytes=w_b)
 
 
 def bench_conv():
@@ -319,6 +326,48 @@ def bench_conv():
         print(f"conv,{name}_hbm_bytes_fused,{m['fused']},analytic")
         print(f"conv,{name}_hbm_bytes_im2col,{m['im2col']},"
               f"{m['blowup']}x blow-up from patch materialization")
+
+        # packed-weight variants: same geometry, weights stored as int4
+        # nibble pairs / 2-bit ternary planes. The im2col path unpacks to
+        # the int8 layout first, so "bit_exact" here means BOTH packed
+        # impls reproduce the im2col int8 oracle on the same codes.
+        from repro.core import quant
+        for fmt in ("ternary", "int4"):
+            n_w = quant.format_range(fmt)
+            w_n = jax.random.randint(k2, (ks * ks * cin, cout), -n_w,
+                                     n_w + 1).astype(jnp.int8)
+            w_p = quant.pack_im2col_codes(w_n, ks * ks, fmt)
+            y_oracle = ops.fq_conv2d_int(a, w_n, scale, impl="im2col", **kw)
+            y_pf = ops.fq_conv2d_int(a, w_p, scale, impl="fused",
+                                     weight_format=fmt, **kw)
+            y_pi = ops.fq_conv2d_int(a, w_p, scale, impl="im2col",
+                                     weight_format=fmt, **kw)
+            p_exact = bool((np.asarray(y_pf) == np.asarray(y_oracle)).all()
+                           and (np.asarray(y_pi)
+                                == np.asarray(y_oracle)).all())
+            f_pf = jax.jit(lambda a_, w_, s_, fmt=fmt: ops.fq_conv2d_int(
+                a_, w_, s_, impl="fused", weight_format=fmt, **kw))
+            us_pf = common.timer(f_pf, a, w_p, scale)
+            mp = _conv_bytes_model(B, H, W, cin, cout, ks, st, pad,
+                                   weight_format=fmt)
+            reduction = round(m["w_bytes"] / mp["w_bytes"], 2)
+            rows.append(dict(
+                shape=f"{name}_{fmt}", B=B, H=H, W=W, cin=cin, cout=cout,
+                ksize=ks, stride=st, padding=pad, weight_format=fmt,
+                bit_exact=p_exact,
+                hbm_bytes_im2col=mp["im2col"], hbm_bytes_fused=mp["fused"],
+                hbm_blowup_im2col_over_fused=mp["blowup"],
+                w_bytes_int8=m["w_bytes"], w_bytes_packed=mp["w_bytes"],
+                weight_bytes_reduction=reduction,
+                wall_us_fused=round(us_pf) if on_tpu else None,
+                interpret_wall_us_fused=None if on_tpu else round(us_pf),
+                backend=backend,
+                timing_note=rows[-1]["timing_note"],
+            ))
+            print(f"conv,{name}_{fmt}_bit_exact,{p_exact},"
+                  "packed fused+im2col vs im2col int8 oracle")
+            print(f"conv,{name}_{fmt}_w_bytes,{mp['w_bytes']},"
+                  f"{reduction}x weight-HBM reduction vs int8")
     with open("BENCH_conv.json", "w") as f:
         json.dump({"benchmark": "fq_conv_fused_vs_im2col", "rows": rows}, f,
                   indent=2)

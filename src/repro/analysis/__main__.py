@@ -15,12 +15,16 @@ from .targets import DEFAULT_MAC_CHUNKS, darknet_target, kws_target, \
 
 
 def build_targets(names, *, reduced: bool):
+    # each stack is analyzed twice: int8 and its packed (auto-format) twin
     out = []
     for n in names:
         if n == "kws":
             out.append(kws_target(reduced=reduced))
+            out.append(kws_target(reduced=reduced, weight_format="auto"))
         elif n == "darknet":
             out.append(darknet_target(reduced=reduced))
+            out.append(darknet_target(reduced=reduced,
+                                      weight_format="auto"))
         else:
             raise SystemExit(f"unknown stack {n!r} (kws/darknet)")
     return out

@@ -739,6 +739,64 @@ def _bitwise(interp, eqn, ins):
     return [dtype_interval(aval.dtype, _t(*ins))]
 
 
+def _pow2_mask_above(hi: float) -> float:
+    """Smallest 2^k - 1 >= hi (an all-ones mask covering hi's bits)."""
+    m = 1
+    while m - 1 < int(hi):
+        m <<= 1
+    return float(m - 1)
+
+
+def _bitwise_and(interp, eqn, ins):
+    """x & y stays in [0, x] whenever x >= 0, for ANY y (the sign bit of
+    the nonnegative operand is clear, and every result bit is a subset of
+    its bits). Needed to trace packed-weight unpack chains tightly."""
+    aval = eqn.outvars[0].aval
+    if np.dtype(aval.dtype) == np.bool_:
+        return [AbsVal(0, 1, _t(*ins))]
+    t = _t(*ins)
+    his = [v.hi for v in ins if v.lo >= 0 and v.finite]
+    if his:
+        return [AbsVal(0.0, float(min(his)), t)]
+    return [dtype_interval(aval.dtype, t)]
+
+
+def _bitwise_or_xor(interp, eqn, ins):
+    """For nonnegative x, y: x|y and x^y never set a bit above the highest
+    bit of max(x, y), so both lie in [0, 2^k - 1]; x|y >= max(x, y)."""
+    aval = eqn.outvars[0].aval
+    if np.dtype(aval.dtype) == np.bool_:
+        return [AbsVal(0, 1, _t(*ins))]
+    a, b = ins
+    t = _t(a, b)
+    if a.lo >= 0 and b.lo >= 0 and a.finite and b.finite:
+        hi = _pow2_mask_above(max(a.hi, b.hi))
+        lo = max(a.lo, b.lo) if eqn.primitive.name == "or" else 0.0
+        return [AbsVal(lo, hi, t)]
+    return [dtype_interval(aval.dtype, t)]
+
+
+def _shift_left(interp, eqn, ins):
+    a, s = ins
+    t = _t(a, s)
+    if a.finite and s.concrete and s.finite and s.lo >= 0:
+        k = int(s.lo)
+        if k < 63:  # beyond that, python-int math is sound but pointless
+            return [_clip_wrap(interp, eqn, AbsVal(
+                float(int(a.lo) << k), float(int(a.hi) << k), t))]
+    return [dtype_interval(eqn.outvars[0].aval.dtype, t)]
+
+
+def _shift_right_arithmetic(interp, eqn, ins):
+    a, s = ins
+    t = _t(a, s)
+    if a.finite and s.concrete and s.finite and s.lo >= 0:
+        k = int(s.lo)
+        # python's >> on ints IS arithmetic shift, negatives included
+        return [AbsVal(float(int(a.lo) >> k), float(int(a.hi) >> k), t)]
+    return [dtype_interval(eqn.outvars[0].aval.dtype, t)]
+
+
 def _shift_right_logical(interp, eqn, ins):
     a, s = ins
     t = _t(a, s)
@@ -818,9 +876,10 @@ _TRANSFER: Dict[str, Callable] = {
     "is_finite": _bool_out,
     # comparisons / logic
     "eq": _cmp, "ne": _cmp, "lt": _cmp, "le": _cmp, "gt": _cmp, "ge": _cmp,
-    "and": _bitwise, "or": _bitwise, "xor": _bitwise, "not": _bitwise,
-    "shift_left": _bitwise, "shift_right_logical": _shift_right_logical,
-    "shift_right_arithmetic": _bitwise,
+    "and": _bitwise_and, "or": _bitwise_or_xor, "xor": _bitwise_or_xor,
+    "not": _bitwise,
+    "shift_left": _shift_left, "shift_right_logical": _shift_right_logical,
+    "shift_right_arithmetic": _shift_right_arithmetic,
     "select_n": _select_n,
     # iota / reductions / contractions
     "iota": _iota, "reduce_sum": _reduce_sum, "reduce_max": _reduce_minmax,

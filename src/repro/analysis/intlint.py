@@ -25,7 +25,7 @@ mac_chunks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,11 +76,18 @@ def _is_float_dtype(aval) -> bool:
 
 
 class IntLintChecker(Checker):
-    def __init__(self, report: Report, subject: str):
+    def __init__(self, report: Report, subject: str,
+                 weight_range=None):
         self.report = report
         self.subject = subject
         self.max_acc_bound = 0.0   # widest finite int32 accumulation seen
         self.contraction_depths = []
+        # (lo, hi) bound every contraction's WEIGHT operand must provably
+        # lie in — set for packed cores to the sign-extended decode range
+        # of the declared weight_format, so a broken unpack (e.g. missing
+        # nibble sign extension: fields land in [0, 2^bits-1] instead of
+        # the symmetric code range) is a finding, not silent garbage.
+        self.weight_range = weight_range
 
     # -- purity ------------------------------------------------------------
 
@@ -147,6 +154,24 @@ class IntLintChecker(Checker):
                 f"(itemsize {dt.itemsize} < 4) at {interp.where()}",
                 primitive="dot_general", dtype=dt.name, depth=csize,
                 location=interp.where())
+        if self.weight_range is not None and len(ins) > 1 \
+                and isinstance(ins[1], AbsVal):
+            # weights are the rhs operand of every contraction in this
+            # codebase (activations @ weights); a packed core's unpacked
+            # weight tile must provably decode into the declared format's
+            # sign-extended range.
+            lo, hi = self.weight_range
+            rhs = ins[1]
+            if not rhs.finite or rhs.lo < lo or rhs.hi > hi:
+                self.report.error(
+                    "intlint/weight-range", self.subject,
+                    f"dot_general weight operand bound "
+                    f"[{rhs.lo:.3g}, {rhs.hi:.3g}] is not provably inside "
+                    f"the declared packed-weight decode range [{lo}, {hi}] "
+                    f"at {interp.where()} — a broken unpack (sign "
+                    "extension, field masks) would look exactly like this",
+                    primitive="dot_general", lo=rhs.lo, hi=rhs.hi,
+                    expected=(lo, hi), location=interp.where())
 
     def on_signed_wrap(self, interp, eqn, raw: AbsVal, dtype):
         self.report.error(
@@ -173,6 +198,10 @@ class TraceSpec:
     expect_float_out: bool = False
     # which positional args carry quantized codes (tainted at entry)
     tainted_args: Optional[Sequence[int]] = None
+    # (lo, hi) decode range every contraction's weight operand must
+    # provably lie in — set for packed-weight cores
+    # (core.quant.format_interval), None disables the check
+    weight_range: Optional[Tuple[int, int]] = None
 
 
 def lint_trace(spec: TraceSpec, report: Report) -> None:
@@ -211,7 +240,8 @@ def lint_trace(spec: TraceSpec, report: Report) -> None:
                      f"({len(closed.jaxpr.invars)})")
         return
 
-    checker = IntLintChecker(report, subject)
+    checker = IntLintChecker(report, subject,
+                             weight_range=spec.weight_range)
     interp = Interp(checker)
     n_before = len(report.findings) + len(report.suppressed)
     try:

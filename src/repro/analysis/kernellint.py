@@ -24,6 +24,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+from ..core import quant
 from ..kernels import fq_conv
 from .report import Report
 
@@ -55,10 +56,11 @@ class ConvShape:
     kw: int
     stride: Tuple[int, int] = (1, 1)
     pool: Optional[Tuple[int, int]] = None
+    weight_format: str = "int8"
 
     @property
-    def key(self) -> Tuple[int, int, int]:
-        return (self.kh, self.kw, self.stride[0])
+    def key(self) -> Tuple[int, int, int, str]:
+        return (self.kh, self.kw, self.stride[0], self.weight_format)
 
 
 def lint_table_schema(report: Report,
@@ -115,6 +117,22 @@ def lint_table_schema(report: Report,
             bad += 1
             report.error("kernellint/table-schema", esub,
                          f"non-positive shape key {key}", key=key)
+        fmt = e.get("format", "int8")
+        if not isinstance(fmt, str) or fmt not in quant.WEIGHT_FORMATS:
+            bad += 1
+            report.error(
+                "kernellint/table-schema", esub,
+                f"unknown weight format {fmt!r} for key {key} (known: "
+                f"{quant.WEIGHT_FORMATS}) — the loader silently skips "
+                "this row", key=key, format=repr(fmt))
+            continue
+        key = key + (fmt,)
+        if fmt != "int8" and e.get("bc") is not None:
+            report.warning(
+                "kernellint/table-schema", esub,
+                f"packed entry {key} carries bc={e['bc']!r} — pick_blocks "
+                "fixes packed bc to the padded cin, so this knob is dead",
+                key=key, bc=e["bc"])
         knobs = {}
         for k in _KNOBS:
             if k not in e or e[k] is None:
@@ -165,12 +183,19 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
     missed = {}
     for s in shapes:
         sub = s.name
+        packed = s.weight_format != "int8"
+        # packed kernels read whole bytes: the effective channel extent is
+        # cin padded to the pack factor (activations are zero-padded to
+        # match; pad lanes are inert in the integer MAC)
+        factor = quant.format_factor(s.weight_format)
+        cin_eff = -(-s.cin // factor) * factor
         over = table.get(s.key, {})
         # mirror serve-time semantics for the table's bc knob: pick_blocks
         # rounds a table bc down to a cin divisor (only an *explicit* bc
         # must divide exactly), so a non-divisor row serves fine — but the
-        # measured winner silently doesn't apply, which is worth a warning
-        over_bc = over.get("bc")
+        # measured winner silently doesn't apply, which is worth a warning.
+        # Packed shapes never take a table bc (bc is fixed to cin_eff).
+        over_bc = over.get("bc") if not packed else None
         if over_bc is not None and s.cin % over_bc != 0:
             eff = fq_conv._divisor_at_most(s.cin, over_bc)
             report.warning(
@@ -184,7 +209,8 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
             bho, bco, bc = fq_conv.pick_blocks(
                 ho=s.ho, wo=s.wo, cin=s.cin, cout=s.cout, kh=s.kh,
                 kw=s.kw, stride=s.stride, pool=s.pool,
-                bho=over.get("bho"), bco=over.get("bco"), bc=over_bc)
+                bho=over.get("bho"), bco=over.get("bco"), bc=over_bc,
+                weight_format=s.weight_format)
         except ValueError as e:
             clean = False
             report.error("kernellint/blockspec", sub,
@@ -193,12 +219,12 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
             continue
 
         # grid divisibility invariants the kernel's index maps assume
-        if s.cin % bc != 0:
+        if cin_eff % bc != 0:
             clean = False
             report.error(
                 "kernellint/blockspec", sub,
-                f"bc={bc} does not divide cin={s.cin} — weight-row reads "
-                "cross a tap boundary", bc=bc, cin=s.cin)
+                f"bc={bc} does not divide cin={cin_eff} — weight-row "
+                "reads cross a tap boundary", bc=bc, cin=cin_eff)
         if s.pool is not None and bho % s.pool[0] != 0:
             clean = False
             report.error(
@@ -210,7 +236,7 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
             clean = False
             report.error("kernellint/blockspec", sub,
                          f"non-positive block ({bho}, {bco}, {bc})")
-        n_red = s.kh * s.kw * (s.cin // max(bc, 1))
+        n_red = s.kh * s.kw * (cin_eff // max(bc, 1))
         grid = (math.ceil(s.ho / bho) * 1, math.ceil(s.cout / bco), n_red)
         if any(g < 1 for g in grid):
             clean = False
@@ -218,7 +244,8 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
                          f"degenerate grid {grid}", grid=grid)
 
         vmem = fq_conv.vmem_footprint(bho=bho, wo=s.wo, bco=bco, bc=bc,
-                                      stride=s.stride)
+                                      stride=s.stride,
+                                      weight_format=s.weight_format)
         report.count("kernellint/shapes-checked")
         if vmem > budget:
             clean = False

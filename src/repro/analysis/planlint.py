@@ -28,6 +28,7 @@ import numpy as np
 
 import jax
 
+from ..core import quant
 from ..core.noise import derive_seed
 from ..core.quant import n_levels
 from .report import Report
@@ -111,15 +112,37 @@ def lint_stack(stack, report: Report, subject: str,
                     f"{qcfg.label()} (expected {want})",
                     field=k, got=int(got), want=want)
 
-        # -- code range ----------------------------------------------------
-        codes = np.asarray(layer["w_codes"])
+        # -- weight format + code range ------------------------------------
+        # Packed layers store uint8 nibble/bit-plane bytes; the range
+        # contract is on the DECODED codes, so unpack first (pad rows
+        # decode to 0 and are inert). A tampered packed byte whose field
+        # decodes outside +/-n_w (e.g. ternary field 0b10 -> -2) is a
+        # code-range finding, not silent garbage.
+        fmt = layer.get("weight_format", "int8")
+        spec_fmt = getattr(spec, "weight_format", "int8")
+        if fmt not in quant.WEIGHT_FORMATS:
+            report.error(
+                "planlint/weight-format", lsub,
+                f"unknown weight_format {fmt!r} (known: "
+                f"{quant.WEIGHT_FORMATS}) — the kernel dispatch would "
+                "reject this layer", format=fmt)
+            continue
+        if fmt != spec_fmt:
+            report.error(
+                "planlint/weight-format", lsub,
+                f"layer stores weight_format={fmt!r} but its spec "
+                f"declares {spec_fmt!r} — rederive() would re-pack into "
+                "a different layout", layer_format=fmt,
+                spec_format=spec_fmt)
+        codes = np.asarray(quant.unpack_codes(
+            np.asarray(layer["w_codes"]), fmt))
         n_w = int(layer.get("n_w", exp_n_w))
         if codes.size and (codes.min() < -n_w or codes.max() > n_w):
             report.error(
                 "planlint/code-range", lsub,
                 f"weight codes [{codes.min()}, {codes.max()}] outside "
                 f"[-{n_w}, {n_w}]", lo=int(codes.min()),
-                hi=int(codes.max()), n_w=n_w)
+                hi=int(codes.max()), n_w=n_w, format=fmt)
 
         # -- rescale representability --------------------------------------
         key = "alpha" if "alpha" in layer else "rescale"
@@ -139,7 +162,7 @@ def lint_stack(stack, report: Report, subject: str,
             # requant must be able to reach the top output code: the max
             # accumulator magnitude n_a * n_w * depth times rescale should
             # not round to 0 for every input (a degenerate epilogue).
-            depth = int(np.asarray(layer["w_codes"]).shape[0])
+            depth = int(codes.shape[0])  # unpacked rows, not packed bytes
             acc_max = float(exp_n_a * n_w * depth)
             if acc_max * val < 0.5:
                 rescale_ok = False
@@ -181,7 +204,7 @@ def lint_stack(stack, report: Report, subject: str,
     rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
     for spec in stack.specs:
         a, b = stack.layers[spec.name], rebuilt.layers[spec.name]
-        for k in ("n_out", "lo", "n_w", "n_a"):
+        for k in ("n_out", "lo", "n_w", "n_a", "weight_format"):
             if a.get(k) != b.get(k) or \
                     type(a.get(k)) is not type(b.get(k)):
                 static_ok = False

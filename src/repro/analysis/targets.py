@@ -14,8 +14,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import quant
 from ..core.noise import NoiseConfig
-from ..core.quant import QuantConfig
+from ..core.quant import QuantConfig, n_levels
 from ..models import darknet, kws
 from . import intlint, kernellint, planlint
 from .intlint import TraceSpec
@@ -55,12 +56,23 @@ class StackTarget:
     plan: Optional[list] = None    # darknet-style plan (fused-pool lint)
     n_pool_markers: int = 0
     core_example: Tuple = ()       # example codes for int_core tracing
+    weight_format: str = "int8"    # packed storage the stack was built with
 
 
-def _standin(module, cfg, names, qcfg, *, s_out=0.2, seed=0):
+def _resolve_format(qcfg: QuantConfig, weight_format: Optional[str]) -> str:
+    if weight_format is None:
+        return "int8"
+    if weight_format == "auto":
+        return quant.auto_weight_format(n_levels(qcfg.bits_w))
+    return weight_format
+
+
+def _standin(module, cfg, names, qcfg, *, s_out=0.2, seed=0,
+             weight_format="int8"):
     """Init-and-fold integer stand-in with a consistent hand-off chain
     (same recipe as the benchmarks' ``trained_int_params``)."""
-    key = (module.__name__, cfg, tuple(names), qcfg, float(s_out), int(seed))
+    key = (module.__name__, cfg, tuple(names), qcfg, float(s_out), int(seed),
+           weight_format)
     hit = _STANDIN_CACHE.get(key)
     if hit is not None:
         return hit
@@ -70,7 +82,8 @@ def _standin(module, cfg, names, qcfg, *, s_out=0.2, seed=0):
         params[n]["s_out"] = jnp.float32(s_out)
     for a, b in zip(names, names[1:]):
         params[b]["s_in"] = params[a]["s_out"]
-    out = (params, state, module.convert_int(params, state, qcfg, cfg))
+    out = (params, state, module.convert_int(params, state, qcfg, cfg,
+                                             weight_format=weight_format))
     _STANDIN_CACHE[key] = out
     return out
 
@@ -80,20 +93,21 @@ def _standin(module, cfg, names, qcfg, *, s_out=0.2, seed=0):
 # ---------------------------------------------------------------------------
 
 
-def kws_conv_shapes(cfg, batch: int = 1) -> List[ConvShape]:
+def kws_conv_shapes(cfg, batch: int = 1,
+                    weight_format: str = "int8") -> List[ConvShape]:
     shapes = []
     t, cin = cfg.seq_len, cfg.embed
     for name, dil in kws.layer_plan(cfg):
         t_out = t - dil * (cfg.ksize - 1)
         shapes.append(ConvShape(
             name=f"kws/{name}", ho=t_out, wo=1, cin=cin, cout=cfg.filters,
-            kh=cfg.ksize, kw=1))
+            kh=cfg.ksize, kw=1, weight_format=weight_format))
         t, cin = t_out, cfg.filters
     return shapes
 
 
-def darknet_conv_shapes(cfg, input_hw: int, batch: int = 1
-                        ) -> List[ConvShape]:
+def darknet_conv_shapes(cfg, input_hw: int, batch: int = 1,
+                        weight_format: str = "int8") -> List[ConvShape]:
     """Geometries of the INTEGER convs (the FP edge convs never hit the
     int kernels). SAME padding keeps H through convs; pools floor-halve."""
     convs = [l for l in cfg.layers if l != "M"]
@@ -116,7 +130,7 @@ def darknet_conv_shapes(cfg, input_hw: int, batch: int = 1
         shapes.append(ConvShape(
             name=f"darknet/{name}", ho=h, wo=h, cin=cins[name],
             cout=couts[name], kh=ks, kw=ks,
-            pool=(2, 2) if pooled else None))
+            pool=(2, 2) if pooled else None, weight_format=weight_format))
         if pooled:
             h = h // 2
     return shapes
@@ -128,25 +142,33 @@ def darknet_conv_shapes(cfg, input_hw: int, batch: int = 1
 
 
 def kws_target(qcfg: QuantConfig = DEFAULT_QCFG, *, reduced: bool = False,
-               batch: int = 1) -> StackTarget:
+               batch: int = 1,
+               weight_format: Optional[str] = None) -> StackTarget:
+    fmt = _resolve_format(qcfg, weight_format)
     cfg = kws.KWSConfig.reduced() if reduced else kws.KWSConfig()
     names = kws.conv_names(cfg)
-    fq_params, _, stack = _standin(kws, cfg, names, qcfg)
+    fq_params, _, stack = _standin(kws, cfg, names, qcfg, weight_format=fmt)
     codes = jnp.zeros((batch, cfg.seq_len, cfg.embed), jnp.int8)
+    name = "kws-reduced" if reduced else "kws"
+    if fmt != "int8":
+        name = f"{name}-{fmt}"
     return StackTarget(
-        name="kws-reduced" if reduced else "kws",
+        name=name,
         module=kws, cfg=cfg, qcfg=qcfg, fq_params=fq_params, stack=stack,
-        chain=names, shapes=kws_conv_shapes(cfg, batch),
-        core_example=(codes,))
+        chain=names, shapes=kws_conv_shapes(cfg, batch, weight_format=fmt),
+        core_example=(codes,), weight_format=fmt)
 
 
 def darknet_target(qcfg: QuantConfig = DEFAULT_QCFG, *,
-                   reduced: bool = False, batch: int = 1) -> StackTarget:
+                   reduced: bool = False, batch: int = 1,
+                   weight_format: Optional[str] = None) -> StackTarget:
+    fmt = _resolve_format(qcfg, weight_format)
     cfg = darknet.DarkNetConfig.reduced() if reduced else darknet.DarkNetConfig()
     input_hw = DARKNET_REDUCED_INPUT if reduced else DARKNET_INPUT
     all_names = [f"conv{i}" for i in
                  range(len([l for l in cfg.layers if l != "M"]))]
-    fq_params, _, stack = _standin(darknet, cfg, all_names, qcfg)
+    fq_params, _, stack = _standin(darknet, cfg, all_names, qcfg,
+                                   weight_format=fmt)
     plan = darknet.layer_plan(cfg)
     # core input: codes right after the FP prefix (conv0 + pre-entry pools)
     h = input_hw
@@ -155,19 +177,27 @@ def darknet_target(qcfg: QuantConfig = DEFAULT_QCFG, *,
             h = h // 2
     convs = [l for l in cfg.layers if l != "M"]
     codes = jnp.zeros((batch, h, h, convs[0][1]), jnp.int8)
+    name = "darknet-reduced" if reduced else "darknet"
+    if fmt != "int8":
+        name = f"{name}-{fmt}"
     return StackTarget(
-        name="darknet-reduced" if reduced else "darknet",
+        name=name,
         module=darknet, cfg=cfg, qcfg=qcfg, fq_params=fq_params,
         stack=stack, chain=darknet.int_conv_names(cfg),
-        shapes=darknet_conv_shapes(cfg, input_hw, batch),
+        shapes=darknet_conv_shapes(cfg, input_hw, batch, weight_format=fmt),
         plan=plan, n_pool_markers=sum(1 for l in cfg.layers if l == "M"),
-        core_example=(codes,))
+        core_example=(codes,), weight_format=fmt)
 
 
 def default_targets(qcfg: QuantConfig = DEFAULT_QCFG, *,
                     reduced: bool = False) -> List[StackTarget]:
+    # int8 stacks plus their packed (auto: ternary at the default
+    # 2-bit-weight qcfg) twins — the packed cores are traced and their
+    # served shape keys linted exactly like the int8 ones.
     return [kws_target(qcfg, reduced=reduced),
-            darknet_target(qcfg, reduced=reduced)]
+            darknet_target(qcfg, reduced=reduced),
+            kws_target(qcfg, reduced=reduced, weight_format="auto"),
+            darknet_target(qcfg, reduced=reduced, weight_format="auto")]
 
 
 # ---------------------------------------------------------------------------
@@ -183,13 +213,17 @@ def core_traces(target: StackTarget, *, impls: Sequence[str] = ("im2col",
     ip, qcfg, cfg, mod = (target.stack, target.qcfg, target.cfg,
                           target.module)
     rng = jax.random.key(7)
+    # packed cores additionally prove the unpacked weight operand of every
+    # contraction decodes into the declared format's sign-extended range
+    wr = (quant.format_interval(target.weight_format)
+          if target.weight_format != "int8" else None)
     specs = []
     for impl in impls:
         def clean(codes, impl=impl):
             return mod.int_core(ip, codes, qcfg, cfg, impl=impl)
 
         specs.append(TraceSpec(f"{target.name}/{impl}/clean", clean,
-                               target.core_example))
+                               target.core_example, weight_range=wr))
         for k in mac_chunks:
             def noisy(codes, impl=impl, k=k):
                 return mod.int_core(ip, codes, qcfg, cfg, impl=impl,
@@ -197,7 +231,7 @@ def core_traces(target: StackTarget, *, impls: Sequence[str] = ("im2col",
 
             specs.append(TraceSpec(
                 f"{target.name}/{impl}/noise/mac_chunks={k}", noisy,
-                target.core_example))
+                target.core_example, weight_range=wr))
     return specs
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from . import quant
 from .noise import NoiseConfig, derive_seed, perturb_codes
 from .quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND, n_levels,
                     quantize_to_int)
@@ -55,7 +56,9 @@ def _validate_layer(p, out, name: Optional[str]):
                          "cast NaN/inf to garbage int8 codes)")
     codes = out["w_codes"]
     if _is_concrete(codes):
-        c = np.asarray(codes, dtype=np.int32)
+        # packed codes are decoded first; the zero pad lanes are in range
+        c = np.asarray(quant.unpack_codes(
+            codes, out.get("weight_format", "int8")), dtype=np.int32)
         if c.min() < -out["n_w"] or c.max() > out["n_w"]:
             raise ValueError(
                 f"{tag}: weight codes [{c.min()}, {c.max()}] outside the "
@@ -70,20 +73,46 @@ def _validate_layer(p, out, name: Optional[str]):
 
 def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
                   final: bool = False, validate: bool = True,
-                  name: Optional[str] = None):
+                  name: Optional[str] = None, weight_format: str = "int8"):
     """Trained FQ layer params -> integer deployment params.
 
-    Returns a dict with int8 ``w_codes`` plus the folded epilogue scalar:
+    Returns a dict with ``w_codes`` plus the folded epilogue scalar:
     ``rescale`` (inner layers) or ``alpha`` (final layer, dequant epilogue).
-    ``validate`` checks the produced codes against the recorded quantizer
-    ranges and the folded scalar for finiteness, raising a clear error
-    instead of deploying silently-clipped garbage.
+    ``weight_format`` selects weight-code storage: "int8" keeps the im2col
+    int8 layout; "int4"/"ternary" pack 2/4 codes per byte (per-tap channel
+    padding for conv weights — see core.quant). A format whose quantizer
+    range cannot hold bits_w codes raises (never silently clip a trained
+    code into a smaller declared range); this check is static, so it also
+    fires under tracing. ``validate`` checks the produced codes against
+    the recorded quantizer ranges and the folded scalar for finiteness,
+    raising a clear error instead of deploying silently-clipped garbage.
     """
     assert qcfg.fq and qcfg.bits_out is not None and qcfg.bits_w is not None
+    if weight_format not in quant.WEIGHT_FORMATS:
+        raise ValueError(
+            f"convert_layer({name or 'layer'}): unknown weight_format "
+            f"{weight_format!r}; expected one of {quant.WEIGHT_FORMATS}")
+    if quant.format_range(weight_format) < n_levels(qcfg.bits_w):
+        raise ValueError(
+            f"convert_layer({name or 'layer'}): weight_format="
+            f"{weight_format!r} holds codes in ±{quant.format_range(weight_format)} "
+            f"but bits_w={qcfg.bits_w} trains codes in "
+            f"±{n_levels(qcfg.bits_w)} — refusing to clip")
     w_codes = quantize_to_int(p["w"], p["s_w"], bits=qcfg.bits_w,
                               b=WEIGHT_BOUND)
+    flat = w_codes.reshape(-1, w_codes.shape[-1])  # im2col layout
+    if weight_format == "int8":
+        stored = flat
+    elif w_codes.ndim >= 3:
+        # conv weights: (taps..., cin, cout) — pad cin per tap so every
+        # tap owns whole byte rows (the fused kernel's read granularity)
+        taps = int(np.prod(w_codes.shape[:-2]))
+        stored = quant.pack_im2col_codes(flat, taps, weight_format)
+    else:
+        stored = quant.pack_codes(flat, weight_format)
     out = {
-        "w_codes": w_codes.reshape(-1, w_codes.shape[-1]),  # im2col layout
+        "w_codes": stored,
+        "weight_format": weight_format,
         "n_out": n_levels(qcfg.bits_out),
         "lo": 0 if relu_out else -n_levels(qcfg.bits_out),
         "s_out": p["s_out"],
@@ -115,10 +144,15 @@ def convert_layer(p, qcfg: QuantConfig, *, relu_out: bool = True,
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
-    """Static per-layer conversion recipe (aux data of the stack pytree)."""
+    """Static per-layer conversion recipe (aux data of the stack pytree).
+
+    ``weight_format`` is part of the recipe: ``rederive`` re-packs with
+    the same format, so a packed stack round-trips bit-exactly.
+    """
     name: str
     relu_out: bool = True
     final: bool = False
+    weight_format: str = "int8"
 
 
 class ConvertedStack:
@@ -194,7 +228,8 @@ class ConvertedStack:
         layers = {
             s.name: convert_layer(layer_params[s.name], self.qcfg,
                                   relu_out=s.relu_out, final=s.final,
-                                  name=s.name)
+                                  name=s.name,
+                                  weight_format=s.weight_format)
             for s in self.specs
         }
         extras = dict(self.extras if extras is None else extras)
@@ -205,11 +240,11 @@ class ConvertedStack:
         return ConvertedStack(self.qcfg, self.specs, layers, extras)
 
 
-# Python-int fields of a converted layer (kernel grid / epilogue statics).
-# They flatten into pytree AUX data, not leaves, so a ConvertedStack can
-# cross a jit boundary as an argument without tracing n_out/lo into the
-# kernels' static parameters.
-_STATIC_LAYER_KEYS = ("n_out", "lo", "n_w", "n_a")
+# Python-int/str fields of a converted layer (kernel grid / epilogue /
+# dispatch statics). They flatten into pytree AUX data, not leaves, so a
+# ConvertedStack can cross a jit boundary as an argument without tracing
+# n_out/lo/weight_format into the kernels' static parameters.
+_STATIC_LAYER_KEYS = ("n_out", "lo", "n_w", "n_a", "weight_format")
 
 
 def _stack_flatten(s: ConvertedStack):
@@ -273,14 +308,28 @@ def sync_handoff(params: Dict[str, dict], names: Sequence[str]):
 
 def convert_stack(layer_params: Dict[str, dict], qcfg: QuantConfig, *,
                   specs: Sequence[LayerSpec], extras: Dict[str, Any],
-                  check_handoff: bool = True) -> ConvertedStack:
-    """Convert an ordered chain of trained FQ layers into a ConvertedStack."""
+                  check_handoff: bool = True,
+                  weight_format: Optional[str] = None) -> ConvertedStack:
+    """Convert an ordered chain of trained FQ layers into a ConvertedStack.
+
+    ``weight_format`` overrides every spec's storage format: an explicit
+    format name, or "auto" for the densest format that holds bits_w codes
+    (ternary nets pack 4 codes/byte). The resolved format is recorded on
+    the specs, so ``rederive`` re-packs identically. ``None`` keeps each
+    spec's own (default int8) format.
+    """
     specs = tuple(specs)
+    if weight_format is not None:
+        fmt = (quant.auto_weight_format(n_levels(qcfg.bits_w))
+               if weight_format == "auto" else weight_format)
+        specs = tuple(dataclasses.replace(s, weight_format=fmt)
+                      for s in specs)
     if check_handoff:
         _check_handoff(layer_params, specs)
     layers = {
         s.name: convert_layer(layer_params[s.name], qcfg,
-                              relu_out=s.relu_out, final=s.final, name=s.name)
+                              relu_out=s.relu_out, final=s.final, name=s.name,
+                              weight_format=s.weight_format)
         for s in specs
     }
     return ConvertedStack(qcfg, specs, layers, extras)
@@ -300,7 +349,8 @@ def stack_digest(stack: ConvertedStack) -> str:
     h = hashlib.blake2s(digest_size=10)
     h.update(stack.qcfg.label().encode())
     for s in stack.specs:
-        h.update(f"{s.name}:{int(s.relu_out)}:{int(s.final)}".encode())
+        h.update(f"{s.name}:{int(s.relu_out)}:{int(s.final)}"
+                 f":{s.weight_format}".encode())
 
     def leaf(x):
         if isinstance(x, (int, float, bool)):
@@ -364,8 +414,17 @@ def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
     # else; the DAC range must cover BOTH, else a bits_a < bits_out config
     # would have the noise clip destroy valid codes.
     a_hi = max(ip.get("n_a", 127), ip.get("n_out", 127))
-    w_codes = perturb_codes(ip["w_codes"], k_w, noise.sigma_w,
+    fmt = ip.get("weight_format", "int8")
+    w_codes = ip["w_codes"]
+    if fmt != "int8":
+        # memory-cell noise perturbs CODES, not storage bytes: unpack,
+        # perturb, re-pack. The perturbed pad lanes stay inert (their
+        # activation lanes are zero / sliced away on both impls).
+        w_codes = quant.unpack_codes(w_codes, fmt)
+    w_codes = perturb_codes(w_codes, k_w, noise.sigma_w,
                             lo=-n_w, hi=n_w)
+    if fmt != "int8":
+        w_codes = quant.pack_codes(w_codes, fmt)
     a_codes = perturb_codes(codes, k_a, noise.sigma_a, lo=0, hi=a_hi)
     if noise.sigma_mac > 0:
         return (w_codes, a_codes, noise.sigma_mac / ip["rescale"],
@@ -375,12 +434,14 @@ def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
 
 def int_linear(ip, codes):
     return ops.int_matmul(codes, ip["w_codes"], ip["rescale"],
-                          epilogue="requant", n_out=ip["n_out"], lo=ip["lo"])
+                          epilogue="requant", n_out=ip["n_out"], lo=ip["lo"],
+                          weight_format=ip.get("weight_format", "int8"))
 
 
 def int_linear_final(ip, codes):
     return ops.int_matmul(codes, ip["w_codes"], ip["alpha"],
-                          epilogue="dequant")
+                          epilogue="dequant",
+                          weight_format=ip.get("weight_format", "int8"))
 
 
 def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1, impl=None,
@@ -391,7 +452,8 @@ def int_conv1d(ip, codes, *, ksize: int, dilation: int = 1, impl=None,
                              ksize=ksize, dilation=dilation,
                              n_out=ip["n_out"], lo=ip["lo"], impl=impl,
                              noise_sigma_acc=sig, noise_seed=seed,
-                             mac_chunks=mac_chunks)
+                             mac_chunks=mac_chunks,
+                             weight_format=ip.get("weight_format", "int8"))
 
 
 def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0,
@@ -404,20 +466,23 @@ def int_conv2d(ip, codes, *, ksize: int, stride: int = 1, padding: int = 0,
                              dilation=dilation,
                              n_out=ip["n_out"], lo=ip["lo"], impl=impl,
                              noise_sigma_acc=sig, noise_seed=seed,
-                             mac_chunks=mac_chunks)
+                             mac_chunks=mac_chunks,
+                             weight_format=ip.get("weight_format", "int8"))
 
 
 def int_conv1d_final(ip, codes, *, ksize: int, dilation: int = 1, impl=None):
     return ops.fq_conv1d_int(codes, ip["w_codes"], ip["alpha"],
                              ksize=ksize, dilation=dilation,
-                             epilogue="dequant", impl=impl)
+                             epilogue="dequant", impl=impl,
+                             weight_format=ip.get("weight_format", "int8"))
 
 
 def int_conv2d_final(ip, codes, *, ksize: int, stride: int = 1,
                      padding: int = 0, dilation: int = 1, impl=None):
     return ops.fq_conv2d_int(codes, ip["w_codes"], ip["alpha"],
                              ksize=ksize, stride=stride, padding=padding,
-                             dilation=dilation, epilogue="dequant", impl=impl)
+                             dilation=dilation, epilogue="dequant", impl=impl,
+                             weight_format=ip.get("weight_format", "int8"))
 
 
 def int_conv2d_pool(ip, codes, *, ksize: int, stride: int = 1,
@@ -439,7 +504,9 @@ def int_conv2d_pool(ip, codes, *, ksize: int, stride: int = 1,
                                   dilation=dilation, pool=pool,
                                   n_out=ip["n_out"], lo=ip["lo"], impl=impl,
                                   noise_sigma_acc=sig, noise_seed=seed,
-                                  mac_chunks=mac_chunks)
+                                  mac_chunks=mac_chunks,
+                                  weight_format=ip.get("weight_format",
+                                                       "int8"))
 
 
 def int_maxpool2d(codes, *, window: int = 2, stride: int = 2):

@@ -155,6 +155,176 @@ class QuantConfig:
         return ("FQ" if self.fq else "Q") + base
 
 
+# ---------------------------------------------------------------------------
+# Packed weight storage (ternary / int4 nibble formats)
+# ---------------------------------------------------------------------------
+#
+# Weight codes live in a symmetric range [-n, n] with n = n_levels(bits_w);
+# for the paper's headline nets bits_w = 2 (ternary, n = 1). Storing those
+# codes as full int8 wastes 2-4x the weight HBM traffic, so deployment can
+# pack several codes per byte:
+#
+#   format    bits/code  codes/byte  stored range   quantizer range
+#   "int8"        8          1        [-128, 127]      [-127, 127]
+#   "int4"        4          2        [-8, 7]          [-7, 7]
+#   "ternary"     2          4        [-2, 1]          [-1, 1]
+#
+# Layout: byte r of a packed (ceil(K/factor), N) uint8 array holds original
+# rows r*factor + i in bit-field i (little-endian within the byte), each
+# field a two's-complement value. Rows are padded with code 0 up to a
+# factor multiple; zero fields decode to code 0, so pad lanes are inert in
+# any integer MAC. ``unpack_codes(pack_codes(c, f), f)[:K] == c`` exactly.
+
+WEIGHT_FORMATS = ("int8", "int4", "ternary")
+
+_FORMAT_BITS = {"int8": 8, "int4": 4, "ternary": 2}
+
+
+def _check_format(fmt: str) -> None:
+    if fmt not in WEIGHT_FORMATS:
+        raise ValueError(
+            f"unknown weight_format {fmt!r}; expected one of {WEIGHT_FORMATS}")
+
+
+def format_factor(fmt: str) -> int:
+    """Codes stored per byte (the analytic weight-HBM-byte reduction)."""
+    _check_format(fmt)
+    return 8 // _FORMAT_BITS[fmt]
+
+
+def format_range(fmt: str) -> int:
+    """Largest symmetric quantizer level ±n the format can represent."""
+    _check_format(fmt)
+    return 2 ** (_FORMAT_BITS[fmt] - 1) - 1
+
+
+def format_interval(fmt: str):
+    """(lo, hi) of every value a sign-extended field can decode to.
+
+    Asymmetric: two's complement reaches one level below -format_range
+    (e.g. a ternary 2-bit field decodes to [-2, 1] though the quantizer
+    only ever emits [-1, 1]). intlint uses this as the weight-operand
+    bound when proving packed cores.
+    """
+    _check_format(fmt)
+    b = _FORMAT_BITS[fmt]
+    return (-(2 ** (b - 1)), 2 ** (b - 1) - 1)
+
+
+def auto_weight_format(n_w: int) -> str:
+    """Densest format whose quantizer range covers codes in [-n_w, n_w]."""
+    if n_w <= 1:
+        return "ternary"
+    if n_w <= 7:
+        return "int4"
+    return "int8"
+
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def pack_codes(codes: jax.Array, fmt: str) -> jax.Array:
+    """Pack (K, N) integer weight codes into (ceil(K/factor), N) uint8.
+
+    Concrete codes outside the format's symmetric quantizer range
+    ±format_range(fmt) raise ValueError — packing must never silently
+    clip a trained code. Traced inputs (conversion under jit, e.g.
+    deploy-QAT) skip the value check; the conversion layer enforces the
+    static ``format_range(fmt) >= n_w`` contract instead.
+
+    ``fmt == "int8"`` is the identity storage format (int8 out).
+    """
+    _check_format(fmt)
+    if codes.ndim != 2:
+        raise ValueError(f"pack_codes expects (K, N) codes, got {codes.shape}")
+    r = format_range(fmt)
+    if not _is_traced(codes):
+        import numpy as np
+        c = np.asarray(codes)
+        if c.size and (int(c.min()) < -r or int(c.max()) > r):
+            raise ValueError(
+                f"codes out of range for weight_format={fmt!r}: "
+                f"[{int(c.min())}, {int(c.max())}] vs allowed [-{r}, {r}]")
+    if fmt == "int8":
+        return jnp.asarray(codes, jnp.int8)
+    bits = _FORMAT_BITS[fmt]
+    factor = format_factor(fmt)
+    codes = jnp.asarray(codes)
+    rows, n = codes.shape
+    pad = -rows % factor
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    mask = (1 << bits) - 1
+    grouped = codes.astype(jnp.int32).reshape(-1, factor, n)
+    packed = jnp.zeros_like(grouped[:, 0])
+    for i in range(factor):
+        packed = packed | ((grouped[:, i] & mask) << (i * bits))
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, fmt: str,
+                 rows: Optional[int] = None) -> jax.Array:
+    """Invert :func:`pack_codes`: (Kp, N) uint8 -> (Kp*factor, N) int8.
+
+    ``rows`` trims trailing zero pad rows back off. Pure integer ops
+    (shift / mask / xor-subtract sign extension), so the same expression
+    runs inside a Pallas kernel body and under intlint's abstract
+    interpreter.
+    """
+    _check_format(fmt)
+    if fmt == "int8":
+        out = jnp.asarray(packed, jnp.int8)
+        return out if rows is None else out[:rows]
+    bits = _FORMAT_BITS[fmt]
+    factor = format_factor(fmt)
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    p = jnp.asarray(packed).astype(jnp.int32)
+    fields = [(((p >> (i * bits)) & mask) ^ sign) - sign for i in range(factor)]
+    out = jnp.stack(fields, axis=1)
+    out = out.reshape(p.shape[0] * factor, p.shape[1]).astype(jnp.int8)
+    return out if rows is None else out[:rows]
+
+
+def pack_im2col_codes(w_codes: jax.Array, taps: int, fmt: str) -> jax.Array:
+    """Pack (taps*cin, N) tap-major im2col weight codes.
+
+    The conv kernels read whole per-tap row groups, so each tap must own
+    an integral number of bytes: cin is padded up to the pack factor
+    *per tap* (zero codes) before packing. Result:
+    (taps*ceil(cin/factor)*factor/factor, N) uint8.
+    """
+    _check_format(fmt)
+    if fmt == "int8":
+        return pack_codes(w_codes, fmt)
+    k, n = w_codes.shape
+    if k % taps:
+        raise ValueError(f"rows {k} not divisible by taps {taps}")
+    cin = k // taps
+    pad = -cin % format_factor(fmt)
+    w = jnp.asarray(w_codes)
+    if pad:
+        w = jnp.pad(w.reshape(taps, cin, n), ((0, 0), (0, pad), (0, 0)))
+        w = w.reshape(taps * (cin + pad), n)
+    return pack_codes(w, fmt)
+
+
+def unpack_im2col_codes(packed: jax.Array, taps: int, cin: int,
+                        fmt: str) -> jax.Array:
+    """Invert :func:`pack_im2col_codes`, dropping the per-tap pad lanes:
+    back to (taps*cin, N) int8 im2col weights — the parity oracle's
+    layout."""
+    _check_format(fmt)
+    if fmt == "int8":
+        return unpack_codes(packed, fmt)
+    w = unpack_codes(packed, fmt)
+    cin_p = w.shape[0] // taps
+    if cin_p != cin:
+        w = w.reshape(taps, cin_p, -1)[:, :cin, :].reshape(taps * cin, -1)
+    return w
+
+
 # The paper's ladders (Tables 1, 4, 6), selectable by name.
 LADDERS = {
     # Table 1 — ResNet-20 / CIFAR-10: FP0 -> Q88 -> ... -> Q22

@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Fused integer kernels for the FQ-Conv deployment path.
+#
+#   fq_matmul.py — int8/packed GEMM core: int32 accumulator, fused
+#                  requant/dequant epilogue, §4.4 deterministic ADC-noise
+#                  epilogue, mac_chunks chunked accumulation.
+#   fq_conv.py   — implicit-GEMM Pallas conv (1d/2d): gathers windows in
+#                  VMEM instead of materializing im2col patches in HBM;
+#                  fused 2x2-maxpool epilogue; same epilogues as the GEMM.
+#   quantize.py  — learned-step quantize/dequant helpers shared with train.
+#   ops.py       — the single dispatch seam (impl="fused" | "im2col");
+#                  im2col + fq_matmul at int8 is the parity oracle every
+#                  other path must match bit-for-bit.
+#
+# Weights travel in one of three formats (core/quant.py packing layer):
+# "int8" (1 code/byte), "int4" (2/byte), "ternary" (4/byte). Packed codes
+# are unpacked in VMEM ahead of the MAC, so every epilogue and the
+# autotune table (autotune_table.json, keyed (kh, kw, stride, format))
+# see identical int32 accumulators regardless of storage format.
+# See docs/KERNELS.md for the packed layout and the parity-oracle policy.

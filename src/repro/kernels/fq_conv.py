@@ -54,18 +54,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core import quant
 from .fq_matmul import TPUCompilerParams, apply_epilogue, noise_tile
 
 # ---------------------------------------------------------------------------
 # Block-size selection
 # ---------------------------------------------------------------------------
 
-# Hand defaults, keyed by (kh, kw, stride_h); measured sweep entries from
-# autotune_table.json override these when their backend matches.
+# Hand defaults, keyed by (kh, kw, stride_h, weight_format); measured sweep
+# entries from autotune_table.json override these when their backend
+# matches. Packed lookups that miss fall back to the same-shape int8 entry
+# (minus bc, which packed kernels derive from cin).
 _BUILTIN_TABLE: dict = {
-    (3, 3, 1): {"bco": 128},
-    (3, 3, 2): {"bco": 128},
-    (1, 1, 1): {"bho": 128, "bco": 128},
+    (3, 3, 1, "int8"): {"bco": 128},
+    (3, 3, 2, "int8"): {"bco": 128},
+    (1, 1, 1, "int8"): {"bho": 128, "bco": 128},
 }
 
 AUTOTUNE_TABLE_PATH = os.path.join(os.path.dirname(__file__),
@@ -75,11 +78,11 @@ AUTOTUNE_TABLE_PATH = os.path.join(os.path.dirname(__file__),
 class AutotuneMissWarning(UserWarning):
     """A served conv shape has no *measured* autotune entry for the active
     backend family — block sizes fall back to builtin defaults / the VMEM
-    heuristic. Structured: ``.key`` is the (kh, kw, stride) lookup key and
-    ``.backend`` the backend it was missing for, so the analysis report
-    can count misses instead of scraping warning text."""
+    heuristic. Structured: ``.key`` is the (kh, kw, stride, weight_format)
+    lookup key and ``.backend`` the backend it was missing for, so the
+    analysis report can count misses instead of scraping warning text."""
 
-    def __init__(self, key: Tuple[int, int, int], backend: str):
+    def __init__(self, key: Tuple[int, int, int, str], backend: str):
         self.key = key
         self.backend = backend
         super().__init__(
@@ -107,10 +110,13 @@ def load_autotune_table(path: str = AUTOTUNE_TABLE_PATH) -> dict:
         return table
     for e in doc.get("entries", []):
         try:
-            key = (int(e["kh"]), int(e["kw"]), int(e["stride"]))
+            fmt = str(e.get("format", "int8"))
+            key = (int(e["kh"]), int(e["kw"]), int(e["stride"]), fmt)
             knobs = {k: int(e[k]) for k in ("bho", "bco", "bc") if e.get(k)}
         except (KeyError, TypeError, ValueError):
             continue  # a malformed entry never takes the defaults down
+        if fmt not in quant.WEIGHT_FORMATS:
+            continue  # kernellint reports this; the loader stays lenient
         table[key] = knobs
     return table
 
@@ -122,8 +128,9 @@ AUTOTUNE_TABLE: Optional[dict] = None
 # Keys whose knobs came from a measured (backend-matching) JSON entry, as
 # opposed to the builtin defaults — the miss warning keys off this set.
 MEASURED_KEYS: Optional[set] = None
-# (kh, kw, stride) -> number of pick_blocks lookups that missed a measured
-# entry; repro.analysis folds these counts into its report.
+# (kh, kw, stride, weight_format) -> number of pick_blocks lookups that
+# missed a measured entry; repro.analysis folds these counts into its
+# report.
 AUTOTUNE_MISSES: dict = {}
 _WARNED_KEYS: set = set()
 
@@ -141,7 +148,8 @@ def measured_keys(path: str = AUTOTUNE_TABLE_PATH) -> set:
         return keys
     for e in doc.get("entries", []):
         try:
-            keys.add((int(e["kh"]), int(e["kw"]), int(e["stride"])))
+            keys.add((int(e["kh"]), int(e["kw"]), int(e["stride"]),
+                      str(e.get("format", "int8"))))
         except (KeyError, TypeError, ValueError):
             continue
     return keys
@@ -164,7 +172,7 @@ def reset_autotune_cache():
     _WARNED_KEYS.clear()
 
 
-def _note_autotune_miss(key: Tuple[int, int, int]):
+def _note_autotune_miss(key: Tuple[int, int, int, str]):
     AUTOTUNE_MISSES[key] = AUTOTUNE_MISSES.get(key, 0) + 1
     if key not in _WARNED_KEYS:
         _WARNED_KEYS.add(key)
@@ -183,16 +191,22 @@ def _divisor_at_most(n: int, cap: int) -> int:
 
 
 def vmem_footprint(*, bho: int, wo: int, bco: int, bc: int,
-                   stride: Tuple[int, int]) -> int:
-    """Static VMEM bytes of one grid step: int8 x-window + int8 weight
-    slice + int32 accumulator scratch + the out tile (worst case f32).
-    Shared with repro.analysis.kernellint, which checks it against the
+                   stride: Tuple[int, int],
+                   weight_format: str = "int8") -> int:
+    """Static VMEM bytes of one grid step: int8 x-window + weight slice +
+    int32 accumulator scratch + the out tile (worst case f32). Shared
+    with repro.analysis.kernellint, which checks it against the
     per-backend budget so a bad autotune row is a lint error rather than
-    a Mosaic OOM."""
+    a Mosaic OOM. Packed formats stream bc*bco/factor weight bytes but
+    also materialize the unpacked int8 tile before the MAC, so both
+    terms count."""
     bhi = (bho - 1) * stride[0] + 1
     bwi = (wo - 1) * stride[1] + 1
+    factor = quant.format_factor(weight_format)
     x_b = bhi * bwi * bc          # int8 window
-    w_b = bc * bco                # int8 weight slice
+    w_b = bc * bco                # int8 weight slice (unpacked)
+    if factor > 1:
+        w_b += bc * bco // factor  # plus the packed byte tile it came from
     acc = 4 * bho * wo * bco      # int32 scratch
     out = bho * wo * bco          # int8/f32 out tile (worst: 4x)
     return x_b + w_b + acc + 4 * out
@@ -201,7 +215,8 @@ def vmem_footprint(*, bho: int, wo: int, bco: int, bc: int,
 def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
                 stride: Tuple[int, int], pool: Optional[Tuple[int, int]] = None,
                 bho: Optional[int] = None, bco: Optional[int] = None,
-                bc: Optional[int] = None) -> Tuple[int, int, int]:
+                bc: Optional[int] = None,
+                weight_format: str = "int8") -> Tuple[int, int, int]:
     """(bho, bco, bc): output-row / output-channel / input-channel blocks.
 
     Explicit arguments win, then the autotune table, then a VMEM-budget
@@ -212,27 +227,48 @@ def pick_blocks(*, ho: int, wo: int, cin: int, cout: int, kh: int, kw: int,
     down to a multiple of the pool height so pool windows never straddle a
     row-tile boundary (explicit values included — tiling is a performance
     knob, never a semantics knob).
+
+    Packed weight formats fix ``bc`` to cin rounded up to the pack
+    factor: a partial-channel block would split weight rows mid-byte.
+    Autotune entries for the packed key override bho/bco only; a missing
+    packed entry borrows the same-shape int8 entry's bho/bco.
     """
-    if bc is not None and cin % bc != 0:
+    packed = weight_format != "int8"
+    factor = quant.format_factor(weight_format)
+    if packed:
+        cin_p = -(-cin // factor) * factor
+        if bc is not None and bc != cin_p:
+            raise ValueError(
+                f"weight_format={weight_format!r} requires bc == cin "
+                f"padded to the pack factor ({cin_p}), got bc={bc}")
+        bc = cin_p
+    elif bc is not None and cin % bc != 0:
         raise ValueError(f"bc={bc} must divide cin={cin}")
-    key = (kh, kw, stride[0])
-    over = _autotune_table().get(key, {})
-    if (bho is None or bco is None or bc is None) \
-            and key not in (MEASURED_KEYS or ()):
+    key = (kh, kw, stride[0], weight_format)
+    over = _autotune_table().get(key)
+    if over is None and packed:
+        over = {k: v for k, v in _autotune_table().get(
+            (kh, kw, stride[0], "int8"), {}).items() if k != "bc"}
+    over = over or {}
+    explicit = bho is not None and bco is not None \
+        and (packed or bc is not None)
+    if not explicit and key not in (MEASURED_KEYS or ()):
         # only a real table consultation counts as a miss; fully-explicit
         # knobs never look at the table
         _note_autotune_miss(key)
     bco = bco or over.get("bco")
     bho = bho or over.get("bho")
-    bc = bc or over.get("bc")
+    if not packed:
+        bc = bc or over.get("bc")
+        bc = _divisor_at_most(cin, bc or 512)
 
     bco = min(bco or 128, cout)
-    bc = _divisor_at_most(cin, bc or 512)
 
     if bho is None:
         bho = min(ho, 128)
-        while bho > 1 and vmem_footprint(bho=bho, wo=wo, bco=bco, bc=bc,
-                                         stride=stride) > _VMEM_BUDGET:
+        while bho > 1 and vmem_footprint(
+                bho=bho, wo=wo, bco=bco, bc=bc, stride=stride,
+                weight_format=weight_format) > _VMEM_BUDGET:
             bho = (bho + 1) // 2
     bho = min(bho, ho)
     if pool is not None:
@@ -250,7 +286,7 @@ def _kernel(scale_ref, x_ref, w_ref, *refs, n_red: int,
             stride: Tuple[int, int], bho: int, wo: int,
             pool: Optional[Tuple[int, int]], epilogue: str, n_out: int,
             lo: int, noise: bool, mac_chunks: int, n_i: int, ho: int,
-            cout: int):
+            cout: int, weight_format: str):
     if noise:
         sigma_ref, seed_ref, o_ref, acc_ref = refs
         # program_id reads hoisted out of the pl.when body (interpret
@@ -266,8 +302,13 @@ def _kernel(scale_ref, x_ref, w_ref, *refs, n_red: int,
 
     # (bhi, bwi, bc) window -> strided view (bho, wo, bc) -> (bho*wo, bc).
     v = x_ref[0][:: stride[0], :: stride[1], :]
+    w_tap = w_ref[...]
+    if weight_format != "int8":
+        # (bc/factor, bco) packed bytes -> (bc, bco) int8 codes in VMEM
+        # ahead of the MAC; accumulator math is the int8 kernel's.
+        w_tap = quant.unpack_codes(w_tap, weight_format)
     acc_ref[...] += jnp.dot(
-        v.reshape(bho * wo, -1), w_ref[...],
+        v.reshape(bho * wo, -1), w_tap,
         preferred_element_type=jnp.int32,
     )
 
@@ -315,11 +356,12 @@ def _kernel(scale_ref, x_ref, w_ref, *refs, n_red: int,
     jax.jit,
     static_argnames=("kh", "kw", "stride", "padding", "dilation", "pool",
                      "epilogue", "n_out", "lo", "bho", "bco", "bc",
-                     "mac_chunks", "interpret"),
+                     "mac_chunks", "interpret", "weight_format"),
 )
 def fq_conv2d(
     a_codes: jax.Array,   # (B, H, W, Cin) int8
-    w_codes: jax.Array,   # (kh*kw*Cin, Cout) int8, tap-major
+    w_codes: jax.Array,   # (kh*kw*Cin, Cout) int8, tap-major; packed
+                          # formats: (kh*kw*cin_p/factor, Cout) uint8
     scale: jax.Array,     # scalar f32: rescale (requant) or alpha (dequant)
     *,
     kh: int,
@@ -338,8 +380,19 @@ def fq_conv2d(
     noise_seed: Optional[jax.Array] = None,
     mac_chunks: int = 1,
     interpret: bool = False,
+    weight_format: str = "int8",
 ) -> jax.Array:
     """Fused int8 NHWC conv2d with the requant/dequant epilogue in VMEM.
+
+    ``weight_format`` in {"int8", "int4", "ternary"} selects weight
+    storage. Packed weights keep the tap-major im2col layout but with the
+    per-tap channel count padded up to the pack factor at conversion time
+    (``cin_p = ceil(cin/factor)*factor``, pad codes 0) and every factor
+    consecutive rows packed into one uint8 row — so each tap owns a whole
+    number of byte rows. Activations are zero-padded to cin_p channels
+    here, making the pad lanes 0*0 contributions; tiles are unpacked in
+    VMEM before the MAC, so accumulator/pool/noise/epilogue behavior is
+    bit-identical to the int8 path.
 
     ``pool=(ph, pw)`` additionally fuses a non-overlapping VALID maxpool
     (window == stride, e.g. (2, 2)) into the epilogue: the pool runs on the
@@ -362,7 +415,19 @@ def fq_conv2d(
         "noise_seed is required when noise_sigma_acc is set"
     b, h, w, cin = a_codes.shape
     kcin, cout = w_codes.shape
-    assert kcin == kh * kw * cin, (w_codes.shape, (kh, kw, cin))
+    factor = quant.format_factor(weight_format)
+    if weight_format != "int8":
+        cin_p = -(-cin // factor) * factor
+        assert kcin * factor == kh * kw * cin_p, \
+            (w_codes.shape, (kh, kw, cin, weight_format))
+        if cin_p != cin:
+            # zero activation lanes to pair with the zero-code pad rows
+            # packed at conversion time — 0 * 0 contributions, inert
+            a_codes = jnp.pad(
+                a_codes, ((0, 0), (0, 0), (0, 0), (0, cin_p - cin)))
+            cin = cin_p
+    else:
+        assert kcin == kh * kw * cin, (w_codes.shape, (kh, kw, cin))
     sh, sw = stride
     dh, dw = dilation
     ph, pw = padding
@@ -380,7 +445,7 @@ def fq_conv2d(
 
     bho, bco, bc = pick_blocks(ho=ho, wo=wo, cin=cin, cout=cout, kh=kh,
                                kw=kw, stride=stride, pool=pool, bho=bho,
-                               bco=bco, bc=bc)
+                               bco=bco, bc=bc, weight_format=weight_format)
     n_i = pl.cdiv(ho, bho)
     n_j = pl.cdiv(cout, bco)
     cout_pad = n_j * bco
@@ -413,7 +478,9 @@ def fq_conv2d(
     def w_index(p, j, r):
         t = r // n_cb
         cb = r % n_cb
-        return (t * cin + cb * bc, j * bco)
+        # packed arrays hold factor codes per row; bc (== cin, padded) is
+        # a factor multiple and n_cb == 1, so this lands on a byte row
+        return ((t * cin + cb * bc) // factor, j * bco)
 
     if pool is not None:
         bho_out, wo_out = bho // pool_h, wo // pool_w
@@ -424,7 +491,7 @@ def fq_conv2d(
         scalar_spec,                                             # scale
         pl.BlockSpec((1, bhi, bwi, bc), x_index,
                      indexing_mode=pl.unblocked),                # window
-        pl.BlockSpec((bc, bco), w_index,
+        pl.BlockSpec((bc // factor, bco), w_index,
                      indexing_mode=pl.unblocked),                # tap w
     ]
     inputs = [scale.reshape(1, 1).astype(jnp.float32), a_codes, w_codes]
@@ -438,6 +505,7 @@ def fq_conv2d(
             _kernel, n_red=n_red, stride=stride, bho=bho, wo=wo, pool=pool,
             epilogue=epilogue, n_out=n_out, lo=lo, noise=noise,
             mac_chunks=mac_chunks, n_i=n_i, ho=ho, cout=cout,
+            weight_format=weight_format,
         ),
         grid=(b * n_i, n_j, n_red),
         in_specs=in_specs,
@@ -469,6 +537,7 @@ def fq_conv1d(
     noise_seed: Optional[jax.Array] = None,
     mac_chunks: int = 1,
     interpret: bool = False,
+    weight_format: str = "int8",
     **block_kw,
 ) -> jax.Array:
     """Fused int8 1-D conv (VALID, dilated — the paper's KWS layers).
@@ -476,12 +545,14 @@ def fq_conv1d(
     A (ksize, 1) conv2d over a width-1 spatial axis: the tap-major weight
     layout of conv1d is exactly the kw=1 conv2d layout, so this is free
     (the noise field's flattened (b*T_out + t)*cout + co indices also
-    coincide with the 1-D im2col path's).
+    coincide with the 1-D im2col path's). ``weight_format`` follows the
+    conv2d packed-weight contract.
     """
     y = fq_conv2d(
         a_codes[:, :, None, :], w_codes, scale, kh=ksize, kw=1,
         dilation=(dilation, 1), epilogue=epilogue, n_out=n_out, lo=lo,
         noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
-        mac_chunks=mac_chunks, interpret=interpret, **block_kw,
+        mac_chunks=mac_chunks, interpret=interpret,
+        weight_format=weight_format, **block_kw,
     )
     return y[:, :, 0, :]

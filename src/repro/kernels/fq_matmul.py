@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core import quant
 from ..core.noise import mac_noise_field
 
 # jax renamed TPUCompilerParams (<=0.4.x) to CompilerParams (>=0.5); resolve
@@ -67,7 +68,7 @@ def noise_tile(shape, row0, col0, n_cols: int, seed, sigma,
 
 def _kernel(scale_ref, a_ref, b_ref, *refs, k_steps: int,
             epilogue: str, n_out: int, lo: int, noise: bool,
-            mac_chunks: int, n_true: int):
+            mac_chunks: int, n_true: int, weight_format: str):
     if noise:
         sigma_ref, seed_ref, o_ref, acc_ref = refs
         # program_id reads hoisted out of the pl.when body (interpret
@@ -81,8 +82,14 @@ def _kernel(scale_ref, a_ref, b_ref, *refs, k_steps: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    b = b_ref[...]
+    if weight_format != "int8":
+        # unpack the (bk/factor, bn) byte tile to (bk, bn) int8 codes in
+        # VMEM ahead of the MAC — the accumulator math is then the int8
+        # kernel's, bit for bit.
+        b = quant.unpack_codes(b, weight_format)
     acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+        a_ref[...], b, preferred_element_type=jnp.int32
     )
 
     @pl.when(k == k_steps - 1)
@@ -103,11 +110,11 @@ def _kernel(scale_ref, a_ref, b_ref, *refs, k_steps: int,
 @functools.partial(
     jax.jit,
     static_argnames=("epilogue", "n_out", "lo", "bm", "bn", "bk",
-                     "mac_chunks", "interpret"),
+                     "mac_chunks", "interpret", "weight_format"),
 )
 def fq_matmul(
     a_codes: jax.Array,   # (M, K) int8
-    b_codes: jax.Array,   # (K, N) int8
+    b_codes: jax.Array,   # (K, N) int8; packed formats: (ceil(K/f), N) uint8
     scale: jax.Array,     # scalar f32: rescale (requant) or alpha (dequant)
     *,
     epilogue: str = "requant",
@@ -120,8 +127,17 @@ def fq_matmul(
     noise_seed: Optional[jax.Array] = None,
     mac_chunks: int = 1,
     interpret: bool = False,
+    weight_format: str = "int8",
 ) -> jax.Array:
     """Tiled int8 matmul with fused requantization. Pads to block multiples.
+
+    ``weight_format`` in {"int8", "int4", "ternary"} selects the B-operand
+    storage (see ``core.quant.pack_codes``). Packed B arrives as
+    (ceil(K/factor), N) uint8 — K may have been padded to a factor
+    multiple at pack time with zero codes, which are inert because the
+    matching A lanes are zero-padded here. Tiles are unpacked in VMEM
+    before the MAC, so accumulator/epilogue/noise behavior is
+    bit-identical to the int8 path.
 
     ``noise_sigma_acc`` (std in ACCUMULATOR units) + ``noise_seed``
     (uint32) switch on the deterministic ADC-noise epilogue (paper §4.4):
@@ -137,22 +153,39 @@ def fq_matmul(
     assert not noise or noise_seed is not None, \
         "noise_seed is required when noise_sigma_acc is set"
     m, k = a_codes.shape
-    k2, n = b_codes.shape
-    assert k == k2, (a_codes.shape, b_codes.shape)
+    packed = weight_format != "int8"
+    factor = quant.format_factor(weight_format)
+    if packed:
+        rows_p, n = b_codes.shape
+        k2 = rows_p * factor  # stored K incl. pack-time zero padding
+        assert 0 <= k2 - k < factor, \
+            (a_codes.shape, b_codes.shape, weight_format)
+        assert bk % factor == 0, \
+            f"bk={bk} must be a multiple of the pack factor {factor}"
+    else:
+        k2, n = b_codes.shape
+        assert k == k2, (a_codes.shape, b_codes.shape)
 
-    mp, np_, kp = (-m % bm), (-n % bn), (-k % bk)
-    if mp or kp:
-        a_codes = jnp.pad(a_codes, ((0, mp), (0, kp)))
-    if kp or np_:
+    mp, np_, kp = (-m % bm), (-n % bn), (-k2 % bk)
+    if mp or kp or k2 != k:
+        a_codes = jnp.pad(a_codes, ((0, mp), (0, k2 - k + kp)))
+    if packed:
+        rp = (k2 + kp) // factor - b_codes.shape[0]
+        if rp or np_:
+            # zero bytes decode to zero codes -> pad lanes stay inert
+            b_codes = jnp.pad(b_codes, ((0, rp), (0, np_)))
+    elif kp or np_:
         b_codes = jnp.pad(b_codes, ((0, kp), (0, np_)))
-    pm, pn, pk = m + mp, n + np_, k + kp
+    pm, pn, pk = m + mp, n + np_, k2 + kp
     k_steps = pk // bk
 
     scalar_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
     in_specs = [
         scalar_spec,                                        # scale
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A tile
-        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # B tile
+        # packed B blocks hold bk/factor byte rows; blocked indexing keeps
+        # byte tiles aligned because factor | bk
+        pl.BlockSpec((bk // factor, bn), lambda i, j, kk: (kk, j)),
     ]
     inputs = [scale.reshape(1, 1).astype(jnp.float32), a_codes, b_codes]
     if noise:
@@ -165,6 +198,7 @@ def fq_matmul(
         functools.partial(
             _kernel, k_steps=k_steps, epilogue=epilogue, n_out=n_out, lo=lo,
             noise=noise, mac_chunks=mac_chunks, n_true=n,
+            weight_format=weight_format,
         ),
         grid=(pm // bm, pn // bn, k_steps),
         in_specs=in_specs,

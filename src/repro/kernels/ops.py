@@ -79,11 +79,12 @@ def fold_alpha(s_a, s_w, *, bits_a: int, bits_w: int):
 
 def int_matmul(a_codes, b_codes, scale, *, epilogue="requant", n_out=7, lo=0,
                bm=128, bn=128, bk=128, noise_sigma_acc=None, noise_seed=None,
-               mac_chunks=1):
+               mac_chunks=1, weight_format="int8"):
     return fq_matmul(
         a_codes, b_codes, scale, epilogue=epilogue, n_out=n_out, lo=lo,
         bm=bm, bn=bn, bk=bk, noise_sigma_acc=noise_sigma_acc,
         noise_seed=noise_seed, mac_chunks=mac_chunks, interpret=_interpret(),
+        weight_format=weight_format,
     )
 
 
@@ -113,21 +114,29 @@ def _im2col_1d(x, ksize: int, dilation: int):
 
 def fq_conv1d_int(a_codes, w_codes, scale, *, ksize: int, dilation: int = 1,
                   epilogue="requant", n_out=7, lo=0, impl=None,
-                  noise_sigma_acc=None, noise_seed=None, mac_chunks=1):
+                  noise_sigma_acc=None, noise_seed=None, mac_chunks=1,
+                  weight_format="int8"):
     """int8 1-D convolution behind the conv dispatch point.
 
-    a_codes: (B, T, Cin) int8; w_codes: (ksize*Cin, Cout) int8.
-    ``noise_sigma_acc``/``noise_seed``/``mac_chunks`` switch on the
-    deterministic ADC-noise epilogue (paper §4.4) on BOTH impls — the
-    noise field is indexed by global output elements, so fused and
-    im2col stay bit-identical under noise.
+    a_codes: (B, T, Cin) int8; w_codes: (ksize*Cin, Cout) int8, or the
+    ``weight_format`` packed uint8 layout (core.quant.pack_im2col_codes).
+    The fused kernel consumes packed weights natively; the im2col impl
+    unpacks to the int8 layout first, so it remains the single parity
+    oracle for every weight format. ``noise_sigma_acc``/``noise_seed``/
+    ``mac_chunks`` switch on the deterministic ADC-noise epilogue (paper
+    §4.4) on BOTH impls — the noise field is indexed by global output
+    elements, so fused and im2col stay bit-identical under noise.
     """
     if conv_impl(impl) == "fused":
         return fq_conv.fq_conv1d(
             a_codes, w_codes, scale, ksize=ksize, dilation=dilation,
             epilogue=epilogue, n_out=n_out, lo=lo,
             noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
-            mac_chunks=mac_chunks, interpret=_interpret())
+            mac_chunks=mac_chunks, interpret=_interpret(),
+            weight_format=weight_format)
+    if weight_format != "int8":
+        w_codes = quant.unpack_im2col_codes(
+            w_codes, ksize, a_codes.shape[-1], weight_format)
     b = a_codes.shape[0]
     patches, t_out = _im2col_1d(a_codes, ksize, dilation)
     flat = patches.reshape(b * t_out, -1)
@@ -159,11 +168,15 @@ def _im2col_2d(x, ksize: int, stride: int, padding: int, dilation: int = 1):
 def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
                   padding: int = 0, dilation: int = 1, epilogue="requant",
                   n_out=7, lo=0, impl=None, noise_sigma_acc=None,
-                  noise_seed=None, mac_chunks=1):
+                  noise_seed=None, mac_chunks=1, weight_format="int8"):
     """int8 2-D convolution (NHWC) behind the conv dispatch point.
 
-    w_codes: (ksize*ksize*Cin, Cout) int8, tap-major im2col layout.
-    ``noise_sigma_acc``/``noise_seed``/``mac_chunks``: see fq_conv1d_int.
+    w_codes: (ksize*ksize*Cin, Cout) int8, tap-major im2col layout, or
+    the ``weight_format`` packed uint8 layout. The fused kernel consumes
+    packed weights natively; the im2col impl unpacks back to the int8
+    layout first — im2col at int8 stays the parity oracle for every
+    format. ``noise_sigma_acc``/``noise_seed``/``mac_chunks``: see
+    fq_conv1d_int.
     """
     if conv_impl(impl) == "fused":
         return fq_conv.fq_conv2d(
@@ -171,7 +184,11 @@ def fq_conv2d_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
             stride=(stride, stride), padding=(padding, padding),
             dilation=(dilation, dilation), epilogue=epilogue, n_out=n_out,
             lo=lo, noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
-            mac_chunks=mac_chunks, interpret=_interpret())
+            mac_chunks=mac_chunks, interpret=_interpret(),
+            weight_format=weight_format)
+    if weight_format != "int8":
+        w_codes = quant.unpack_im2col_codes(
+            w_codes, ksize * ksize, a_codes.shape[-1], weight_format)
     b = a_codes.shape[0]
     patches, ho, wo = _im2col_2d(a_codes, ksize, stride, padding, dilation)
     flat = patches.reshape(b * ho * wo, -1)
@@ -202,7 +219,8 @@ def maxpool2d(y, *, window: int = 2, stride: int = 2):
 def fq_conv2d_pool_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
                        padding: int = 0, dilation: int = 1, pool: int = 2,
                        epilogue="requant", n_out=7, lo=0, impl=None,
-                       noise_sigma_acc=None, noise_seed=None, mac_chunks=1):
+                       noise_sigma_acc=None, noise_seed=None, mac_chunks=1,
+                       weight_format="int8"):
     """int8 conv2d + non-overlapping maxpool, fused where the backend can.
 
     "fused" runs the pool on the int32 accumulator tile inside the kernel's
@@ -221,10 +239,11 @@ def fq_conv2d_pool_int(a_codes, w_codes, scale, *, ksize: int, stride: int = 1,
             dilation=(dilation, dilation), pool=(pool, pool),
             epilogue=epilogue, n_out=n_out, lo=lo,
             noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
-            mac_chunks=mac_chunks, interpret=_interpret())
+            mac_chunks=mac_chunks, interpret=_interpret(),
+            weight_format=weight_format)
     y = fq_conv2d_int(a_codes, w_codes, scale, ksize=ksize, stride=stride,
                       padding=padding, dilation=dilation, epilogue=epilogue,
                       n_out=n_out, lo=lo, impl="im2col",
                       noise_sigma_acc=noise_sigma_acc, noise_seed=noise_seed,
-                      mac_chunks=mac_chunks)
+                      mac_chunks=mac_chunks, weight_format=weight_format)
     return maxpool2d(y, window=pool, stride=pool)

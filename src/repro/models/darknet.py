@@ -154,14 +154,18 @@ def int_extras(params, state, cfg: DarkNetConfig):
             "s_out_last": params[names[-1]]["s_out"]}
 
 
-def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig):
+def convert_int(params, state, qcfg: QuantConfig, cfg: DarkNetConfig,
+                weight_format=None):
     """Trained FQ (BN-folded) params -> ConvertedStack (integer core +
-    the FP edge convs as extras). Validates the FQ hand-off contract."""
+    the FP edge convs as extras). Validates the FQ hand-off contract.
+    ``weight_format`` ("int4"/"ternary"/"auto"/None) selects packed
+    weight storage — see ``integer_inference.convert_stack``."""
     from ..core import integer_inference as ii
     names = int_conv_names(cfg)
     return ii.convert_stack({n: params[n] for n in names}, qcfg,
                             specs=[ii.LayerSpec(n) for n in names],
-                            extras=int_extras(params, state, cfg))
+                            extras=int_extras(params, state, cfg),
+                            weight_format=weight_format)
 
 
 def _split_plan(plan):

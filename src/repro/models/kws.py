@@ -128,19 +128,23 @@ def int_extras(params, state, cfg: KWSConfig):
     }
 
 
-def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig):
+def convert_int(params, state, qcfg: QuantConfig, cfg: KWSConfig,
+                weight_format=None):
     """Trained FQ params -> :class:`integer_inference.ConvertedStack`.
 
     The conv stack collapses to int8 weight codes + one folded rescale per
     layer; the FP embedding/BN/head ride along as extras. The FQ hand-off
     contract s_in[i+1] == s_out[i] is validated at conversion time
     (``integer_inference.sync_handoff`` repairs a violated chain).
+    ``weight_format`` ("int4"/"ternary"/"auto"/None) selects packed weight
+    storage — see ``integer_inference.convert_stack``.
     """
     from ..core import integer_inference as ii
     names = conv_names(cfg)
     return ii.convert_stack({n: params[n] for n in names}, qcfg,
                             specs=[ii.LayerSpec(n) for n in names],
-                            extras=int_extras(params, state, cfg))
+                            extras=int_extras(params, state, cfg),
+                            weight_format=weight_format)
 
 
 def int_core(ip, codes, qcfg: QuantConfig, cfg: KWSConfig, *, impl=None,

@@ -227,11 +227,12 @@ def test_runtime_miss_counter_and_warning():
         misses = [x for x in w
                   if isinstance(x.message, fq_conv.AutotuneMissWarning)]
         assert len(misses) == 1                 # warn once per key
-        assert misses[0].message.key == (5, 5, 1)
-        assert fq_conv.AUTOTUNE_MISSES[(5, 5, 1)] == 2   # but count all
+        assert misses[0].message.key == (5, 5, 1, "int8")
+        assert fq_conv.AUTOTUNE_MISSES[(5, 5, 1, "int8")] == 2  # count all
         r = Report()
         kernellint.runtime_miss_counters(r)
-        assert r.counters["kernellint/runtime-miss:(5, 5, 1)"] == 2
+        assert r.counters[
+            "kernellint/runtime-miss:(5, 5, 1, 'int8')"] == 2
     finally:
         fq_conv.reset_autotune_cache()
 
@@ -249,7 +250,8 @@ def test_cli_reduced_kws_exit_zero(tmp_path, capsys):
     d = json.loads(out.read_text())
     assert d["summary"]["findings"] == 0
     assert d["summary"]["proofs"] > 0
-    assert d["counters"]["intlint/traces"] == 2   # clean + mac_chunks=1
+    # (clean + mac_chunks=1) x (int8 stack + its packed ternary twin)
+    assert d["counters"]["intlint/traces"] == 4
 
 
 def test_cli_rejects_bad_mac_chunks():

@@ -254,8 +254,8 @@ def test_vmem_blowout_caught():
     r = Report()
     kernellint.lint_shapes(
         [shape], r, backend="cpu",
-        table={(3, 3, 1): {"bho": 224, "bco": 64}},
-        measured={(3, 3, 1)})
+        table={(3, 3, 1, "int8"): {"bho": 224, "bco": 64}},
+        measured={(3, 3, 1, "int8")})
     assert_caught(r, "kernellint/vmem")
 
 
@@ -276,8 +276,8 @@ def test_table_bc_drift_warned():
                       kh=3, kw=1)
     r = Report()
     kernellint.lint_shapes([shape], r, backend="cpu",
-                           table={(3, 1, 1): {"bc": 45}},
-                           measured={(3, 1, 1)})
+                           table={(3, 1, 1, "int8"): {"bc": 45}},
+                           measured={(3, 1, 1, "int8")})
     assert_caught(r, "kernellint/table-drift")
     assert r.findings[0].details["effective_bc"] == 25
 
@@ -298,3 +298,85 @@ def test_cli_gates_on_broken_table(tmp_path):
     rep = json.loads((tmp_path / "rep.json").read_text())
     assert any(f["check"] == "kernellint/table-schema"
                for f in rep["findings"])
+
+
+# -- packed-weight mutations -------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kws_packed_t():
+    return targets.kws_target(reduced=True, weight_format="auto")
+
+
+def test_packed_sign_extension_bug_caught():
+    """Unpack without the two's-complement sign extension leaves ternary
+    fields in [0, 3] instead of [-2, 1]; the weight-range interval check
+    on the contraction's rhs operand must fire."""
+    from repro.core import quant
+    fmt, K, N = "ternary", 12, 4
+    codes = np.random.default_rng(0).integers(-1, 2, (K, N)).astype(np.int8)
+    packed = quant.pack_codes(jnp.asarray(codes), fmt)
+    bits, factor = 2, 4
+    mask = (1 << bits) - 1
+
+    def buggy_core(a, p):
+        p32 = p.astype(jnp.int32)
+        fields = [(p32 >> (i * bits)) & mask for i in range(factor)]
+        w = jnp.stack(fields, axis=1).reshape(-1, p.shape[1])[:K]
+        acc = jnp.dot(a.astype(jnp.int32), w)
+        return jnp.clip(jnp.round(acc * 0.01), -7, 7).astype(jnp.int8)
+
+    r = Report()
+    intlint.lint_trace(TraceSpec(
+        "mut/sign-extension", buggy_core,
+        (jnp.zeros((2, K), jnp.int8), packed),
+        weight_range=quant.format_interval(fmt)), r)
+    assert_caught(r, "intlint/weight-range")
+
+    # ...and the CORRECT unpack on the same packed bytes stays clean
+    def good_core(a, p):
+        w = quant.unpack_codes(p, fmt, rows=K).astype(jnp.int32)
+        acc = jnp.dot(a.astype(jnp.int32), w)
+        return jnp.clip(jnp.round(acc * 0.01), -7, 7).astype(jnp.int8)
+
+    r2 = Report()
+    intlint.lint_trace(TraceSpec(
+        "mut/sign-extension-ok", good_core,
+        (jnp.zeros((2, K), jnp.int8), packed),
+        weight_range=quant.format_interval(fmt)), r2)
+    assert "intlint/weight-range" not in checks(r2)
+    assert r2.exit_code() == 0
+
+
+def test_packed_out_of_range_code_caught(kws_packed_t):
+    """A tampered ternary byte whose 2-bit field decodes to -2 (< -n_w=-1)
+    must trip the code-range check on the DECODED codes."""
+    name = kws_packed_t.chain[0]
+    layer = kws_packed_t.stack.layers[name]
+    assert layer["weight_format"] == "ternary"
+    bad = np.asarray(layer["w_codes"]).copy()
+    bad.flat[0] = 0b10                           # field 0 -> -2
+    r = Report()
+    planlint.lint_stack(mutated_stack(kws_packed_t.stack, name,
+                                      w_codes=jnp.asarray(bad)), r, "mut")
+    assert_caught(r, "planlint/code-range")
+
+
+def test_unknown_packed_table_format_caught(tmp_path):
+    path = _write_table(tmp_path, [
+        {"kh": 3, "kw": 3, "stride": 1, "bco": 64, "format": "int3"},
+    ])
+    r = Report()
+    kernellint.lint_table_schema(r, path)
+    assert_caught(r, "kernellint/table-schema")
+    assert any("int3" in f.message for f in r.findings)
+
+
+def test_packed_format_spec_mismatch_caught(kws_packed_t):
+    """A layer re-packed into a different format than its spec declares
+    would silently rederive into a different layout."""
+    name = kws_packed_t.chain[0]
+    r = Report()
+    planlint.lint_stack(mutated_stack(kws_packed_t.stack, name,
+                                      weight_format="int8"), r, "mut")
+    assert_caught(r, "planlint/weight-format")

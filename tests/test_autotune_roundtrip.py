@@ -52,9 +52,10 @@ def test_loader_applies_matching_backend_and_skips_absent_knobs(tmp_path):
                {"kh": 1, "kw": 1, "stride": 1, "bco": 32}]  # bho clipped
     p = _write(tmp_path, _doc(jax.default_backend(), entries))
     table = fq_conv.load_autotune_table(p)
-    assert table[(3, 3, 1)] == {"bho": 16, "bco": 64, "bc": 8}
-    assert table[(1, 1, 1)] == {"bco": 32}  # absent knobs stay unset
-    assert table[(3, 3, 2)] == fq_conv._BUILTIN_TABLE[(3, 3, 2)]
+    assert table[(3, 3, 1, "int8")] == {"bho": 16, "bco": 64, "bc": 8}
+    assert table[(1, 1, 1, "int8")] == {"bco": 32}  # absent knobs stay unset
+    assert table[(3, 3, 2, "int8")] == fq_conv._BUILTIN_TABLE[(3, 3, 2,
+                                                               "int8")]
 
 
 @pytest.fixture()
@@ -87,7 +88,7 @@ def test_dry_run_writes_schema_valid_table(tmp_path, autotune_mod):
     # round-trip: the loader applies these winners on this backend
     table = fq_conv.load_autotune_table(str(table_p))
     e = doc["entries"][0]
-    key = (e["kh"], e["kw"], e["stride"])
+    key = (e["kh"], e["kw"], e["stride"], e.get("format", "int8"))
     assert table[key] == {k: e[k] for k in ("bho", "bco", "bc") if k in e}
     # the full sweep record is parseable and covers every candidate
     rec = json.loads(record_p.read_text())

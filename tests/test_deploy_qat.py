@@ -73,6 +73,40 @@ def test_roundtrip_idempotent(which):
                                       np.asarray(third[n]["w_codes"]))
 
 
+@pytest.mark.packed
+@pytest.mark.parametrize("which", ["kws", "darknet"])
+def test_roundtrip_idempotent_packed(which):
+    """A packed stack's recipe carries weight_format: rederive must
+    re-pack into the bit-identical uint8 layout, generation after
+    generation."""
+    cfg, params, state, _ = _kws() if which == "kws" else _darknet()
+    module = kws if which == "kws" else darknet
+    ip = module.convert_int(params, state, QCFG, cfg, weight_format="auto")
+    assert all(s.weight_format == "ternary" for s in ip.specs)
+    again = ip.rederive({n: params[n] for n in ip.layer_names})
+    for n in ip.layer_names:
+        assert again[n]["weight_format"] == ip[n]["weight_format"]
+        assert again[n]["w_codes"].dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(ip[n]["w_codes"]),
+                                      np.asarray(again[n]["w_codes"]))
+        np.testing.assert_array_equal(np.asarray(ip[n]["rescale"]),
+                                      np.asarray(again[n]["rescale"]))
+    assert ii.stack_digest(again) == ii.stack_digest(ip)
+
+
+@pytest.mark.packed
+def test_convert_refuses_range_exceeding_format():
+    """Declaring a packed range narrower than what the qcfg trains must
+    raise at conversion time, not silently clip codes."""
+    cfg, params, state, _ = _kws()
+    qcfg4 = QuantConfig(4, 4, 4, fq=True)   # trains codes in +/-7
+    with pytest.raises(ValueError, match="refusing to clip"):
+        kws.convert_int(params, state, qcfg4, cfg, weight_format="ternary")
+    # int4 holds +/-7: fine
+    ip = kws.convert_int(params, state, qcfg4, cfg, weight_format="int4")
+    assert all(s.weight_format == "int4" for s in ip.specs)
+
+
 def test_stack_mapping_and_pytree():
     cfg, params, state, ip = _kws()
     assert "conv0" in ip and "embed" in ip and "missing" not in ip

@@ -370,15 +370,15 @@ def test_autotune_table_loads_matching_backend(tmp_path):
     p = tmp_path / "table.json"
     p.write_text(__import__("json").dumps(doc))
     table = fc.load_autotune_table(str(p))
-    assert table[(3, 3, 1)] == {"bho": 16, "bco": 64, "bc": 8}
+    assert table[(3, 3, 1, "int8")] == {"bho": 16, "bco": 64, "bc": 8}
     # other-backend entries are ignored -> builtin defaults survive
     doc["backend"] = "not-a-backend"
     p.write_text(__import__("json").dumps(doc))
     table = fc.load_autotune_table(str(p))
-    assert table[(3, 3, 1)] == fc._BUILTIN_TABLE[(3, 3, 1)]
+    assert table[(3, 3, 1, "int8")] == fc._BUILTIN_TABLE[(3, 3, 1, "int8")]
     # missing/corrupt file -> builtin defaults
     table = fc.load_autotune_table(str(tmp_path / "nope.json"))
-    assert table[(1, 1, 1)] == fc._BUILTIN_TABLE[(1, 1, 1)]
+    assert table[(1, 1, 1, "int8")] == fc._BUILTIN_TABLE[(1, 1, 1, "int8")]
 
 
 # ---------------------------------------------------------------------------

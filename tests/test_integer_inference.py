@@ -85,3 +85,56 @@ def test_ternary_weight_codes_are_ternary():
     ip = ii.convert_layer(p, qcfg, relu_out=True)
     vals = set(np.unique(np.asarray(ip["w_codes"], dtype=np.int32)))
     assert vals <= {-1, 0, 1}
+
+
+# ---------------------------------------------------------------------------
+# packed weight storage (ternary 2-bit planes / int4 nibble pairs)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_layer_bit_exact():
+    """A layer converted with packed storage serves the same codes as its
+    int8-stored twin — pack/unpack is pure storage, not arithmetic."""
+    import pytest  # noqa: F401  (marker applied below)
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    p = _trained_like_layer(jax.random.key(2), 16, 8)
+    x = jax.random.uniform(jax.random.key(3), (5, 16))
+    codes_in = ii.entry_codes(x, p, qcfg, b_in=RELU_BOUND)
+    ip8 = ii.convert_layer(p, qcfg, relu_out=True)
+    ipp = ii.convert_layer(p, qcfg, relu_out=True, weight_format="ternary")
+    assert ipp["weight_format"] == "ternary"
+    assert ipp["w_codes"].dtype == jnp.uint8
+    # 4 codes per byte (16 rows -> 4 packed rows)
+    assert ipp["w_codes"].shape[0] == ip8["w_codes"].shape[0] // 4
+    np.testing.assert_array_equal(np.asarray(ii.int_linear(ipp, codes_in)),
+                                  np.asarray(ii.int_linear(ip8, codes_in)))
+
+
+def test_convert_layer_rejects_narrow_format():
+    """bits_w=4 trains codes in +/-7 — a ternary declaration cannot hold
+    them and must raise instead of clipping."""
+    import pytest
+    qcfg = QuantConfig(4, 4, 4, fq=True)
+    p = _trained_like_layer(jax.random.key(4), 16, 8)
+    with pytest.raises(ValueError, match="refusing to clip"):
+        ii.convert_layer(p, qcfg, relu_out=True, weight_format="ternary")
+
+
+def test_convert_layer_rejects_unknown_format():
+    import pytest
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    p = _trained_like_layer(jax.random.key(5), 16, 8)
+    with pytest.raises(ValueError, match="weight_format"):
+        ii.convert_layer(p, qcfg, relu_out=True, weight_format="int3")
+
+
+def test_convert_stack_auto_format_resolution():
+    """weight_format='auto' picks the narrowest format that holds the
+    trained code range: ternary at 2-bit weights, int4 at 4-bit."""
+    for bits_w, want in ((2, "ternary"), (4, "int4"), (8, "int8")):
+        qcfg = QuantConfig(bits_w, 4, 4, fq=True)
+        p = _trained_like_layer(jax.random.key(6), 16, 8)
+        stack = ii.convert_stack({"l0": p}, qcfg,
+                                 specs=[ii.LayerSpec("l0", relu_out=True)],
+                                 extras={}, weight_format="auto")
+        assert stack.specs[0].weight_format == want

@@ -1,0 +1,303 @@
+"""Packed-weight (int4 nibble-pair / 2-bit ternary) kernel parity.
+
+The deployment contract for every weight format is the same: the im2col +
+fq_matmul composition at int8 is the single parity oracle, and a packed
+kernel must be BIT-exact against it — same int32 accumulators, same
+requant/dequant epilogue, same fused-pool reduction, same §4.4 noise
+draws, any ``mac_chunks``. These tests mirror tests/test_fq_conv.py's
+grids with the weights re-stored packed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+from repro.kernels import ops
+from repro.kernels.fq_conv import fq_conv1d, fq_conv2d, pick_blocks
+from repro.kernels.fq_matmul import fq_matmul
+
+pytestmark = pytest.mark.packed
+
+PACKED = ("ternary", "int4")
+
+
+def _codes(key, shape, lo, hi):
+    return jax.random.randint(key, shape, lo, hi + 1).astype(jnp.int8)
+
+
+def _wcodes(key, shape, fmt):
+    n = quant.format_range(fmt)
+    return _codes(key, shape, -n, n)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack layer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", quant.WEIGHT_FORMATS)
+@pytest.mark.parametrize("rows", [1, 3, 4, 7, 8, 45])
+def test_pack_unpack_roundtrip_identity(fmt, rows):
+    """Every representable code survives pack -> unpack, any row count."""
+    n = quant.format_range(fmt)
+    rng = np.random.default_rng(rows)
+    codes = rng.integers(-n, n + 1, size=(rows, 6)).astype(np.int8)
+    # make sure the extremes are actually exercised
+    codes[0, 0], codes[-1, -1] = -n, n
+    packed = quant.pack_codes(jnp.asarray(codes), fmt)
+    out = np.asarray(quant.unpack_codes(packed, fmt, rows=rows))
+    np.testing.assert_array_equal(out, codes)
+    if fmt != "int8":
+        factor = quant.format_factor(fmt)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (-(-rows // factor), 6)
+        # pad lanes (rows beyond `rows`) decode to 0: inert in any MAC
+        full = np.asarray(quant.unpack_codes(packed, fmt))
+        assert (full[rows:] == 0).all()
+
+
+@pytest.mark.parametrize("fmt", quant.WEIGHT_FORMATS)
+def test_pack_rejects_out_of_range_codes(fmt):
+    n = quant.format_range(fmt)
+    bad = jnp.full((4, 2), n + 1, jnp.int32)
+    with pytest.raises(ValueError, match="out of range|exceed"):
+        quant.pack_codes(bad, fmt)
+    with pytest.raises(ValueError, match="out of range|exceed"):
+        quant.pack_codes(-bad - 1, fmt)
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_unpack_is_jit_traceable(fmt):
+    n, factor = quant.format_range(fmt), quant.format_factor(fmt)
+    codes = jnp.asarray(
+        np.random.default_rng(0).integers(-n, n + 1, (2 * factor, 3)),
+        jnp.int8)
+    packed = quant.pack_codes(codes, fmt)
+    out = jax.jit(lambda p: quant.unpack_codes(p, fmt))(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_im2col_pack_pads_cin_per_tap(fmt):
+    """Odd cin: each tap owns whole byte rows; the pad lanes round-trip
+    away through unpack_im2col_codes."""
+    taps, cin, cout = 9, 5, 7
+    w = _wcodes(jax.random.key(1), (taps * cin, cout), fmt)
+    packed = quant.pack_im2col_codes(w, taps, fmt)
+    factor = quant.format_factor(fmt)
+    cin_p = -(-cin // factor) * factor
+    assert packed.shape == (taps * cin_p // factor, cout)
+    out = quant.unpack_im2col_codes(packed, taps, cin, fmt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# fq_matmul: packed vs the int8 path on identical codes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("mkn", [(5, 27, 9), (8, 64, 16), (3, 130, 7)])
+def test_packed_matmul_bit_exact(fmt, mkn):
+    """Ragged/aligned K, requant epilogue: packed == int8, bit for bit."""
+    m, k, n = mkn
+    k1, k2 = jax.random.split(jax.random.key(m * k))
+    a = _codes(k1, (m, k), 0, 15)
+    w = _wcodes(k2, (k, n), fmt)
+    scale = jnp.float32(0.02)
+    want = fq_matmul(a, w, scale, n_out=7, lo=0, interpret=True)
+    got = fq_matmul(a, quant.pack_codes(w, fmt), scale, n_out=7, lo=0,
+                    interpret=True, weight_format=fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("mac_chunks", [1, 4])
+def test_packed_matmul_noise_and_chunks_bit_exact(fmt, mac_chunks):
+    """The §4.4 ADC-noise epilogue draws identical fields on both paths."""
+    m, k, n = 6, 40, 8
+    k1, k2 = jax.random.split(jax.random.key(3))
+    a = _codes(k1, (m, k), 0, 15)
+    w = _wcodes(k2, (k, n), fmt)
+    kw = dict(n_out=7, lo=0, noise_sigma_acc=1.5, noise_seed=7,
+              mac_chunks=mac_chunks, interpret=True)
+    want = fq_matmul(a, w, jnp.float32(0.02), **kw)
+    got = fq_matmul(a, quant.pack_codes(w, fmt), jnp.float32(0.02),
+                    weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_packed_matmul_dequant_epilogue(fmt):
+    m, k, n = 4, 24, 5
+    k1, k2 = jax.random.split(jax.random.key(5))
+    a = _codes(k1, (m, k), 0, 15)
+    w = _wcodes(k2, (k, n), fmt)
+    alpha = jnp.float32(0.01)
+    want = fq_matmul(a, w, alpha, epilogue="dequant", interpret=True)
+    got = fq_matmul(a, quant.pack_codes(w, fmt), alpha, epilogue="dequant",
+                    interpret=True, weight_format=fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fused conv2d/conv1d: packed vs the im2col int8 oracle
+# ---------------------------------------------------------------------------
+
+
+def _conv_oracle(a, w, scale, **kw):
+    return ops.fq_conv2d_int(a, w, scale, impl="im2col", **kw)
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("stride,padding,dilation", [
+    (1, 0, 1), (1, 1, 1), (2, 0, 1), (2, 1, 1), (1, 1, 2), (2, 2, 2),
+])
+def test_packed_conv2d_grid_bit_exact(fmt, stride, padding, dilation):
+    """The test_fq_conv.py parity grid with packed weight storage; cin=5
+    is ragged for both pack factors, so every tap carries pad lanes."""
+    B, H, W, Cin, Cout, ks = 2, 13, 11, 5, 7, 3
+    k1, k2 = jax.random.split(jax.random.key(stride * 7 + padding * 3 +
+                                             dilation))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _wcodes(k2, (ks * ks * Cin, Cout), fmt)
+    scale = jnp.float32(0.02)
+    kw = dict(ksize=ks, stride=stride, padding=padding, dilation=dilation,
+              n_out=7, lo=0)
+    want = _conv_oracle(a, w, scale, **kw)
+    got = ops.fq_conv2d_int(a, quant.pack_im2col_codes(w, ks * ks, fmt),
+                            scale, impl="fused", weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_packed_conv2d_odd_depth_pad_lane_inert(fmt):
+    """cin*kh*kw odd (cin=3, 3x3 -> 27 rows): the zero pad lanes must not
+    perturb the accumulator even when activations there are nonzero."""
+    B, H, W, Cin, Cout, ks = 1, 9, 9, 3, 5, 3
+    k1, k2 = jax.random.split(jax.random.key(11))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)   # all-lane-nonzero activations
+    w = _wcodes(k2, (ks * ks * Cin, Cout), fmt)
+    kw = dict(ksize=ks, stride=1, padding=1, n_out=7, lo=0)
+    want = _conv_oracle(a, w, jnp.float32(0.02), **kw)
+    got = ops.fq_conv2d_int(a, quant.pack_im2col_codes(w, ks * ks, fmt),
+                            jnp.float32(0.02), impl="fused",
+                            weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("mac_chunks", [1, 4])
+def test_packed_conv2d_noise_bit_exact(fmt, mac_chunks):
+    B, H, W, Cin, Cout, ks = 2, 10, 10, 5, 6, 3
+    k1, k2 = jax.random.split(jax.random.key(17))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _wcodes(k2, (ks * ks * Cin, Cout), fmt)
+    kw = dict(ksize=ks, stride=1, padding=1, n_out=7, lo=0,
+              noise_sigma_acc=1.5, noise_seed=23, mac_chunks=mac_chunks)
+    want = _conv_oracle(a, w, jnp.float32(0.02), **kw)
+    got = ops.fq_conv2d_int(a, quant.pack_im2col_codes(w, ks * ks, fmt),
+                            jnp.float32(0.02), impl="fused",
+                            weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_packed_conv2d_fused_pool_bit_exact(fmt):
+    """2x2 pool epilogue on the packed accumulator == unfused oracle."""
+    B, H, W, Cin, Cout, ks = 2, 12, 12, 5, 6, 3
+    k1, k2 = jax.random.split(jax.random.key(29))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _wcodes(k2, (ks * ks * Cin, Cout), fmt)
+    kw = dict(ksize=ks, stride=1, padding=1, pool=2, n_out=7, lo=0)
+    want = ops.fq_conv2d_pool_int(a, w, jnp.float32(0.02), impl="im2col",
+                                  **kw)
+    got = ops.fq_conv2d_pool_int(a, quant.pack_im2col_codes(w, ks * ks, fmt),
+                                 jnp.float32(0.02), impl="fused",
+                                 weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("dilation", [1, 2, 4])
+def test_packed_conv1d_bit_exact(fmt, dilation):
+    B, T, Cin, Cout, ks = 2, 30, 5, 6, 3
+    k1, k2 = jax.random.split(jax.random.key(dilation))
+    a = _codes(k1, (B, T, Cin), 0, 15)
+    w = _wcodes(k2, (ks * Cin, Cout), fmt)
+    kw = dict(ksize=ks, dilation=dilation, n_out=7, lo=0)
+    want = ops.fq_conv1d_int(a, w, jnp.float32(0.02), impl="im2col", **kw)
+    got = ops.fq_conv1d_int(a, quant.pack_im2col_codes(w, ks, fmt),
+                            jnp.float32(0.02), impl="fused",
+                            weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_packed_im2col_dispatch_unpacks(fmt):
+    """impl='im2col' with packed weights unpacks and runs the int8 oracle
+    itself — so BOTH impls accept the packed layout."""
+    B, H, W, Cin, Cout, ks = 1, 8, 8, 5, 4, 3
+    k1, k2 = jax.random.split(jax.random.key(31))
+    a = _codes(k1, (B, H, W, Cin), 0, 15)
+    w = _wcodes(k2, (ks * ks * Cin, Cout), fmt)
+    kw = dict(ksize=ks, stride=1, padding=1, n_out=7, lo=0)
+    want = _conv_oracle(a, w, jnp.float32(0.02), **kw)
+    got = ops.fq_conv2d_int(a, quant.pack_im2col_codes(w, ks * ks, fmt),
+                            jnp.float32(0.02), impl="im2col",
+                            weight_format=fmt, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# block picking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_pick_blocks_fixes_packed_bc(fmt):
+    factor = quant.format_factor(fmt)
+    cin = 45  # ragged for both factors
+    cin_p = -(-cin // factor) * factor
+    _, _, bc = pick_blocks(ho=16, wo=16, cin=cin, cout=32, kh=3, kw=3,
+                           stride=(1, 1), weight_format=fmt)
+    assert bc == cin_p
+    with pytest.raises(ValueError, match="bc == cin"):
+        pick_blocks(ho=16, wo=16, cin=cin, cout=32, kh=3, kw=3,
+                    stride=(1, 1), bc=factor, weight_format=fmt)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: packed ConvertedStack vs its int8 twin
+# ---------------------------------------------------------------------------
+
+
+def test_kws_stack_packed_serving_bit_exact():
+    """convert_int(weight_format='auto') at the 2-bit qcfg packs ternary;
+    int_apply must be bit-exact vs the int8-stored stack on both impls,
+    clean and under the §4.4 noise model."""
+    from conftest import trained_int_params
+    from repro.core.noise import NoiseConfig
+    from repro.models import kws
+    qcfg = QuantConfig(2, 4, 4, fq=True)
+    cfg = kws.KWSConfig.reduced()
+    params, state, _ = trained_int_params(kws, cfg, kws.conv_names(cfg),
+                                          qcfg)
+    ip8 = kws.convert_int(params, state, qcfg, cfg)
+    ipp = kws.convert_int(params, state, qcfg, cfg, weight_format="auto")
+    assert ipp.specs[0].weight_format == "ternary"
+    assert ipp.layers["conv0"]["w_codes"].dtype == jnp.uint8
+    x = jax.random.normal(jax.random.key(0), (2, cfg.seq_len, cfg.n_mfcc))
+    for impl in ("im2col", "fused"):
+        want = kws.int_apply(ip8, x, qcfg, cfg, impl=impl)
+        got = kws.int_apply(ipp, x, qcfg, cfg, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        rng = jax.random.key(4)
+        nz = NoiseConfig(0.3, 0.3, 1.5)
+        want_n = kws.int_apply(ip8, x, qcfg, cfg, impl=impl, noise=nz,
+                               rng=rng, mac_chunks=4)
+        got_n = kws.int_apply(ipp, x, qcfg, cfg, impl=impl, noise=nz,
+                              rng=rng, mac_chunks=4)
+        np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
