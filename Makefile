@@ -14,6 +14,10 @@
 #                      canary breach -> auto-retrain -> hot-swap with
 #                      bit-exact replay (BENCH_fleet.json); full:
 #                      run.py --only fleet (docs/FLEET.md)
+#   make bench-lm    — fully quantized transformer decode bench: batched
+#                      vs unbatched token parity, kernel-vs-oracle
+#                      agreement, int8-KV-cache byte cut
+#                      (BENCH_serve_lm.json, docs/TRANSFORMER.md)
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make analyze     — static quantization-contract verifier (repro.analysis):
@@ -26,14 +30,15 @@
 #   make lint        — byte-compile + import sanity (no external deps)
 #   make check       — lint + analyze + tier-1 tests: the full pre-PR loop
 #   make ci          — lint + analyze + the packed-kernel parity gate
-#                      (@pytest.mark.packed) + fast tests (excludes
+#                      (@pytest.mark.packed) + the integer-decode parity
+#                      gate (@pytest.mark.lm) + fast tests (excludes
 #                      @pytest.mark.slow and @pytest.mark.mutation)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench conv bench-serve bench-mixed bench-noise bench-retrain \
-	bench-fleet autotune analyze lint check ci
+	bench-fleet bench-lm autotune analyze lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -59,6 +64,9 @@ bench-retrain:
 bench-fleet:
 	$(PYTHON) -m benchmarks.fleet_demo --dry-run
 
+bench-lm:
+	$(PYTHON) -m benchmarks.run --only serve_lm
+
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
 
@@ -71,7 +79,9 @@ lint:
 	repro.kernels.fq_matmul, repro.core.integer_inference, \
 	repro.core.deploy_qat, \
 	repro.models.kws, repro.models.darknet, repro.models.frontends, \
+	repro.models.fq_lm, \
 	repro.serve.cnn_batching, repro.serve.shape_ladder, \
+	repro.serve.batching, repro.serve.decode, \
 	repro.serve.fleet, repro.serve.faults, repro.serve.trace, \
 	repro.analysis, repro.analysis.absint, repro.analysis.intlint, \
 	repro.analysis.planlint, repro.analysis.kernellint, \
@@ -80,8 +90,11 @@ lint:
 check: lint analyze test
 
 ci: lint analyze
-	# packed parity gate first: a bit-exactness break fails fast with a
-	# clear signal, then the rest of the fast suite (packed excluded so
-	# the parity grid doesn't run twice)
+	# parity gates first: a bit-exactness break fails fast with a clear
+	# signal — packed weights, then the integer transformer decode — then
+	# the rest of the fast suite (gated marks excluded so neither parity
+	# grid runs twice)
 	$(PYTHON) -m pytest -q -m packed
-	$(PYTHON) -m pytest -q -m "not slow and not mutation and not packed"
+	$(PYTHON) -m pytest -q -m "lm and not slow"
+	$(PYTHON) -m pytest -q -m "not slow and not mutation and not packed \
+	and not lm"

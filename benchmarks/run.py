@@ -664,6 +664,103 @@ def bench_serve_mixed():
     print("serve_mixed,artifact,BENCH_serve_cnn.json,written")
 
 
+def bench_serve_lm():
+    """Fully quantized transformer decode (ISSUE 9 acceptance): integer
+    prefill+decode through the ContinuousBatcher vs the unbatched
+    reference loop (token parity across slot counts), the int8 kernel
+    path vs the jnp oracle (token-identical), and the int8-KV-cache byte
+    cut vs a float cache, recorded to BENCH_serve_lm.json. ``make
+    bench-lm`` is the dry-run-sized CLI (this IS dry-run sized: the
+    reduced config on seeded stand-in scales)."""
+    from repro.models import fq_lm as M
+    from repro.serve.batching import ContinuousBatcher, Request
+
+    print("# Serve — fully quantized transformer decode (int8 KV cache)")
+    backend = jax.default_backend()
+    cfg = M.FQLMConfig.reduced()
+    qcfg = M.LM_QCFG
+    max_len = 32
+    params = M.standin_params(jax.random.key(0), cfg)
+    stack = M.convert_int(params, cfg, qcfg)
+
+    prompts = [[1, 5, 9, 2], [7, 3], [40, 41, 42, 43, 44, 45], [0],
+               [11, 12, 13], [60, 2, 33, 4, 9]]
+    max_new = 8
+
+    # Unbatched reference trajectories + the kernel-vs-oracle probe: the
+    # Pallas int8 matmul and the pure-jnp reference epilogue must produce
+    # identical tokens (they are bit-exact on logits and KV codes; see
+    # tests/test_lm_int.py for the array-level assertion).
+    refs, oracle_same = {}, True
+    for i, p in enumerate(prompts):
+        refs[i] = M.int_generate(stack, p, qcfg, cfg, max_new=max_new,
+                                 max_len=max_len)
+        o = M.int_generate(stack, p, qcfg, cfg, max_new=max_new,
+                           max_len=max_len, linear=M.int_linear_ref)
+        oracle_same = oracle_same and refs[i] == o
+    print(f"serve_lm,kernel_vs_oracle_tokens_identical,{oracle_same},"
+          f"int8 fq_matmul vs jnp reference oracle")
+
+    rows = []
+    for slots in (1, 2, 4):
+        pf, sf, icf = M.serve_fns(cfg, qcfg, max_len=max_len)
+        b = ContinuousBatcher(stack, cfg, qcfg, slots=slots,
+                              max_len=max_len, prefill_fn=pf, step_fn=sf,
+                              init_caches_fn=icf)
+        # warm the jit caches off the clock, then reuse the SAME batcher
+        # (same jitted step) for the measured run
+        b.run([Request(rid=-1 - i, prompt=p, max_new=2)
+               for i, p in enumerate(prompts[:slots])])
+        reqs = [Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        out = b.run(reqs)
+        wall = time.time() - t0
+        parity = all(out[i] == refs[i] for i in range(len(prompts)))
+        total = sum(len(v) for v in out.values())
+        rows.append(dict(
+            slots=slots, n_req=len(prompts), max_new=max_new,
+            total_tokens=total, token_parity_vs_unbatched=parity,
+            us_per_tok=round(wall / total * 1e6),
+            tok_per_s=round(total / wall, 1)))
+        print(f"serve_lm,slots{slots}_token_parity,{parity},"
+              f"batched vs unbatched, staggered prompt lengths")
+        print(f"serve_lm,slots{slots}_tok_per_s,{total / wall:.1f},"
+              f"{'interpret-mode CPU' if backend != 'tpu' else 'TPU'}")
+
+    # int8 code-domain KV cache footprint vs a float cache, analytic for
+    # the reduced bench config and the full default config.
+    def kv_bytes(c, batch, seq, itemsize):
+        return 2 * c.n_layers * batch * seq * c.n_kv_heads * c.d_head \
+            * itemsize
+    kv = {}
+    for name, c in (("reduced", cfg), ("full", M.FQLMConfig())):
+        i8 = kv_bytes(c, 8, c.max_seq, 1)
+        f32 = kv_bytes(c, 8, c.max_seq, 4)
+        kv[name] = dict(batch=8, seq=c.max_seq, int8_bytes=i8,
+                        float32_bytes=f32, reduction=round(f32 / i8, 1))
+        print(f"serve_lm,kv_bytes_{name},{i8},"
+              f"{f32 / i8:.0f}x cut vs float32 cache (B=8, analytic)")
+
+    common.merge_bench_json("BENCH_serve_lm.json", {
+        "benchmark": "serve_lm_fq_decode",
+        "backend": backend,
+        "config": dict(name="fq_lm-reduced", n_layers=cfg.n_layers,
+                       d_model=cfg.d_model, n_heads=cfg.n_heads,
+                       n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff,
+                       vocab=cfg.vocab, max_len=max_len,
+                       qcfg=qcfg.label()),
+        "timing_note": (
+            "interpret-mode CPU timings — token parity and the KV byte "
+            "model are exact, absolute kernel speed is not"
+            if backend != "tpu" else "compiled TPU timings"),
+        "kernel_vs_oracle_tokens_identical": oracle_same,
+        "batched_vs_unbatched": rows,
+        "kv_cache_bytes": kv,
+    })
+    print("serve_lm,artifact,BENCH_serve_lm.json,written")
+
+
 def bench_dryrun_summary():
     """Roofline summary across the dry-run cells (EXPERIMENTS.md source)."""
     print("# Dry-run roofline summary")
@@ -720,6 +817,7 @@ ALL = {
     "conv": bench_conv,
     "serve_cnn": bench_serve_cnn,
     "serve_mixed": bench_serve_mixed,
+    "serve_lm": bench_serve_lm,
     "noise": bench_noise,
     "retrain": bench_retrain,
     "fleet": bench_fleet,

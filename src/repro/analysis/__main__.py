@@ -11,11 +11,12 @@ import sys
 
 from .report import Severity
 from .targets import DEFAULT_MAC_CHUNKS, darknet_target, kws_target, \
-    run_analysis
+    lm_target, run_analysis
 
 
 def build_targets(names, *, reduced: bool):
-    # each stack is analyzed twice: int8 and its packed (auto-format) twin
+    # each conv stack is analyzed twice: int8 and its packed (auto-format)
+    # twin; the transformer core once (int8 matmuls over the residual DAG)
     out = []
     for n in names:
         if n == "kws":
@@ -25,8 +26,10 @@ def build_targets(names, *, reduced: bool):
             out.append(darknet_target(reduced=reduced))
             out.append(darknet_target(reduced=reduced,
                                       weight_format="auto"))
+        elif n == "lm":
+            out.append(lm_target(reduced=reduced))
         else:
-            raise SystemExit(f"unknown stack {n!r} (kws/darknet)")
+            raise SystemExit(f"unknown stack {n!r} (kws/darknet/lm)")
     return out
 
 
@@ -35,8 +38,9 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="Static quantization-contract verifier for the "
                     "integer deployment path (intlint/planlint/kernellint)")
-    ap.add_argument("--stack", action="append", choices=["kws", "darknet"],
-                    help="stack(s) to analyze (default: both)")
+    ap.add_argument("--stack", action="append",
+                    choices=["kws", "darknet", "lm"],
+                    help="stack(s) to analyze (default: all)")
     ap.add_argument("--reduced", action="store_true",
                     help="analyze the reduced benchmark stacks (fast; CI "
                     "uses the full-size declared shapes)")
@@ -67,7 +71,7 @@ def main(argv=None) -> int:
     if not mac_chunks or any(k < 1 for k in mac_chunks):
         ap.error("--mac-chunks values must be >= 1")
 
-    targets = build_targets(args.stack or ["kws", "darknet"],
+    targets = build_targets(args.stack or ["kws", "darknet", "lm"],
                             reduced=args.reduced)
     report = run_analysis(
         targets, mac_chunks=mac_chunks,

@@ -59,6 +59,32 @@ def lint_handoff(layer_params: Dict[str, dict], names: Sequence[str],
                      "layers", layers=len(names))
 
 
+def lint_handoff_edges(layer_params: Dict[str, dict], edges,
+                       report: Report, subject: str):
+    """FQ hand-off contract over an explicit scale-tie edge list — the
+    chain contract generalized to residual-add DAGs (transformer stream:
+    every branch rejoining the stream must requantize onto the stream
+    scale, or code addition mixes incompatible bins)."""
+    ok = True
+    for src, sf, dst, df in edges:
+        s_src = float(np.asarray(layer_params[src][sf]))
+        s_dst = float(np.asarray(layer_params[dst][df]))
+        if not math.isclose(s_dst, s_src, abs_tol=_HANDOFF_ATOL):
+            ok = False
+            report.error(
+                "planlint/handoff", f"{subject}/{dst}",
+                f"{dst}.{df}={s_dst:.6f} != {src}.{sf}={s_src:.6f} on a "
+                "DAG scale-tie edge — codes hand over on mismatched bin "
+                "edges (run integer_inference.sync_handoff_edges)",
+                src=src, src_field=sf, dst_field=df,
+                s_src=s_src, s_dst=s_dst)
+    edges = list(edges)
+    if ok and edges:
+        report.prove("planlint/handoff", subject,
+                     f"scale ties hold across all {len(edges)} DAG "
+                     "hand-off edges", edges=len(edges))
+
+
 def lint_stack(stack, report: Report, subject: str,
                layer_params: Optional[Dict[str, dict]] = None):
     """Structural lints over a ConvertedStack artifact."""

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from ..core import quant
 from ..core.noise import NoiseConfig
 from ..core.quant import QuantConfig, n_levels
-from ..models import darknet, kws
+from ..models import darknet, fq_lm, kws
 from . import intlint, kernellint, planlint
 from .intlint import TraceSpec
 from .kernellint import ConvShape
@@ -57,6 +57,11 @@ class StackTarget:
     n_pool_markers: int = 0
     core_example: Tuple = ()       # example codes for int_core tracing
     weight_format: str = "int8"    # packed storage the stack was built with
+    # residual-add DAG stacks declare scale-tie edges instead of the
+    # pairwise chain contract, and may pin their own impl list (matmul
+    # cores have a single integer impl)
+    handoff_edges: Optional[list] = None
+    impls: Optional[Tuple[str, ...]] = None
 
 
 def _resolve_format(qcfg: QuantConfig, weight_format: Optional[str]) -> str:
@@ -189,15 +194,45 @@ def darknet_target(qcfg: QuantConfig = DEFAULT_QCFG, *,
         core_example=(codes,), weight_format=fmt)
 
 
+def lm_target(qcfg: QuantConfig = DEFAULT_QCFG, *, reduced: bool = False,
+              batch: int = 1, seq: int = 4) -> StackTarget:
+    """The integer transformer core over its residual-add DAG.
+
+    The core's example args are the two integer-segment entries: stream
+    codes plus per-layer stand-in attention-island output codes (the
+    float softmax island itself is outside the traced integer core —
+    see ``fq_lm.int_core``). Matmuls have one integer impl, so the
+    target pins ``impls=("int8",)``.
+    """
+    cfg = fq_lm.FQLMConfig.reduced() if reduced else fq_lm.FQLMConfig()
+    key = ("fq_lm", cfg, qcfg)
+    hit = _STANDIN_CACHE.get(key)
+    if hit is None:
+        params = fq_lm.standin_params(jax.random.key(0), cfg)
+        hit = (params, fq_lm.convert_int(params, cfg, qcfg))
+        _STANDIN_CACHE[key] = hit
+    fq_params, stack = hit
+    codes = jnp.zeros((batch, seq, cfg.d_model), jnp.int8)
+    attn = jnp.zeros((cfg.n_layers, batch, seq, cfg.d_model), jnp.int8)
+    return StackTarget(
+        name="lm-reduced" if reduced else "lm",
+        module=fq_lm, cfg=cfg, qcfg=qcfg, fq_params=fq_params, stack=stack,
+        chain=fq_lm.proj_names(cfg), shapes=[],
+        core_example=(codes, attn),
+        handoff_edges=fq_lm.handoff_edges(cfg), impls=("int8",))
+
+
 def default_targets(qcfg: QuantConfig = DEFAULT_QCFG, *,
                     reduced: bool = False) -> List[StackTarget]:
     # int8 stacks plus their packed (auto: ternary at the default
     # 2-bit-weight qcfg) twins — the packed cores are traced and their
-    # served shape keys linted exactly like the int8 ones.
+    # served shape keys linted exactly like the int8 ones — plus the
+    # integer transformer core over its residual-add DAG.
     return [kws_target(qcfg, reduced=reduced),
             darknet_target(qcfg, reduced=reduced),
             kws_target(qcfg, reduced=reduced, weight_format="auto"),
-            darknet_target(qcfg, reduced=reduced, weight_format="auto")]
+            darknet_target(qcfg, reduced=reduced, weight_format="auto"),
+            lm_target(qcfg, reduced=reduced)]
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +244,8 @@ def core_traces(target: StackTarget, *, impls: Sequence[str] = ("im2col",
                 "fused"), mac_chunks: Sequence[int] = DEFAULT_MAC_CHUNKS,
                 noise: NoiseConfig = DEFAULT_NOISE) -> List[TraceSpec]:
     """Clean + noisy int_core traces for one stack: every impl, and the
-    noise model at every requested mac_chunks."""
+    noise model at every requested mac_chunks. A target that pins its own
+    ``impls`` (the matmul LM core) overrides the requested impl list."""
     ip, qcfg, cfg, mod = (target.stack, target.qcfg, target.cfg,
                           target.module)
     rng = jax.random.key(7)
@@ -218,15 +254,15 @@ def core_traces(target: StackTarget, *, impls: Sequence[str] = ("im2col",
     wr = (quant.format_interval(target.weight_format)
           if target.weight_format != "int8" else None)
     specs = []
-    for impl in impls:
-        def clean(codes, impl=impl):
-            return mod.int_core(ip, codes, qcfg, cfg, impl=impl)
+    for impl in (target.impls or impls):
+        def clean(*ex, impl=impl):
+            return mod.int_core(ip, *ex, qcfg, cfg, impl=impl)
 
         specs.append(TraceSpec(f"{target.name}/{impl}/clean", clean,
                                target.core_example, weight_range=wr))
         for k in mac_chunks:
-            def noisy(codes, impl=impl, k=k):
-                return mod.int_core(ip, codes, qcfg, cfg, impl=impl,
+            def noisy(*ex, impl=impl, k=k):
+                return mod.int_core(ip, *ex, qcfg, cfg, impl=impl,
                                     noise=noise, rng=rng, mac_chunks=k)
 
             specs.append(TraceSpec(
@@ -264,7 +300,11 @@ def run_analysis(targets: Sequence[StackTarget], *,
     else:
         kernellint.lint_table_schema(report)
     for t in targets:
-        planlint.lint_handoff(t.fq_params, t.chain, report, t.name)
+        if t.handoff_edges is not None:
+            planlint.lint_handoff_edges(t.fq_params, t.handoff_edges,
+                                        report, t.name)
+        else:
+            planlint.lint_handoff(t.fq_params, t.chain, report, t.name)
         planlint.lint_stack(t.stack, report, t.name,
                             layer_params=t.fq_params)
         planlint.lint_noise_seeds(t.chain, report, t.name)

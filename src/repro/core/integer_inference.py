@@ -171,11 +171,18 @@ class ConvertedStack:
     """
 
     def __init__(self, qcfg: QuantConfig, specs: Sequence[LayerSpec],
-                 layers: Dict[str, dict], extras: Dict[str, Any]):
+                 layers: Dict[str, dict], extras: Dict[str, Any],
+                 handoff_edges: Optional[Sequence[Tuple[str, str, str, str]]]
+                 = None):
         self.qcfg = qcfg
         self.specs = tuple(specs)
         self.layers = dict(layers)
         self.extras = dict(extras)
+        # None -> linear chain (pairwise over specs); a tuple of
+        # (src, src_field, dst, dst_field) edges -> residual-add DAG
+        # hand-off (requant-to-common-scale ties), checked by rederive.
+        self.handoff_edges = (None if handoff_edges is None
+                              else tuple(tuple(e) for e in handoff_edges))
 
     # -- mapping compatibility ---------------------------------------------
 
@@ -224,7 +231,10 @@ class ConvertedStack:
         when those retrained as well (models' ``int_extras``).
         """
         if check_handoff:
-            _check_handoff(layer_params, self.specs)
+            if self.handoff_edges is not None:
+                _check_handoff_edges(layer_params, self.handoff_edges)
+            else:
+                _check_handoff(layer_params, self.specs)
         layers = {
             s.name: convert_layer(layer_params[s.name], self.qcfg,
                                   relu_out=s.relu_out, final=s.final,
@@ -237,7 +247,8 @@ class ConvertedStack:
             extras["entry"] = {"s_in": layer_params[self.specs[0].name]["s_in"]}
         if "s_out_last" in extras:
             extras["s_out_last"] = layer_params[self.specs[-1].name]["s_out"]
-        return ConvertedStack(self.qcfg, self.specs, layers, extras)
+        return ConvertedStack(self.qcfg, self.specs, layers, extras,
+                              handoff_edges=self.handoff_edges)
 
 
 # Python-int/str fields of a converted layer (kernel grid / epilogue /
@@ -253,16 +264,16 @@ def _stack_flatten(s: ConvertedStack):
     static = tuple(sorted(
         (n, tuple(sorted((k, d[k]) for k in _STATIC_LAYER_KEYS if k in d)))
         for n, d in s.layers.items()))
-    return (dyn, s.extras), (s.qcfg, s.specs, static)
+    return (dyn, s.extras), (s.qcfg, s.specs, static, s.handoff_edges)
 
 
 def _stack_unflatten(aux, children):
-    qcfg, specs, static = aux
+    qcfg, specs, static, edges = aux
     dyn, extras = children
     layers = {n: dict(d) for n, d in dyn.items()}
     for n, kv in static:
         layers[n].update(dict(kv))
-    return ConvertedStack(qcfg, specs, layers, extras)
+    return ConvertedStack(qcfg, specs, layers, extras, handoff_edges=edges)
 
 
 jax.tree_util.register_pytree_node(ConvertedStack, _stack_flatten,
@@ -292,6 +303,47 @@ def _check_handoff(layer_params: Dict[str, dict], specs: Sequence[LayerSpec],
                 "codes can hand over).")
 
 
+def _check_handoff_edges(layer_params: Dict[str, dict],
+                         edges: Sequence[Tuple[str, str, str, str]],
+                         *, atol: float = 1e-6):
+    """Validate the FQ hand-off contract over an explicit scale-tie edge
+    list — the chain contract extended to residual-add DAGs.
+
+    Each edge ``(src, src_field, dst, dst_field)`` asserts the two stored
+    scales are equal. For a residual add this is the requant-to-common-
+    scale condition: every branch rejoining the stream must requantize
+    onto the stream scale, else code addition mixes incompatible bins.
+    Skipped per-edge for traced params (mirrors ``_check_handoff``).
+    """
+    for src, sf, dst, df in edges:
+        s_src = layer_params[src][sf]
+        s_dst = layer_params[dst][df]
+        if not (_is_concrete(s_src) and _is_concrete(s_dst)):
+            continue
+        if not np.allclose(np.asarray(s_dst), np.asarray(s_src), atol=atol):
+            raise ValueError(
+                f"FQ hand-off contract violated on edge {src}.{sf} -> "
+                f"{dst}.{df}: {float(np.asarray(s_dst)):.6f} != "
+                f"{float(np.asarray(s_src)):.6f}. Run "
+                "integer_inference.sync_handoff_edges(params, edges) first.")
+
+
+def sync_handoff_edges(params: Dict[str, dict],
+                       edges: Sequence[Tuple[str, str, str, str]]):
+    """Enforce a DAG hand-off: copy ``src.src_field -> dst.dst_field`` for
+    every edge, in order, functionally (the input is never mutated).
+
+    The DAG generalization of :func:`sync_handoff`: edges are applied in
+    list order, so ties rooted at one canonical scale (e.g. a residual
+    stream's scale) propagate through the whole graph in one pass when the
+    edge list is topologically ordered (models emit them that way).
+    """
+    new = dict(params)
+    for src, sf, dst, df in edges:
+        new[dst] = {**new[dst], df: new[src][sf]}
+    return new
+
+
 def sync_handoff(params: Dict[str, dict], names: Sequence[str]):
     """Enforce s_in[i+1] = s_out[i] along a layer chain, functionally.
 
@@ -309,14 +361,22 @@ def sync_handoff(params: Dict[str, dict], names: Sequence[str]):
 def convert_stack(layer_params: Dict[str, dict], qcfg: QuantConfig, *,
                   specs: Sequence[LayerSpec], extras: Dict[str, Any],
                   check_handoff: bool = True,
-                  weight_format: Optional[str] = None) -> ConvertedStack:
-    """Convert an ordered chain of trained FQ layers into a ConvertedStack.
+                  weight_format: Optional[str] = None,
+                  handoff_edges: Optional[Sequence[Tuple[str, str, str, str]]]
+                  = None) -> ConvertedStack:
+    """Convert an ordered chain (or DAG) of trained FQ layers into a
+    ConvertedStack.
 
     ``weight_format`` overrides every spec's storage format: an explicit
     format name, or "auto" for the densest format that holds bits_w codes
     (ternary nets pack 4 codes/byte). The resolved format is recorded on
     the specs, so ``rederive`` re-packs identically. ``None`` keeps each
     spec's own (default int8) format.
+
+    ``handoff_edges`` replaces the pairwise chain hand-off check with an
+    explicit scale-tie edge list — residual-add DAGs (the transformer
+    stream) declare their requant-to-common-scale ties here. The edges
+    are recorded on the stack so ``rederive`` re-validates the same DAG.
     """
     specs = tuple(specs)
     if weight_format is not None:
@@ -325,14 +385,18 @@ def convert_stack(layer_params: Dict[str, dict], qcfg: QuantConfig, *,
         specs = tuple(dataclasses.replace(s, weight_format=fmt)
                       for s in specs)
     if check_handoff:
-        _check_handoff(layer_params, specs)
+        if handoff_edges is not None:
+            _check_handoff_edges(layer_params, handoff_edges)
+        else:
+            _check_handoff(layer_params, specs)
     layers = {
         s.name: convert_layer(layer_params[s.name], qcfg,
                               relu_out=s.relu_out, final=s.final, name=s.name,
                               weight_format=s.weight_format)
         for s in specs
     }
-    return ConvertedStack(qcfg, specs, layers, extras)
+    return ConvertedStack(qcfg, specs, layers, extras,
+                          handoff_edges=handoff_edges)
 
 
 def stack_digest(stack: ConvertedStack) -> str:
@@ -351,6 +415,12 @@ def stack_digest(stack: ConvertedStack) -> str:
     for s in stack.specs:
         h.update(f"{s.name}:{int(s.relu_out)}:{int(s.final)}"
                  f":{s.weight_format}".encode())
+    if stack.handoff_edges is not None:
+        # DAG stacks fold their scale-tie topology in; chain stacks
+        # (edges None) hash exactly as before, so recorded fleet digests
+        # stay valid.
+        for e in stack.handoff_edges:
+            h.update(":".join(e).encode())
 
     def leaf(x):
         if isinstance(x, (int, float, bool)):
@@ -384,7 +454,8 @@ def entry_codes(x, p, qcfg: QuantConfig, *, b_in: float = RELU_BOUND):
     return ops.quantize_to_codes(x, p["s_in"], bits=qcfg.bits_a, b=b_in)
 
 
-def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
+def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng, *,
+                   a_lo: int = 0):
     """Apply the paper's §4.4 noise model at the integer-layer boundary.
 
     Returns ``(w_codes, a_codes, mac_sigma_acc, mac_seed)``:
@@ -392,8 +463,10 @@ def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
       * weight codes perturbed in code units (memory-cell noise, clipped
         to the weight quantizer range [-n_w, n_w]),
       * input activation codes perturbed in code units (DAC noise,
-        clipped to [0, n_a] — one draw per layer input, mirroring the
-        float path's per-conv input-quantizer noise),
+        clipped to [a_lo, n_a] — one draw per layer input, mirroring the
+        float path's per-conv input-quantizer noise; ReLU stacks keep
+        the default a_lo=0, signed transformer stream codes pass
+        a_lo=-n_a),
       * the ADC noise std folded into ACCUMULATOR units for the kernel
         epilogue: sigma_mac is a fraction of the OUTPUT quantizer's LSB
         and requant maps accumulator -> output codes by ``rescale``, so
@@ -425,17 +498,37 @@ def noisy_operands(ip, codes, noise: Optional[NoiseConfig], rng):
                             lo=-n_w, hi=n_w)
     if fmt != "int8":
         w_codes = quant.pack_codes(w_codes, fmt)
-    a_codes = perturb_codes(codes, k_a, noise.sigma_a, lo=0, hi=a_hi)
+    a_codes = perturb_codes(codes, k_a, noise.sigma_a, lo=a_lo, hi=a_hi)
     if noise.sigma_mac > 0:
         return (w_codes, a_codes, noise.sigma_mac / ip["rescale"],
                 derive_seed(k_mac))
     return w_codes, a_codes, None, None
 
 
-def int_linear(ip, codes):
-    return ops.int_matmul(codes, ip["w_codes"], ip["rescale"],
+def int_linear(ip, codes, *, noise: Optional[NoiseConfig] = None, rng=None,
+               mac_chunks: int = 1, a_lo: int = 0):
+    w_codes, codes, sig, seed = noisy_operands(ip, codes, noise, rng,
+                                               a_lo=a_lo)
+    return ops.int_matmul(codes, w_codes, ip["rescale"],
                           epilogue="requant", n_out=ip["n_out"], lo=ip["lo"],
+                          noise_sigma_acc=sig, noise_seed=seed,
+                          mac_chunks=mac_chunks,
                           weight_format=ip.get("weight_format", "int8"))
+
+
+def int_residual_add(a_codes, b_codes, *, n_out: int, lo: Optional[int] = None):
+    """Code-domain residual add at a COMMON scale.
+
+    Both operands must be codes under the SAME output quantizer (scale
+    e^s, denominator n_out) — that is exactly what the requant-to-common-
+    scale hand-off edges of a residual DAG guarantee. The add is then a
+    saturating integer add: widen to int32 (int8-native adds would wrap
+    at +/-254 and trip the absint signed-wrap check), clip to the
+    quantizer range, and narrow back to int8 codes.
+    """
+    lo = -n_out if lo is None else lo
+    acc = a_codes.astype(jnp.int32) + b_codes.astype(jnp.int32)
+    return jnp.clip(acc, lo, n_out).astype(jnp.int8)
 
 
 def int_linear_final(ip, codes):

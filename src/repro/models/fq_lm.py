@@ -1,0 +1,510 @@
+"""FQ transformer LM: fully quantized decode with an int8 code-domain KV cache.
+
+The conv stacks proved the paper's recipe layer-to-layer along a chain; the
+transformer is the same recipe on a residual-add DAG:
+
+  * every attention/MLP projection is an FQ linear (quantized input codes,
+    quantized weight codes, integer MAC, requant epilogue) running through
+    the ``ops.int_matmul`` dispatch seam — the im2col-free ``fq_matmul``
+    at int8 is the bit-exact parity oracle (``kernels.ref.ref_fq_matmul``);
+  * the residual stream lives at ONE common quantizer scale (the canonical
+    ``wq0.s_in``): every branch rejoining the stream requantizes onto that
+    scale inside its last projection's epilogue, so a residual add is a
+    saturating integer code add (``integer_inference.int_residual_add``).
+    The scale ties form the ``handoff_edges`` DAG checked by
+    ``ConvertedStack.rederive``;
+  * the KV cache is kept in the CODE domain: the learned quantizer commutes
+    with concatenation exactly as it commutes with crop/pad in the shape
+    ladder — quantize-then-append equals append-then-quantize bit for bit,
+    because quantization is elementwise. ``int_decode_step`` appends the
+    int8 K/V codes of the new token and attention dequantizes straight
+    from the cache, with no float round-trip through cache memory;
+  * the attention softmax itself is a float ISLAND between two integer
+    segments (the paper quantizes MACs, not reductions): Q/K/V codes are
+    dequantized, attention runs in f32, and the context re-enters the
+    integer domain through ``wo``'s input quantizer (``island_s_in``).
+    Both prefill and decode attend over the FULL padded ``max_len`` cache
+    with position masks, so per-row reduction shapes are identical and
+    prefill+decode agrees bit-exactly with a longer prefill.
+
+One structure, two interpreters (the ``models.kws`` pattern): ``apply`` is
+the float/QAT forward, ``int_prefill``/``int_decode_step`` the integer
+deployment forward over a :class:`~repro.core.integer_inference.ConvertedStack`.
+
+The stream hand-off needs code denominators to agree across the residual
+add: ``n_levels(bits_a) == n_levels(bits_out)`` is asserted at conversion.
+Projection quantizers are per-tensor (one learned scale per matrix), not
+per-channel: the fused kernel epilogue folds to ONE scalar rescale, and the
+whitepapers' per-channel guidance targets conv BN-folded weight imbalance
+— see docs/TRANSFORMER.md for the trade-off discussion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import fq_layers as fql
+from ..core import integer_inference as ii
+from ..core.noise import NoiseConfig
+from ..core.quant import (QuantConfig, RELU_BOUND, WEIGHT_BOUND,
+                          learned_quantize, n_levels, quantize_to_int)
+from ..kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FQLMConfig:
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    n_layers: int = 4
+    d_ff: int = 128
+    max_seq: int = 128
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @classmethod
+    def reduced(cls) -> "FQLMConfig":
+        return cls(vocab=64, d_model=32, n_heads=4, n_kv_heads=2,
+                   n_layers=2, d_ff=64, max_seq=64)
+
+
+# The integer LM at full precision denominators: stream codes must share a
+# denominator across the residual add (bits_a == bits_out).
+LM_QCFG = QuantConfig(8, 8, 8, fq=True)
+
+# Projection kinds per block, in forward (= noise-seed chain) order.
+_KINDS = ("wq", "wk", "wv", "wo", "up", "down")
+
+
+def proj_names(cfg: FQLMConfig) -> List[str]:
+    return [f"{k}{i}" for i in range(cfg.n_layers) for k in _KINDS]
+
+
+def layer_specs(cfg: FQLMConfig):
+    """Conversion recipe: requant epilogues everywhere (decode happens via
+    ``s_out_last`` + the FP head); only ``up`` is a quantized ReLU."""
+    return [ii.LayerSpec(name=f"{k}{i}", relu_out=(k == "up"), final=False)
+            for i in range(cfg.n_layers) for k in _KINDS]
+
+
+def handoff_edges(cfg: FQLMConfig):
+    """Scale-tie edges of the residual-add DAG, topologically ordered.
+
+    The canonical stream scale is ``wq0.s_in``; every edge copies it (or a
+    derived tie) downstream, so one ``sync_handoff_edges`` pass propagates
+    the whole graph. Per layer: the three QKV projections read the stream
+    (s_in ties), ``wo``/``down`` requant their branch back ONTO the stream
+    (s_out ties — the requant-to-common-scale condition that makes the
+    residual add a plain code add), and ``up -> down`` is a chain hand-off
+    inside the MLP branch.
+    """
+    edges = []
+    for i in range(cfg.n_layers):
+        if i > 0:
+            edges.append((f"down{i - 1}", "s_out", f"wq{i}", "s_in"))
+        for k in ("wk", "wv"):
+            edges.append((f"wq{i}", "s_in", f"{k}{i}", "s_in"))
+        edges.append((f"wq{i}", "s_in", f"wo{i}", "s_out"))
+        edges.append((f"wq{i}", "s_in", f"up{i}", "s_in"))
+        edges.append((f"wq{i}", "s_in", f"down{i}", "s_out"))
+        edges.append((f"up{i}", "s_out", f"down{i}", "s_in"))
+    return edges
+
+
+def sync_scales(params, cfg: FQLMConfig):
+    """Tie all stream/chain scales from the canonical roots (functional)."""
+    return ii.sync_handoff_edges(params, handoff_edges(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: FQLMConfig):
+    n = 3 + 6 * cfg.n_layers
+    ks = list(jax.random.split(key, n))
+    d, dh, kvd = cfg.d_model, cfg.d_head, cfg.n_kv_heads * cfg.d_head
+    params = {
+        "embed": {"w": jax.random.normal(ks.pop(), (cfg.vocab, d)) * 0.5},
+        "pos": {"w": jax.random.normal(ks.pop(), (cfg.max_seq, d)) * 0.25},
+        "head": fql.init_dense(ks.pop(), d, cfg.vocab),
+    }
+    dims = {"wq": (d, d), "wk": (d, kvd), "wv": (d, kvd),
+            "wo": (d, d), "up": (d, cfg.d_ff), "down": (cfg.d_ff, d)}
+    for i in range(cfg.n_layers):
+        for k in _KINDS:
+            params[f"{k}{i}"] = fql.init_fq_linear(ks.pop(), *dims[k])
+    return params
+
+
+def standin_params(key, cfg: FQLMConfig, *, s: float = 0.5):
+    """Deterministic untrained stand-in with a valid hand-off contract.
+
+    Analysis targets and dry-run benches need a convertible stack with
+    non-degenerate codes, not a trained model: pin every activation scale
+    to ``s`` and tie the DAG. (``s_w`` stays the observed weight range from
+    ``init_fq_linear``.)
+    """
+    params = init_params(key, cfg)
+    for name in proj_names(cfg):
+        params[name] = {**params[name], "s_in": jnp.float32(s),
+                        "s_out": jnp.float32(s)}
+    return sync_scales(params, cfg)
+
+
+def int_extras(params, cfg: FQLMConfig):
+    """Float-side extras of the integer artifact.
+
+    ``island_s_in`` (the per-layer attention-island re-entry quantizers,
+    = each ``wo{i}.s_in``) is stack state the integer core does not own;
+    like the FP edge layers it goes stale if the float params retrain —
+    pass rebuilt extras to ``rederive`` in that case.
+    """
+    return {
+        "embed": params["embed"],
+        "pos": params["pos"],
+        "head": params["head"],
+        "entry": {"s_in": params["wq0"]["s_in"]},
+        "s_out_last": params[f"down{cfg.n_layers - 1}"]["s_out"],
+        "island_s_in": [params[f"wo{i}"]["s_in"]
+                        for i in range(cfg.n_layers)],
+    }
+
+
+def convert_int(params, cfg: FQLMConfig, qcfg: QuantConfig, *,
+                weight_format: Optional[str] = None) -> ii.ConvertedStack:
+    """Trained float LM -> integer deployment stack (DAG hand-off checked)."""
+    if n_levels(qcfg.bits_a) != n_levels(qcfg.bits_out):
+        raise ValueError(
+            f"FQ LM needs n_levels(bits_a) == n_levels(bits_out) so stream "
+            f"codes share a denominator across the residual add (got "
+            f"bits_a={qcfg.bits_a}, bits_out={qcfg.bits_out})")
+    params = sync_scales(params, cfg)
+    return ii.convert_stack(params, qcfg, specs=layer_specs(cfg),
+                            extras=int_extras(params, cfg),
+                            handoff_edges=handoff_edges(cfg),
+                            weight_format=weight_format)
+
+
+# ---------------------------------------------------------------------------
+# The float attention island (shared by both interpreters)
+# ---------------------------------------------------------------------------
+
+
+def _attention(q, k, v, mask, cfg: FQLMConfig):
+    """GQA attention. q: (B,Tq,d_model) values; k/v: (B,Tk,kv*dh) values;
+    mask: (B,Tq,Tk) bool (True = attend). Masked scores go to -1e30, whose
+    exp underflows to exactly 0.0 after the softmax max-subtract — padded
+    cache rows contribute bit-exactly nothing, which is what makes the
+    full-padded-cache prefill/decode reductions agree."""
+    b, tq = q.shape[:2]
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, tq, cfg.n_kv_heads, g, cfg.d_head)
+    k = k.reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) / np.sqrt(cfg.d_head)
+    scores = jnp.where(mask[:, None, None, :, :], scores,
+                       jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return ctx.reshape(b, tq, cfg.d_model)
+
+
+def _causal_mask(b, t):
+    i = jnp.arange(t)
+    return jnp.broadcast_to((i[None, :] <= i[:, None])[None], (b, t, t))
+
+
+# ---------------------------------------------------------------------------
+# Interpreter 1: the float/QAT forward
+# ---------------------------------------------------------------------------
+
+
+def apply(params, tokens, qcfg: QuantConfig, cfg: FQLMConfig, *,
+          noise: Optional[NoiseConfig] = None, rng=None):
+    """Float FQ forward over the residual DAG. tokens: (B, T) -> (B, T, V).
+
+    Mirrors the integer path op for op: each ``fq_linear`` input/output
+    quantizer corresponds to a code hand-off, and the stream requantize
+    after each residual add corresponds to ``int_residual_add`` (on values
+    that are exact multiples of the common scale, clip-add equals
+    add-then-quantize).
+    """
+    b, t = tokens.shape
+    s_h = params["wq0"]["s_in"]
+    x = params["embed"]["w"][tokens] + params["pos"]["w"][:t][None]
+    h = learned_quantize(x, s_h, bits=qcfg.bits_a, b=WEIGHT_BOUND)
+    rngs = iter(jax.random.split(rng, 6 * cfg.n_layers)) if rng is not None \
+        else iter([None] * (6 * cfg.n_layers))
+    mask = _causal_mask(b, t)
+    for i in range(cfg.n_layers):
+        q = fql.fq_linear(params[f"wq{i}"], h, qcfg, b_in=WEIGHT_BOUND,
+                          noise=noise, rng=next(rngs))
+        k = fql.fq_linear(params[f"wk{i}"], h, qcfg, b_in=WEIGHT_BOUND,
+                          noise=noise, rng=next(rngs))
+        v = fql.fq_linear(params[f"wv{i}"], h, qcfg, b_in=WEIGHT_BOUND,
+                          noise=noise, rng=next(rngs))
+        ctx = _attention(q, k, v, mask, cfg)
+        # fq_linear's input quantizer on wo IS the island re-entry quantizer
+        o = fql.fq_linear(params[f"wo{i}"], ctx, qcfg, b_in=WEIGHT_BOUND,
+                          noise=noise, rng=next(rngs))
+        h = learned_quantize(h + o, s_h, bits=qcfg.bits_out, b=WEIGHT_BOUND)
+        u = fql.fq_linear(params[f"up{i}"], h, qcfg, b_in=WEIGHT_BOUND,
+                          relu_out=True, noise=noise, rng=next(rngs))
+        dn = fql.fq_linear(params[f"down{i}"], u, qcfg, b_in=RELU_BOUND,
+                           noise=noise, rng=next(rngs))
+        h = learned_quantize(h + dn, s_h, bits=qcfg.bits_out, b=WEIGHT_BOUND)
+    return fql.dense(params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# Interpreter 2: the integer deployment forward
+# ---------------------------------------------------------------------------
+
+
+def _proj(ip, codes, linear, **kw):
+    """Apply an integer projection to (..., din) codes via a 2-D matmul."""
+    flat = codes.reshape(-1, codes.shape[-1])
+    out = linear(ip, flat, **kw)
+    return out.reshape(codes.shape[:-1] + (out.shape[-1],))
+
+
+def int_linear_ref(ip, codes, *, noise: Optional[NoiseConfig] = None,
+                   rng=None, mac_chunks: int = 1, a_lo: int = 0):
+    """Pure-jnp bit-exact oracle for ``int_linear`` (same epilogue math,
+    same deterministic noise field) — drop-in via the ``linear=`` seam."""
+    w_codes, codes, sig, seed = ii.noisy_operands(ip, codes, noise, rng,
+                                                  a_lo=a_lo)
+    return ref.ref_fq_matmul(codes, w_codes, ip["rescale"],
+                             epilogue="requant", n_out=ip["n_out"],
+                             lo=ip["lo"], noise_sigma_acc=sig,
+                             noise_seed=seed, mac_chunks=mac_chunks)
+
+
+def _deq(codes, s, n):
+    """Code -> value: e^s * (codes / n), in ``learned_quantize``'s exact op
+    order (scale * (codes/n)) so island values match the float path."""
+    return jnp.exp(s).astype(jnp.float32) * (codes.astype(jnp.float32) / n)
+
+
+def _island_codes(stack, i, ctx, qcfg: QuantConfig):
+    """Re-enter the integer domain after the attention island."""
+    return quantize_to_int(ctx, stack["island_s_in"][i], bits=qcfg.bits_a,
+                           b=WEIGHT_BOUND)
+
+
+def _block_tail(stack, i, h, ctx_codes, linear, *, noise=None, rngs=None,
+                mac_chunks=1):
+    """wo -> residual add -> MLP -> residual add, all in the code domain."""
+    n_out = stack[f"wq{i}"]["n_out"]
+    n_a = stack[f"wq{i}"]["n_a"]
+
+    def kw(j, a_lo):
+        if rngs is None:
+            return dict(noise=noise, rng=None, mac_chunks=mac_chunks,
+                        a_lo=a_lo)
+        return dict(noise=noise, rng=rngs[6 * i + j], mac_chunks=mac_chunks,
+                    a_lo=a_lo)
+
+    o = _proj(stack[f"wo{i}"], ctx_codes, linear, **kw(3, -n_a))
+    h = ii.int_residual_add(h, o, n_out=n_out)
+    u = _proj(stack[f"up{i}"], h, linear, **kw(4, -n_a))
+    dn = _proj(stack[f"down{i}"], u, linear, **kw(5, 0))
+    return ii.int_residual_add(h, dn, n_out=n_out)
+
+
+def _qkv(stack, i, h, linear, *, noise=None, rngs=None, mac_chunks=1):
+    n_a = stack[f"wq{i}"]["n_a"]
+
+    def kw(j):
+        if rngs is None:
+            return dict(noise=noise, rng=None, mac_chunks=mac_chunks,
+                        a_lo=-n_a)
+        return dict(noise=noise, rng=rngs[6 * i + j], mac_chunks=mac_chunks,
+                    a_lo=-n_a)
+
+    return (_proj(stack[f"wq{i}"], h, linear, **kw(0)),
+            _proj(stack[f"wk{i}"], h, linear, **kw(1)),
+            _proj(stack[f"wv{i}"], h, linear, **kw(2)))
+
+
+def int_core(ip, codes, attn_codes, qcfg: QuantConfig, cfg: FQLMConfig, *,
+             impl=None, noise: Optional[NoiseConfig] = None, rng=None,
+             mac_chunks: int = 1):
+    """The traceable INTEGER core: both integer segments of every block.
+
+    The attention softmax is a float island the purity lint must not see,
+    so the core takes per-layer stand-in island-output codes
+    (``attn_codes``: (n_layers, B, T, d_model) int8 — what the island
+    quantizer would emit) and runs the two integer segments around it:
+    stream -> Q/K/V projections, and island codes -> wo -> residual ->
+    MLP -> residual. Returns the final stream codes plus every projection
+    output, all integer — intlint proves the entire quantized compute
+    (every contraction, requant and residual add) stays in the code domain
+    with int32 headroom.
+
+    ``impl`` is accepted for target-harness uniformity (conv stacks
+    dispatch im2col/fused here); matmuls have a single integer impl.
+    """
+    del impl
+    linear = ii.int_linear
+    rngs = (None if rng is None
+            else list(jax.random.split(rng, 6 * cfg.n_layers)))
+    h = codes
+    outs = []
+    for i in range(cfg.n_layers):
+        qc, kc, vc = _qkv(ip, i, h, linear, noise=noise, rngs=rngs,
+                          mac_chunks=mac_chunks)
+        outs += [qc, kc, vc]
+        h = _block_tail(ip, i, h, attn_codes[i], linear, noise=noise,
+                        rngs=rngs, mac_chunks=mac_chunks)
+    return (h, *outs)
+
+
+def init_caches(cfg: FQLMConfig, batch: int, max_len: int):
+    """Int8 code-domain KV cache + a PER-SLOT position vector per layer.
+
+    Positions are per-slot (vLLM-style), not shared scalars — staggered
+    admissions with unequal prompt lengths decode correctly in one batch,
+    which the float path's lockstep caches could not do.
+    """
+    dh, kv = cfg.d_head, cfg.n_kv_heads
+    return [{"k": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+             "v": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+             "pos": jnp.zeros((batch,), jnp.int32)}
+            for _ in range(cfg.n_layers)]
+
+
+def _logits(stack, h, qcfg: QuantConfig):
+    hf = ii.decode_output(h, stack["s_out_last"], qcfg.bits_out)
+    return fql.dense(stack["head"], hf)
+
+
+def int_prefill(stack, tokens, qcfg: QuantConfig, cfg: FQLMConfig, *,
+                max_len: int, linear=None, full: bool = False):
+    """Integer prefill: (B, T) tokens -> (last-token logits, caches).
+
+    K/V CODES are written straight into the padded cache — quantization is
+    elementwise, so quantize-then-pad-then-attend equals the unpadded
+    computation exactly (masked rows contribute 0.0). Attention runs over
+    the full ``max_len`` cache so its per-row reductions have the same
+    shape as decode steps — the prefill/decode bit-exactness condition.
+    ``full=True`` returns logits at every position (parity tests).
+    """
+    linear = linear or ii.int_linear
+    b, t = tokens.shape
+    dh, kv = cfg.d_head, cfg.n_kv_heads
+    x = stack["embed"]["w"][tokens] + stack["pos"]["w"][:t][None]
+    h = ii.entry_codes(x, stack["entry"], qcfg, b_in=WEIGHT_BOUND)
+    caches = init_caches(cfg, b, max_len)
+    kpos = jnp.arange(max_len)
+    qpos = jnp.arange(t)
+    mask = jnp.broadcast_to((kpos[None, :] <= qpos[:, None])[None],
+                            (b, t, max_len))
+    for i in range(cfg.n_layers):
+        qc, kc, vc = _qkv(stack, i, h, linear)
+        kcache = caches[i]["k"].at[:, :t].set(kc.reshape(b, t, kv, dh))
+        vcache = caches[i]["v"].at[:, :t].set(vc.reshape(b, t, kv, dh))
+        caches[i] = {"k": kcache, "v": vcache,
+                     "pos": jnp.full((b,), t, jnp.int32)}
+        n = stack[f"wq{i}"]["n_out"]
+        ctx = _attention(
+            _deq(qc, stack[f"wq{i}"]["s_out"], n),
+            _deq(kcache.reshape(b, max_len, kv * dh),
+                 stack[f"wk{i}"]["s_out"], n),
+            _deq(vcache.reshape(b, max_len, kv * dh),
+                 stack[f"wv{i}"]["s_out"], n),
+            mask, cfg)
+        h = _block_tail(stack, i, h, _island_codes(stack, i, ctx, qcfg),
+                        linear)
+    if not full:
+        h = h[:, -1:]
+    return _logits(stack, h, qcfg), caches
+
+
+def int_decode_step(stack, caches, tokens, qcfg: QuantConfig,
+                    cfg: FQLMConfig, *, linear=None):
+    """One integer decode step: append K/V codes, attend, advance positions.
+
+    tokens: (B, 1) -> (logits (B, 1, V), new caches). The append is a
+    scatter of already-quantized codes at each slot's own position — the
+    code-domain KV invariant: the cache never sees float K/V.
+    """
+    linear = linear or ii.int_linear
+    b = tokens.shape[0]
+    dh, kv = cfg.d_head, cfg.n_kv_heads
+    max_len = caches[0]["k"].shape[1]
+    rows = jnp.arange(b)
+    kpos = jnp.arange(max_len)
+    pos = caches[0]["pos"]
+    x = (stack["embed"]["w"][tokens[:, 0]] + stack["pos"]["w"][pos])[:, None]
+    h = ii.entry_codes(x, stack["entry"], qcfg, b_in=WEIGHT_BOUND)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        qc, kc, vc = _qkv(stack, i, h, linear)
+        p = caches[i]["pos"]
+        kcache = caches[i]["k"].at[rows, p].set(kc[:, 0].reshape(b, kv, dh))
+        vcache = caches[i]["v"].at[rows, p].set(vc[:, 0].reshape(b, kv, dh))
+        new_caches.append({"k": kcache, "v": vcache, "pos": p + 1})
+        mask = (kpos[None, :] <= p[:, None])[:, None, :]
+        n = stack[f"wq{i}"]["n_out"]
+        ctx = _attention(
+            _deq(qc, stack[f"wq{i}"]["s_out"], n),
+            _deq(kcache.reshape(b, max_len, kv * dh),
+                 stack[f"wk{i}"]["s_out"], n),
+            _deq(vcache.reshape(b, max_len, kv * dh),
+                 stack[f"wv{i}"]["s_out"], n),
+            mask, cfg)
+        h = _block_tail(stack, i, h, _island_codes(stack, i, ctx, qcfg),
+                        linear)
+    return _logits(stack, h, qcfg), new_caches
+
+
+def serve_fns(cfg: FQLMConfig, qcfg: QuantConfig, *, max_len: int,
+              linear=None):
+    """(prefill_fn, step_fn, init_caches_fn) for ``ContinuousBatcher``.
+
+    The ConvertedStack rides as the batcher's ``params`` pytree (it
+    registers as one), so the jitted step sees codes/rescales as leaves
+    and n_out/lo/weight_format as static aux.
+    """
+
+    def prefill_fn(stack, tokens):
+        return int_prefill(stack, tokens, qcfg, cfg, max_len=max_len,
+                           linear=linear)
+
+    def step_fn(stack, caches, tokens):
+        return int_decode_step(stack, caches, tokens, qcfg, cfg,
+                               linear=linear)
+
+    def init_caches_fn(batch):
+        return init_caches(cfg, batch, max_len)
+
+    return prefill_fn, step_fn, init_caches_fn
+
+
+def int_generate(stack, prompt, qcfg: QuantConfig, cfg: FQLMConfig, *,
+                 max_new: int, max_len: int, eos_id: int = -1, linear=None):
+    """Unbatched greedy reference loop, token-for-token the batcher's
+    semantics: the prefill logits produce the first output token; decode
+    continues until EOS (appended, then stop) or the budget runs out."""
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, caches = int_prefill(stack, toks, qcfg, cfg, max_len=max_len,
+                                 linear=linear)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(max_new - 1):
+        if out[-1] == eos_id:
+            break
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, caches = int_decode_step(stack, caches, tok, qcfg, cfg,
+                                         linear=linear)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out

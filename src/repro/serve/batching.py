@@ -9,6 +9,12 @@ active slots, and one stalled request never blocks the others.
 
 The per-slot cache reset uses the prefill path on a single-slot batch and a
 scatter into the slot's cache rows — O(prompt) work, no full-batch refill.
+
+The model interface is pluggable: ``prefill_fn(params, tokens)``,
+``step_fn(params, caches, tokens)`` and ``init_caches_fn(batch)`` default
+to the float transformer path, while ``models.fq_lm.serve_fns`` supplies
+the fully quantized decode path (integer projections, int8 code-domain KV
+cache, per-slot position vectors) over a ``ConvertedStack``.
 """
 from __future__ import annotations
 
@@ -39,15 +45,18 @@ class ContinuousBatcher:
     fresh single-slot cache then scattered into the batch cache at the slot
     index. All slots then decode in lockstep through one jitted step.
 
-    Known simplification: position counters are per-layer scalars shared
-    across slots (jit-static cache layout), so concurrent requests must have
-    equal prompt lengths; a per-slot position vector (vLLM-style) is the
-    production extension and is sketched in DESIGN.md.
+    Caches with shared scalar position counters (the float transformer
+    path) require equal prompt lengths for concurrent requests; caches
+    carrying per-slot position vectors (the fq_lm integer path) admit
+    staggered prompts freely.
     """
 
     def __init__(self, params, model_cfg, qcfg: QuantConfig, *, slots: int,
                  max_len: int, eos_id: int = -1,
-                 sc: SampleConfig = SampleConfig()):
+                 sc: SampleConfig = SampleConfig(),
+                 prefill_fn: Optional[Callable] = None,
+                 step_fn: Optional[Callable] = None,
+                 init_caches_fn: Optional[Callable] = None):
         self.params = params
         self.cfg = model_cfg
         self.qcfg = qcfg
@@ -55,21 +64,49 @@ class ContinuousBatcher:
         self.max_len = max_len
         self.eos_id = eos_id
         self.sc = sc
-        self.caches = T.init_caches(model_cfg, slots, max_len)
+        if prefill_fn is None:
+            def prefill_fn(params, toks):
+                return T.prefill(params, {"tokens": toks}, model_cfg, qcfg,
+                                 max_len=max_len)
+        if step_fn is None:
+            step_fn = make_serve_step(model_cfg, qcfg)
+        if init_caches_fn is None:
+            def init_caches_fn(batch):
+                return T.init_caches(model_cfg, batch, max_len)
+        self._prefill = prefill_fn
+        self.caches = init_caches_fn(slots)
         self.active: List[Optional[Request]] = [None] * slots
         self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
         self.budget = jnp.zeros((slots,), jnp.int32)
-        self._step = jax.jit(make_serve_step(model_cfg, qcfg),
-                             donate_argnums=(1,))
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._key = jax.random.key(0)
+        self._draws = 0
         self._queue: List[Request] = []
+
+    def _next_key(self):
+        """A fresh key per sampling event. Folding a monotone draw counter
+        into the base key gives every draw — each admission in a
+        ``_fill_slots`` pass AND each decode step — a distinct stream;
+        reusing the unfolded key made same-pass admissions draw identical
+        first tokens and collide with the next step's draw."""
+        k = jax.random.fold_in(self._key, self._draws)
+        self._draws += 1
+        return k
 
     # -- slot management ----------------------------------------------------
 
     def _admit(self, req: Request, slot: int):
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, fresh = T.prefill(self.params, {"tokens": toks}, self.cfg,
-                                  self.qcfg, max_len=self.max_len)
+        logits, fresh = self._prefill(self.params, toks)
+        tok = sample(self._next_key(), logits, self.sc)
+        # The prefill logits already produced the first output token.
+        req.out.append(int(tok[0, 0]))
+        if int(tok[0, 0]) == self.eos_id or req.max_new <= 1:
+            # Done at prefill: retire before ANY batch state is touched —
+            # the slot still reads as free, so its lane (cache rows,
+            # cur_tok, budget) must not carry this request's leftovers.
+            req.done = True
+            return
 
         # Scatter the single-slot cache into this slot of the batch cache.
         # The batch axis is wherever batch_leaf has `slots` and the fresh
@@ -88,13 +125,7 @@ class ContinuousBatcher:
             return one_leaf
 
         self.caches = jax.tree.map(put, self.caches, fresh)
-        tok = sample(self._key, logits, self.sc)
         self.cur_tok = self.cur_tok.at[slot].set(tok[0])
-        # The prefill logits already produced the first output token.
-        req.out.append(int(tok[0, 0]))
-        if int(tok[0, 0]) == self.eos_id or req.max_new <= 1:
-            req.done = True
-            return
         self.budget = self.budget.at[slot].set(req.max_new - 1)
         self.active[slot] = req
 
@@ -115,13 +146,13 @@ class ContinuousBatcher:
             return 0
         logits, self.caches = self._step(self.params, self.caches,
                                          self.cur_tok)
-        self._key = jax.random.fold_in(self._key, 1)
-        nxt = sample(self._key, logits, self.sc)
+        nxt = sample(self._next_key(), logits, self.sc)
         self.cur_tok = nxt
         self.budget = jnp.maximum(self.budget - 1, 0)
         n_active = 0
         toks = jax.device_get(nxt)[:, 0]
         budget = jax.device_get(self.budget)
+        retired = []
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -129,8 +160,16 @@ class ContinuousBatcher:
             if int(toks[i]) == self.eos_id or budget[i] <= 0:
                 req.done = True
                 self.active[i] = None
+                retired.append(i)
             else:
                 n_active += 1
+        # Zero retired lanes: a masked slot keeps flowing through the
+        # jitted step, and stale cur_tok/budget would make dead-lane state
+        # (and any replay digest over it) depend on whichever request died
+        # there last. Deterministic zeros instead.
+        for i in retired:
+            self.cur_tok = self.cur_tok.at[i].set(0)
+            self.budget = self.budget.at[i].set(0)
         return n_active
 
     def run(self, reqs: List[Request], max_steps: int = 10_000

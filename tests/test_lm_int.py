@@ -1,0 +1,190 @@
+"""Fully quantized transformer decode (@pytest.mark.lm).
+
+Parity suite for the integer LM: the int8 ``fq_matmul`` kernel vs the
+pure-jnp oracle, the code-domain KV append vs quantize-after-concat, the
+batched ``ContinuousBatcher`` path vs an unbatched reference loop across
+slot counts and staggered admissions, and the residual-DAG conversion
+contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integer_inference as ii
+from repro.core.quant import QuantConfig
+from repro.models import fq_lm as M
+from repro.serve.batching import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.lm
+
+CFG = M.FQLMConfig.reduced()
+QCFG = M.LM_QCFG
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.standin_params(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def stack(params):
+    return M.convert_int(params, CFG, QCFG)
+
+
+def _assert_caches_equal(a, b):
+    for i, (ca, cb) in enumerate(zip(a, b)):
+        for k in ("k", "v", "pos"):
+            np.testing.assert_array_equal(np.asarray(ca[k]),
+                                          np.asarray(cb[k]),
+                                          err_msg=f"layer {i} cache {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: kernel vs oracle, KV append vs quantize-after-concat
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_vs_ref_oracle_bit_exact(stack):
+    """The Pallas int8 matmul path and the jnp reference epilogue must be
+    BIT-exact through prefill + multi-step decode — same logits, same KV
+    codes at every step. (int32 accumulation is exact; the requant
+    epilogues are the same clip/round/cast.)"""
+    toks = jnp.asarray([[1, 5, 9, 2], [40, 41, 42, 43]], jnp.int32)
+    lk, ck = M.int_prefill(stack, toks, QCFG, CFG, max_len=MAX_LEN)
+    lr, cr = M.int_prefill(stack, toks, QCFG, CFG, max_len=MAX_LEN,
+                           linear=M.int_linear_ref)
+    np.testing.assert_array_equal(np.asarray(lk), np.asarray(lr))
+    _assert_caches_equal(ck, cr)
+    for _ in range(3):
+        nxt = jnp.argmax(lk[:, -1], -1)[:, None].astype(jnp.int32)
+        lk, ck = M.int_decode_step(stack, ck, nxt, QCFG, CFG)
+        lr, cr = M.int_decode_step(stack, cr, nxt, QCFG, CFG,
+                                   linear=M.int_linear_ref)
+        np.testing.assert_array_equal(np.asarray(lk), np.asarray(lr))
+        _assert_caches_equal(ck, cr)
+
+
+def test_kv_append_commutes_with_quantizer(stack):
+    """The code-domain KV invariant: appending the new token's QUANTIZED
+    K/V codes (prefill T, then decode) produces bit-identical caches and
+    logits to quantizing the whole concatenated stream at once (prefill
+    T+1) — the learned quantizer commutes with concat."""
+    pre = [3, 17, 8, 25]
+    nxt = 11
+    toks = jnp.asarray([pre], jnp.int32)
+    logits, caches = M.int_prefill(stack, toks, QCFG, CFG, max_len=MAX_LEN)
+    l_step, c_step = M.int_decode_step(
+        stack, caches, jnp.asarray([[nxt]], jnp.int32), QCFG, CFG)
+    l_full, c_full = M.int_prefill(
+        stack, jnp.asarray([pre + [nxt]], jnp.int32), QCFG, CFG,
+        max_len=MAX_LEN, full=True)
+    _assert_caches_equal(c_step, c_full)
+    np.testing.assert_array_equal(np.asarray(l_step),
+                                  np.asarray(l_full[:, -1:]))
+
+
+# ---------------------------------------------------------------------------
+# batched vs unbatched parity
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[1, 5, 9, 2], [7, 3], [40, 41, 42, 43, 44, 45], [0]]
+
+
+def _run_batched(stack, prompts, *, slots, max_new, eos_id=-1):
+    pf, sf, icf = M.serve_fns(CFG, QCFG, max_len=MAX_LEN)
+    b = ContinuousBatcher(stack, CFG, QCFG, slots=slots, max_len=MAX_LEN,
+                          eos_id=eos_id, prefill_fn=pf, step_fn=sf,
+                          init_caches_fn=icf)
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    return b.run(reqs)
+
+
+@pytest.mark.parametrize("slots", [1, 2, 3])
+def test_batched_matches_unbatched_across_slots(stack, slots):
+    """Greedy continuous batching over the integer path is token-identical
+    to the unbatched reference loop — staggered prompt lengths, more
+    requests than slots, retire-and-refill mid-stream."""
+    out = _run_batched(stack, PROMPTS, slots=slots, max_new=5)
+    for i, p in enumerate(PROMPTS):
+        ref = M.int_generate(stack, p, QCFG, CFG, max_new=5,
+                             max_len=MAX_LEN)
+        assert out[i] == ref, f"slots={slots} req {i}: {out[i]} != {ref}"
+
+
+def test_batched_eos_matches_unbatched(stack):
+    """EOS retirement (mid-decode AND at-prefill) stays token-identical:
+    the eos_id is picked from an actual trajectory so at least one request
+    stops early, freeing its slot for a staggered admission."""
+    probe = M.int_generate(stack, PROMPTS[0], QCFG, CFG, max_new=5,
+                           max_len=MAX_LEN)
+    eos = probe[2]  # retires request 0 mid-decode
+    out = _run_batched(stack, PROMPTS, slots=2, max_new=6, eos_id=eos)
+    for i, p in enumerate(PROMPTS):
+        ref = M.int_generate(stack, p, QCFG, CFG, max_new=6,
+                             max_len=MAX_LEN, eos_id=eos)
+        assert out[i] == ref, f"req {i}: {out[i]} != {ref}"
+        assert len(out[i]) <= 6
+
+
+# ---------------------------------------------------------------------------
+# float path agreement
+# ---------------------------------------------------------------------------
+
+
+def test_float_vs_int_logits_close(params, stack):
+    """The float FQ forward and the integer deployment path compute the
+    same function up to float non-associativity — logits agree to
+    tolerance and greedy decisions agree exactly."""
+    toks = jnp.asarray([[1, 5, 9, 2], [7, 3, 40, 0]], jnp.int32)
+    fl = M.apply(params, toks, QCFG, CFG)
+    il, _ = M.int_prefill(stack, toks, QCFG, CFG, max_len=MAX_LEN,
+                          full=True)
+    np.testing.assert_allclose(np.asarray(fl), np.asarray(il),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(fl, -1)),
+                                  np.asarray(jnp.argmax(il, -1)))
+
+
+# ---------------------------------------------------------------------------
+# residual-DAG conversion contract
+# ---------------------------------------------------------------------------
+
+
+def test_convert_rejects_unsynced_dag(params):
+    # convert_int syncs the ties itself; the underlying convert_stack must
+    # refuse a DAG whose requant-to-common-scale edges don't hold.
+    broken = dict(params)
+    broken["wo1"] = {**broken["wo1"], "s_out": jnp.float32(0.9)}
+    with pytest.raises(ValueError, match="hand-off contract"):
+        ii.convert_stack(broken, QCFG, specs=M.layer_specs(CFG),
+                         extras=M.int_extras(broken, CFG),
+                         handoff_edges=M.handoff_edges(CFG))
+
+
+def test_convert_rejects_mismatched_denominators(params):
+    with pytest.raises(ValueError, match="denominator"):
+        M.convert_int(params, CFG, QuantConfig(8, 8, 4, fq=True))
+
+
+def test_rederive_round_trips_dag_stack(params, stack):
+    re = stack.rederive(M.sync_scales(params, CFG))
+    assert re.handoff_edges == stack.handoff_edges
+    assert ii.stack_digest(re) == ii.stack_digest(stack)
+    # and the digest is sensitive to the edge topology
+    chain = ii.ConvertedStack(stack.qcfg, stack.specs, stack.layers,
+                              stack.extras, handoff_edges=None)
+    assert ii.stack_digest(chain) != ii.stack_digest(stack)
+
+
+def test_pytree_round_trip_keeps_edges(stack):
+    leaves, treedef = jax.tree_util.tree_flatten(stack)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.handoff_edges == stack.handoff_edges
+    out1, _ = M.int_prefill(stack, jnp.asarray([[1, 2]], jnp.int32), QCFG,
+                            CFG, max_len=8)
+    out2, _ = M.int_prefill(rebuilt, jnp.asarray([[1, 2]], jnp.int32),
+                            QCFG, CFG, max_len=8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))

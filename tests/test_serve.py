@@ -68,6 +68,72 @@ def test_batcher_more_requests_than_slots():
     assert all(len(v) == 3 for v in out.values())
 
 
+def test_admissions_draw_distinct_keys():
+    """Regression: every prefill admission in one _fill_slots pass must
+    sample with its own folded key — the unfolded self._key made identical
+    prompts draw identical first tokens under temperature sampling."""
+    params = _params()
+    b = ContinuousBatcher(params, CFG, QCFG, slots=6, max_len=16,
+                          sc=SampleConfig(temperature=5.0))
+    reqs = [Request(rid=i, prompt=[5, 6, 7], max_new=1) for i in range(6)]
+    b.run(reqs)
+    firsts = [r.out[0] for r in reqs]
+    assert len(firsts) == 6
+    assert len(set(firsts)) > 1, firsts
+
+
+def test_retired_slots_zeroed():
+    """Regression: a retired slot keeps flowing through the jitted step, so
+    stale cur_tok would keep decoding the dead request's last token —
+    replay digests over lane state must see deterministic zeros instead."""
+    params = _params()
+    b = ContinuousBatcher(params, CFG, QCFG, slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=[1, 2, 3, 4], max_new=4) for i in range(2)]
+    out = b.run(reqs)
+    assert all(r.done for r in reqs)
+    # guard: a final token of 0 would make the cur_tok assertion vacuous
+    assert any(v[-1] != 0 for v in out.values()), out
+    assert np.all(np.asarray(b.cur_tok) == 0)
+    assert np.all(np.asarray(b.budget) == 0)
+    assert b.active == [None, None]
+
+
+def _assert_no_admission_state(b, caches0):
+    assert np.all(np.asarray(b.cur_tok) == 0)
+    assert np.all(np.asarray(b.budget) == 0)
+    assert b.active == [None] * b.slots
+    jax.tree.map(
+        lambda a, x: np.testing.assert_array_equal(a, np.asarray(x)),
+        caches0, b.caches)
+
+
+def test_admit_max_new_1_leaves_no_state():
+    """Regression: a request done at prefill (max_new=1) retires while its
+    slot reads free — admission must leave no observable batch state."""
+    params = _params()
+    b = ContinuousBatcher(params, CFG, QCFG, slots=2, max_len=16)
+    caches0 = jax.tree.map(lambda x: np.asarray(x).copy(), b.caches)
+    r = Request(rid=0, prompt=[1, 2, 3], max_new=1)
+    b.run([r])
+    assert r.done and len(r.out) == 1
+    _assert_no_admission_state(b, caches0)
+
+
+def test_admit_prefill_eos_leaves_no_state():
+    """Same contract when the first sampled token IS the EOS token."""
+    params = _params()
+    toks = jnp.asarray([[1, 2, 3]], jnp.int32)
+    first = int(np.asarray(
+        generate(params, CFG, QCFG, {"tokens": toks}, max_new=1))[0, 0])
+    b = ContinuousBatcher(params, CFG, QCFG, slots=2, max_len=16,
+                          eos_id=first)
+    caches0 = jax.tree.map(lambda x: np.asarray(x).copy(), b.caches)
+    r = Request(rid=0, prompt=[1, 2, 3], max_new=5)
+    b.run([r])
+    assert r.done and r.out == [first]
+    _assert_no_admission_state(b, caches0)
+
+
 def test_int8_weights_generate_close():
     """w8 deployment codes change logits only slightly -> same greedy path
     for a randomly-initialized (flat-logit) model is not guaranteed, so
