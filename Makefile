@@ -18,6 +18,10 @@
 #                      vs unbatched token parity, kernel-vs-oracle
 #                      agreement, int8-KV-cache byte cut
 #                      (BENCH_serve_lm.json, docs/TRANSFORMER.md)
+#   make bench-mesh  — replica-scaling serving-mesh bench: 1/2/4 simulated
+#                      replica lanes over the seeded mixed trace, both
+#                      flush modes, byte-identical outputs required
+#                      (BENCH_serve_mesh.json, docs/SERVING_MESH.md)
 #   make autotune    — measured (bho, bco, bc) sweep; rewrites
 #                      src/repro/kernels/autotune_table.json + BENCH_autotune.json
 #   make analyze     — static quantization-contract verifier (repro.analysis):
@@ -31,14 +35,15 @@
 #   make check       — lint + analyze + tier-1 tests: the full pre-PR loop
 #   make ci          — lint + analyze + the packed-kernel parity gate
 #                      (@pytest.mark.packed) + the integer-decode parity
-#                      gate (@pytest.mark.lm) + fast tests (excludes
+#                      gate (@pytest.mark.lm) + the serving-mesh gate
+#                      (@pytest.mark.mesh) + fast tests (excludes
 #                      @pytest.mark.slow and @pytest.mark.mutation)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test bench conv bench-serve bench-mixed bench-noise bench-retrain \
-	bench-fleet bench-lm autotune analyze lint check ci
+	bench-fleet bench-lm bench-mesh autotune analyze lint check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -66,6 +71,9 @@ bench-fleet:
 
 bench-lm:
 	$(PYTHON) -m benchmarks.run --only serve_lm
+
+bench-mesh:
+	$(PYTHON) -m benchmarks.run --only serve_mesh
 
 autotune:
 	$(PYTHON) -m benchmarks.autotune_conv
@@ -96,5 +104,6 @@ ci: lint analyze
 	# grid runs twice)
 	$(PYTHON) -m pytest -q -m packed
 	$(PYTHON) -m pytest -q -m "lm and not slow"
+	$(PYTHON) -m pytest -q -m "mesh and not slow"
 	$(PYTHON) -m pytest -q -m "not slow and not mutation and not packed \
-	and not lm"
+	and not lm and not mesh"

@@ -278,6 +278,32 @@ def lint_shapes(shapes: Sequence[ConvShape], report: Report, *,
 
 
 def runtime_miss_counters(report: Report):
-    """Fold fq_conv's serve-time miss counters into the report."""
+    """Fold fq_conv's serve-time miss counters into the report.
+
+    Besides the global per-key counts, the serving mesh records misses
+    per replica lane (``AUTOTUNE_MISSES_BY_REPLICA``, tagged via
+    ``fq_conv.replica_scope``). Replicas in one process share a backend
+    family, so they should trace the same shapes against the same table
+    — a lane whose miss-key set diverges from the union means the lanes
+    are NOT serving identical compiled work (e.g. a per-replica swap
+    half-landed, or a lane compiled a shape the others never saw), which
+    is worth a warning before it becomes a latency mystery."""
     for key, n in sorted(fq_conv.AUTOTUNE_MISSES.items()):
         report.count(f"kernellint/runtime-miss:{key}", n)
+    per: dict = {}
+    for (tag, key), n in sorted(fq_conv.AUTOTUNE_MISSES_BY_REPLICA.items(),
+                                key=lambda kv: (str(kv[0][0]), kv[0][1])):
+        report.count(f"kernellint/runtime-miss:replica[{tag}]:{key}", n)
+        per.setdefault(tag, set()).add(key)
+    if len(per) > 1:
+        union = set().union(*per.values())
+        for tag in sorted(per, key=str):
+            missing = union - per[tag]
+            if missing:
+                report.warning(
+                    "kernellint/replica-miss-divergence", f"replica[{tag}]",
+                    f"replica {tag!r} reported autotune misses for "
+                    f"{sorted(per[tag])} but same-backend peers also missed "
+                    f"{sorted(missing)} — replica lanes are not tracing "
+                    "identical work", replica=tag,
+                    missing=sorted(map(str, missing)))

@@ -280,6 +280,26 @@ jax.tree_util.register_pytree_node(ConvertedStack, _stack_flatten,
                                    _stack_unflatten)
 
 
+def place_stack(stack: ConvertedStack, device) -> ConvertedStack:
+    """Copy a ConvertedStack's arrays onto ``device``.
+
+    The kernel statics (n_out/lo/n_w/n_a/weight_format) ride in pytree
+    AUX data, so ``jax.device_put`` moves only the code/scale leaves and
+    the reconstructed stack serves identically — ``stack_digest`` is
+    placement-invariant."""
+    return jax.device_put(stack, device)
+
+
+def replicate_stack(stack: ConvertedStack, devices) -> list:
+    """One placed copy of ``stack`` per device (serving-mesh replicas).
+
+    On an oversubscribed CPU host (``launch.mesh.replica_devices`` with
+    one physical device) the copies share buffers — which IS the
+    CPU-simulation semantics: logically distinct replicas, one backing
+    store."""
+    return [place_stack(stack, d) for d in devices]
+
+
 def _check_handoff(layer_params: Dict[str, dict], specs: Sequence[LayerSpec],
                    *, atol: float = 1e-6):
     """Validate the FQ hand-off contract s_in[i+1] == s_out[i].

@@ -43,6 +43,7 @@ heuristic.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import json
 import os
@@ -132,7 +133,25 @@ MEASURED_KEYS: Optional[set] = None
 # missed a measured entry; repro.analysis folds these counts into its
 # report.
 AUTOTUNE_MISSES: dict = {}
+# (replica_tag, key) -> misses recorded while a serving replica lane's
+# replica_scope was active. Misses fire at jit-trace time, so with a step
+# SHARED across lanes only the first-compiling lane records — per-replica
+# apply closures each trace and each record. kernellint folds these and
+# warns when same-backend replicas report divergent miss keys.
+AUTOTUNE_MISSES_BY_REPLICA: dict = {}
+_REPLICA_TAG: list = [None]
 _WARNED_KEYS: set = set()
+
+
+@contextlib.contextmanager
+def replica_scope(tag):
+    """Attribute autotune-table misses inside the block to replica ``tag``
+    (serve.cnn_batching wraps each lane's dispatch in one)."""
+    prev, _REPLICA_TAG[0] = _REPLICA_TAG[0], tag
+    try:
+        yield
+    finally:
+        _REPLICA_TAG[0] = prev
 
 
 def measured_keys(path: str = AUTOTUNE_TABLE_PATH) -> set:
@@ -169,11 +188,16 @@ def reset_autotune_cache():
     AUTOTUNE_TABLE = None
     MEASURED_KEYS = None
     AUTOTUNE_MISSES.clear()
+    AUTOTUNE_MISSES_BY_REPLICA.clear()
     _WARNED_KEYS.clear()
 
 
 def _note_autotune_miss(key: Tuple[int, int, int, str]):
     AUTOTUNE_MISSES[key] = AUTOTUNE_MISSES.get(key, 0) + 1
+    if _REPLICA_TAG[0] is not None:
+        rk = (_REPLICA_TAG[0], key)
+        AUTOTUNE_MISSES_BY_REPLICA[rk] = \
+            AUTOTUNE_MISSES_BY_REPLICA.get(rk, 0) + 1
     if key not in _WARNED_KEYS:
         _WARNED_KEYS.add(key)
         warnings.warn(AutotuneMissWarning(key, jax.default_backend()),

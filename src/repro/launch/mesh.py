@@ -44,6 +44,31 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return _make_mesh(tuple(shape), tuple(axes))
 
 
+def make_serving_mesh(n_replicas: int):
+    """Serving-mode mesh: one ``replica`` axis over n_replicas devices.
+
+    Each replica holds a full ``ConvertedStack`` copy (the deployed
+    integer artifact is small — that is the point of the recipe), so the
+    only mesh axis is data-parallel over replicas: a big flush batch
+    shards its rows across lanes via ``models.sharding
+    .serving_constrain``. Raises when the host exposes fewer devices
+    (use ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for CPU
+    simulation, as the sharding subprocess tests do)."""
+    return make_mesh((n_replicas,), ("replica",))
+
+
+def replica_devices(n_replicas: int):
+    """Device placement for n logical replica lanes, round-robin over
+    ``jax.devices()``. Unlike ``make_serving_mesh`` this OVERSUBSCRIBES
+    rather than raises when devices run short — on a 1-device CPU host
+    every lane maps to the same device, which is exactly the
+    host-device-simulation mode the serving tests and benchmarks run in
+    (lanes stay logically distinct: own windows, own stats, own routing
+    rank)."""
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n_replicas)]
+
+
 def batch_axes(mesh, mode: str = "fsdp_tp") -> Tuple[str, ...]:
     """Mesh axes the global batch shards over. In ``fsdp_pure`` mode the
     ``model`` axis carries data parallelism too (no TP)."""

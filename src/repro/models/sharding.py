@@ -123,6 +123,22 @@ def constrain(x, *spec):
         x, NamedSharding(mesh, P(*expanded)))
 
 
+def serving_constrain(x, mesh):
+    """Shard a serving flush batch over the mesh's ``replica`` axis.
+
+    The serving-mesh analog of the training batch constraint: big flush
+    batches data-parallel-shard their rows across replica devices
+    (``launch.mesh.make_serving_mesh``). Routed through :func:`constrain`
+    ON PURPOSE — serving exercises the same constraint path (and the same
+    tuple-axis workaround gate) as training, so the version-gated probe
+    in tests/test_sharding_rules.py covers both. The serving mesh is a
+    single axis, so the spec is always single-axis and the jax-0.4.37
+    tuple-axis miscompile cannot engage; a no-op in values either way.
+    """
+    with use_mesh(mesh, batch_axes=("replica",)):
+        return constrain(x, "batch")
+
+
 # ---------------------------------------------------------------------------
 # Parameter partition specs
 # ---------------------------------------------------------------------------

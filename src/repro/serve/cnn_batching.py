@@ -43,15 +43,38 @@ Scheduling model — a ``tick()`` is one host scheduling quantum:
     host keeps packing. A tick first resolves every in-flight result
     dispatched on an earlier tick (the device ran during the inter-tick
     interval; ``device_get`` on those is a fetch, not a stall), then
-    dispatches up to the free slots of the bounded in-flight window
-    (``max_inflight``). When the window is full, further candidates are
-    back-pressured into later ticks (``stats["window_waits"]`` counts the
-    TICKS that ended with candidates still waiting, not the candidates —
-    a ticks-under-pressure metric). Requests
-    complete at *resolve* time, one tick after dispatch — the pipeline's
-    latency cost for keeping the device fed.
+    dispatches up to the free slots of the bounded in-flight window(s).
+    When every window is full, further candidates are back-pressured into
+    later ticks (``stats["window_waits"]`` counts the TICKS that ended
+    with candidates still waiting, not the candidates — a
+    ticks-under-pressure metric). Requests complete at *resolve* time,
+    one tick after dispatch — the pipeline's latency cost for keeping
+    the device fed.
   * ``drain()`` flushes everything and resolves every in-flight result
     immediately (shutdown / end of load).
+
+Replica lanes (the serving mesh, docs/SERVING_MESH.md): ``n_replicas``
+generalizes the single implicit backend to N execution lanes, each with
+its own bounded in-flight window (``max_inflight`` is PER LANE) and,
+optionally, its own pinned device (``replica_devices``, e.g.
+``launch.mesh.replica_devices``) and its own apply closure over a
+``device_put`` copy of the model (``replica_apply_fns``, e.g. built over
+``core.integer_inference.replicate_stack``; without it every lane shares
+one jitted step — logical replication, the CPU-simulation mode). The
+``(age, fill-ratio)`` ranking picks the bucket; the flush then routes to
+the least-loaded lane (fewest in-flight flushes, then fewest lifetime
+flushes, then lowest lane id — fully deterministic, so a seeded schedule
+replays bit-exactly). Replicas serve the SAME model, so routing may only
+change timing, never bytes: outputs are invariant to the replica count
+(fuzz-proved in tests/test_serving_fuzz.py). Sync mode still performs
+one blocking flush per tick (the host quantum is the bottleneck, not the
+device); dispatch-ahead's per-tick budget scales with the free window
+slots across lanes — that is the replica-scaling throughput win
+``benchmarks/run.py --only serve_mesh`` records. With ``mesh`` (a
+``launch.mesh.make_serving_mesh`` serving mesh) the jitted step also
+data-parallel-shards each flush batch over the ``replica`` axis through
+``models.sharding.serving_constrain`` (big-batch DP sharding; a no-op in
+values, a layout hint to XLA).
 
 Observability (``stats``): counters (``flushes``, ``served``,
 ``padded_rows``, ``ladder_hits``, ``ladder_normalized``,
@@ -60,8 +83,12 @@ Observability (``stats``): counters (``flushes``, ``served``,
 ``flush_faults``/``retries``/``stuck_flushes``/``shed`` — fault-layer
 counters, see below) plus per-bucket
 ``wait_ticks`` percentiles — ``{bucket: {n, p50, p99, max}}`` where wait
-is submit-to-dispatch in ticks — and ``inflight_age`` (dispatch-to-
-resolve ticks: n/mean/max, the stuck-result metric). Dead buckets
+is submit-to-dispatch in ticks — and ``wait_ticks_recent``, the same
+percentiles over only the last ``wait_window`` samples per bucket (a
+second bounded deque), so fleet SLO checks see RECENT latency instead of
+lifetime-diluted values; ``inflight_age`` (dispatch-to-resolve ticks:
+n/mean/max, the stuck-result metric); and ``replicas``, a per-lane list
+of flushes/served/in-flight depth/peak/stuck/device. Dead buckets
 (emptied queues) are garbage-collected after every tick/drain so bucket
 state stays bounded under high shape cardinality; wait histograms are
 kept (bounded per bucket, capped bucket count) so end-of-run stats
@@ -83,18 +110,21 @@ exactly-once). Every request carries the ``generation`` of the model
 that served it (``swap_apply_fn`` bumps it), stamped at dispatch time —
 in-flight results keep the OLD generation across a swap. ``on_event``
 receives every decision (flush/fault/retry/shed/resolve/swap) for the
-fleet trace.
+fleet trace; flush/resolve/swap events are tagged with the replica id.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from ..core.noise import NoiseConfig
+from ..kernels import fq_conv
+from ..models import sharding
 from .shape_ladder import ShapeLadder
 
 
@@ -115,13 +145,28 @@ class CNNRequest:
 
 @dataclasses.dataclass
 class InflightFlush:
-    """A dispatched-but-unfetched flush parked on the in-flight window."""
+    """A dispatched-but-unfetched flush parked on a lane's window."""
     key: Tuple
     reqs: List[CNNRequest]
     dev_out: object                  # un-fetched device result
     dispatch_tick: int
     generation: int = 0              # model generation at dispatch
     ready_tick: int = 0              # dispatch_tick + 1 + injected stuck ticks
+    replica: int = 0                 # lane that dispatched it
+
+
+@dataclasses.dataclass
+class ReplicaLane:
+    """One replica execution lane: a (possibly shared) jitted step, an
+    optional pinned device, and a bounded in-flight window."""
+    rid: int
+    step: Callable
+    device: object = None
+    inflight: Deque[InflightFlush] = dataclasses.field(default_factory=deque)
+    flushes: int = 0                 # successful dispatches, lifetime
+    served: int = 0
+    stuck: int = 0
+    inflight_peak: int = 0
 
 
 def batch_bucket(n: int, max_batch: int) -> int:
@@ -132,7 +177,7 @@ def batch_bucket(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
-_WAIT_HIST_LEN = 4096    # wait samples kept per bucket
+_WAIT_HIST_LEN = 4096    # lifetime wait samples kept per bucket
 _WAIT_HIST_BUCKETS = 128  # distinct buckets tracked; overflow aggregates
 
 
@@ -146,6 +191,12 @@ class CNNBatcher:
     batcher instances (the fuzz harness does, to share the compile cache);
     it must be jit-compatible with ``apply_fn``'s semantics.
 
+    **Replica lanes.** ``n_replicas`` lanes share ``apply_fn``'s jitted
+    step unless ``replica_apply_fns`` supplies one closure per lane (over
+    ``replicate_stack`` device copies); ``replica_devices`` pins each
+    lane's dispatch to a device via ``jax.default_device``. See the
+    module docstring for routing and the bit-exactness contract.
+
     **Noise canary tier.** ``noise_config`` (a ``core.noise.NoiseConfig``
     with any non-zero sigma) makes every flush run noise-perturbed
     integer inference — the paper's §4.4 analog-noise model — with a
@@ -155,12 +206,16 @@ class CNNBatcher:
     closures do; if ``step_fn`` is supplied it must accept ``(x, key)``.
     ``stats["noise_trials"]`` counts the noisy flushes dispatched. A
     ``None`` or all-zero config leaves the batcher on the byte-identical
-    clean path.
+    clean path. (The per-flush trial index depends on how many flushes
+    preceded it, so noisy-tier outputs — unlike clean ones — are NOT
+    replica-count-invariant; they replay bit-exactly at a fixed count.)
 
     **Model hot-swap.** ``swap_apply_fn`` replaces the served model
     between flushes — e.g. a freshly rederived ``ConvertedStack`` coming
     out of a deployment-in-the-loop retraining cycle — without dropping
-    queued requests or in-flight results.
+    queued requests or in-flight results; with replica lanes the new
+    step installs lane by lane, each install emitting a replica-tagged
+    ``swap`` event.
     """
 
     def __init__(self, apply_fn: Callable, *, max_batch: int = 8,
@@ -171,17 +226,28 @@ class CNNBatcher:
                  noise_config: Optional[NoiseConfig] = None,
                  noise_seed: int = 0,
                  device=None,
-                 on_event: Optional[Callable[[str, Dict], None]] = None):
+                 on_event: Optional[Callable[[str, Dict], None]] = None,
+                 n_replicas: int = 1,
+                 replica_apply_fns: Optional[Sequence[Callable]] = None,
+                 replica_devices: Optional[Sequence] = None,
+                 mesh=None,
+                 wait_window: int = 256):
         assert max_batch >= 1 and max_inflight >= 1
+        assert n_replicas >= 1 and wait_window >= 1
+        if step_fn is not None and replica_apply_fns is not None:
+            raise ValueError("step_fn and replica_apply_fns are mutually "
+                             "exclusive — a shared step IS one closure")
         self.apply_fn = apply_fn
         self.max_batch = max_batch
         self.max_wait_ticks = max_wait_ticks
         self.ladder = ladder
         self.dispatch_ahead = dispatch_ahead
-        self.max_inflight = max_inflight
+        self.max_inflight = max_inflight         # PER replica lane
+        self.wait_window = wait_window
         self.noise_config = noise_config
         self._noisy = noise_config is not None and noise_config.enabled
         self._noise_key = jax.random.key(noise_seed) if self._noisy else None
+        self._mesh = mesh
         self._device = device          # serve.faults boundary (or None)
         self._on_event = on_event
         self.generation = 0            # bumped by every swap_apply_fn
@@ -189,13 +255,33 @@ class CNNBatcher:
         self._age: Dict[Tuple, int] = {}
         self._backoff: Dict[Tuple, int] = {}        # bucket -> eligible tick
         self._flush_attempts: Dict[Tuple, int] = {}  # consecutive faults
-        self._inflight: Deque[InflightFlush] = deque()
         self._tick_no = 0
-        self._step = step_fn if step_fn is not None \
-            else self._make_step(apply_fn)
+        self._replica_apply_fns = list(replica_apply_fns) \
+            if replica_apply_fns is not None else None
+        if self._replica_apply_fns is not None \
+                and len(self._replica_apply_fns) != n_replicas:
+            raise ValueError(f"replica_apply_fns has "
+                             f"{len(self._replica_apply_fns)} entries for "
+                             f"{n_replicas} replicas")
+        devs = list(replica_devices) if replica_devices is not None \
+            else [None] * n_replicas
+        if len(devs) != n_replicas:
+            raise ValueError(f"replica_devices has {len(devs)} entries for "
+                             f"{n_replicas} replicas")
+        if self._replica_apply_fns is None:
+            shared = step_fn if step_fn is not None \
+                else self._make_step(apply_fn)
+            self._lanes = [ReplicaLane(rid=i, step=shared, device=devs[i])
+                           for i in range(n_replicas)]
+        else:
+            self._lanes = [
+                ReplicaLane(rid=i, step=self._make_step(fn), device=devs[i])
+                for i, fn in enumerate(self._replica_apply_fns)]
         self._signatures: set = set()
         self._wait_hist: Dict[str, Deque[int]] = {}
-        self._wait_stats_cache: Optional[Dict] = None
+        self._wait_recent: Dict[str, Deque[int]] = {}
+        self._wait_stats_cache: Dict[bool, Optional[Dict]] = {
+            False: None, True: None}
         self._inflight_age_sum = 0
         self._inflight_age_n = 0
         self._counters = {
@@ -212,34 +298,70 @@ class CNNBatcher:
 
     def _make_step(self, apply_fn):
         donate = (0,) if jax.default_backend() != "cpu" else ()
+        mesh = self._mesh
+        if mesh is not None:
+            # big-batch DP: shard the flush batch over the serving mesh's
+            # replica axis through the shared constrain() path
+            if self._noisy:
+                nc = self.noise_config
+                return jax.jit(
+                    lambda x, key: apply_fn(
+                        sharding.serving_constrain(x, mesh),
+                        noise=nc, rng=key),
+                    donate_argnums=donate)
+            return jax.jit(
+                lambda x: apply_fn(sharding.serving_constrain(x, mesh)),
+                donate_argnums=donate)
         if self._noisy:
             nc = self.noise_config
             return jax.jit(lambda x, key: apply_fn(x, noise=nc, rng=key),
                            donate_argnums=donate)
         return jax.jit(apply_fn, donate_argnums=donate)
 
-    def swap_apply_fn(self, apply_fn, *, step_fn=None):
+    def swap_apply_fn(self, apply_fn, *, step_fn=None,
+                      replica_apply_fns=None):
         """Hot-swap the served model between flushes.
 
         The round-trip pipeline's serving edge: after a deploy-QAT
         finetune, ``ConvertedStack.rederive`` (or ``convert_int``) yields
         a fresh stack whose ``int_serve_fn`` closure swaps in here without
         restarting the batcher. Queued-but-undispatched requests serve
-        under the NEW model on their next flush; results already in the
+        under the NEW model on their next flush; results already in a
         dispatch-ahead window were computed under the old one and resolve
         normally. Per-bucket compiled executables for the new closure
         compile lazily on first flush; ``n_signatures`` keeps counting
         distinct (shape, slots) keys, not recompiles.
 
-        Each swap bumps ``generation``; requests record the generation
-        that computed them (stamped at dispatch), so traces and tests
-        can attribute every output to a serving model generation.
+        Each swap bumps ``generation`` ONCE, then installs the new step
+        replica by replica (``replica_apply_fns`` gives each lane its own
+        closure over a freshly placed stack copy; otherwise every lane
+        shares one step). Each lane install emits a ``swap`` event tagged
+        with the replica id — the fleet trace records the rollout, not
+        just the decision. Requests record the generation that computed
+        them (stamped at dispatch), so traces and tests can attribute
+        every output to a serving model generation.
         """
+        if step_fn is not None and replica_apply_fns is not None:
+            raise ValueError("step_fn and replica_apply_fns are mutually "
+                             "exclusive")
+        if replica_apply_fns is not None \
+                and len(replica_apply_fns) != len(self._lanes):
+            raise ValueError(f"replica_apply_fns has "
+                             f"{len(replica_apply_fns)} entries for "
+                             f"{len(self._lanes)} replicas")
         self.apply_fn = apply_fn
-        self._step = step_fn if step_fn is not None \
-            else self._make_step(apply_fn)
+        self._replica_apply_fns = list(replica_apply_fns) \
+            if replica_apply_fns is not None else None
         self.generation += 1
-        self._emit("swap", generation=self.generation, tick=self._tick_no)
+        shared = None
+        if self._replica_apply_fns is None:
+            shared = step_fn if step_fn is not None \
+                else self._make_step(apply_fn)
+        for lane in self._lanes:
+            lane.step = shared if shared is not None \
+                else self._make_step(self._replica_apply_fns[lane.rid])
+            self._emit("swap", generation=self.generation,
+                       tick=self._tick_no, replica=lane.rid)
 
     # -- request intake -----------------------------------------------------
 
@@ -274,18 +396,52 @@ class CNNBatcher:
         return sum(len(q) for q in self._queues.values())
 
     @property
+    def _inflight(self) -> List[InflightFlush]:
+        """All in-flight flushes across lanes, oldest dispatch first (a
+        read-only merged view; single-replica tests index it directly —
+        mutations must go through the lanes)."""
+        out = [f for lane in self._lanes for f in lane.inflight]
+        out.sort(key=lambda f: (f.dispatch_tick, f.replica))
+        return out
+
+    @property
     def in_flight(self) -> int:
         """Requests dispatched but not yet resolved (dispatch-ahead only)."""
-        return sum(len(f.reqs) for f in self._inflight)
+        return sum(len(f.reqs) for lane in self._lanes
+                   for f in lane.inflight)
+
+    def _inflight_flushes(self) -> int:
+        return sum(len(lane.inflight) for lane in self._lanes)
+
+    def _free_window(self) -> int:
+        return sum(max(0, self.max_inflight - len(lane.inflight))
+                   for lane in self._lanes)
 
     def outstanding(self) -> int:
         return self.pending() + self.in_flight
 
     # -- flushing -----------------------------------------------------------
 
+    def _route(self) -> ReplicaLane:
+        """Least-loaded replica lane, deterministically: min in-flight
+        depth, then fewest lifetime flushes (round-robin under sync
+        mode's always-empty windows), then lowest lane id."""
+        return min(self._lanes,
+                   key=lambda l: (len(l.inflight), l.flushes, l.rid))
+
+    def _dispatch(self, lane: ReplicaLane, *args):
+        """Run the lane's jitted step under the lane's device placement
+        and the kernels' autotune replica scope (table misses recorded
+        at trace time attribute to the lane that compiled them)."""
+        ctx = jax.default_device(lane.device) if lane.device is not None \
+            else contextlib.nullcontext()
+        with ctx, fq_conv.replica_scope(lane.rid):
+            return lane.step(*args)
+
     def _flush(self, key: Tuple, reqs: List[CNNRequest]) -> int:
-        """Dispatch one padded batch. Returns #requests COMPLETED now
-        (sync: all of them; dispatch-ahead: 0, they resolve later).
+        """Dispatch one padded batch to the least-loaded lane. Returns
+        #requests COMPLETED now (sync: all of them; dispatch-ahead: 0,
+        they resolve later).
 
         With a fault boundary installed the dispatch can fail BEFORE
         reaching the device: the batch requeues at the front of its
@@ -298,6 +454,7 @@ class CNNBatcher:
             if fate.fail:
                 return self._flush_fault(key, reqs)
             stuck = fate.stuck_ticks if self.dispatch_ahead else 0
+        lane = self._route()
         slots = batch_bucket(len(reqs), self.max_batch)
         x = np.zeros((slots,) + shape, dtype=np.dtype(dtype))
         for i, r in enumerate(reqs):
@@ -308,6 +465,7 @@ class CNNBatcher:
         self._signatures.add((key, slots))
         self._counters["flushes"] += 1
         self._counters["padded_rows"] += slots - len(reqs)
+        lane.flushes += 1
         self._age[key] = 0  # every flush restarts the bucket's wait clock
         self._flush_attempts.pop(key, None)  # success resets retry budget
         if self._noisy:
@@ -316,24 +474,29 @@ class CNNBatcher:
             key_n = jax.random.fold_in(self._noise_key,
                                        self._counters["noise_trials"])
             self._counters["noise_trials"] += 1
-            dev = self._step(x, key_n)
+            dev = self._dispatch(lane, x, key_n)
         else:
-            dev = self._step(x)
+            dev = self._dispatch(lane, x)
         self._emit("flush", key=key, tick=self._tick_no, n=len(reqs),
-                   slots=slots, generation=self.generation, stuck=stuck)
+                   slots=slots, generation=self.generation, stuck=stuck,
+                   replica=lane.rid)
         if self.dispatch_ahead:
             if stuck:
                 self._counters["stuck_flushes"] += 1
-            self._inflight.append(
+                lane.stuck += 1
+            lane.inflight.append(
                 InflightFlush(key, reqs, dev, self._tick_no,
                               generation=self.generation,
-                              ready_tick=self._tick_no + 1 + stuck))
+                              ready_tick=self._tick_no + 1 + stuck,
+                              replica=lane.rid))
+            lane.inflight_peak = max(lane.inflight_peak, len(lane.inflight))
             self._counters["inflight_peak"] = max(
-                self._counters["inflight_peak"], len(self._inflight))
+                self._counters["inflight_peak"], self._inflight_flushes())
             return 0
         n = self._finish(reqs, dev)
+        lane.served += n
         self._emit("resolve", key=key, tick=self._tick_no, reqs=reqs,
-                   generation=self.generation, age=0)
+                   generation=self.generation, age=0, replica=lane.rid)
         return n
 
     def _flush_fault(self, key: Tuple, reqs: List[CNNRequest]) -> int:
@@ -401,27 +564,44 @@ class CNNBatcher:
         self._counters["served"] += len(reqs)
         return len(reqs)
 
-    def _resolve_one(self) -> int:
-        """Pop + fetch the head in-flight flush, recording its window age."""
-        f = self._inflight.popleft()
+    def _resolve_lane(self, lane: ReplicaLane) -> int:
+        """Pop + fetch the lane's head flush, recording its window age."""
+        f = lane.inflight.popleft()
         age = self._tick_no - f.dispatch_tick
         self._counters["inflight_age_max"] = max(
             self._counters["inflight_age_max"], age)
         self._inflight_age_sum += age
         self._inflight_age_n += 1
         n = self._finish(f.reqs, f.dev_out)
+        lane.served += n
         self._emit("resolve", key=f.key, tick=self._tick_no, reqs=f.reqs,
-                   generation=f.generation, age=age)
+                   generation=f.generation, age=age, replica=f.replica)
         return n
+
+    def _resolve_one(self) -> int:
+        """Fetch the globally-oldest in-flight head, ready or not (drain
+        / window back-pressure: the host blocks on it anyway)."""
+        lane = min((l for l in self._lanes if l.inflight),
+                   key=lambda l: (l.inflight[0].dispatch_tick, l.rid))
+        return self._resolve_lane(lane)
 
     def _resolve_older_than(self, tick: int) -> int:
         """Fetch in-flight results that are ready by ``tick`` (the device
         had the inter-tick interval to run them; a stuck result's
-        ``ready_tick`` was pushed out by the fault layer)."""
+        ``ready_tick`` was pushed out by the fault layer). Lanes merge in
+        (ready_tick, dispatch_tick, lane id) order — deterministic."""
         n = 0
-        while self._inflight and self._inflight[0].ready_tick <= tick:
-            n += self._resolve_one()
-        return n
+        while True:
+            best = None
+            for lane in self._lanes:
+                if lane.inflight and lane.inflight[0].ready_tick <= tick:
+                    rank = (lane.inflight[0].ready_tick,
+                            lane.inflight[0].dispatch_tick, lane.rid)
+                    if best is None or rank < best[0]:
+                        best = (rank, lane)
+            if best is None:
+                return n
+            n += self._resolve_lane(best[1])
 
     def _candidate(self) -> Optional[Tuple]:
         """Highest-priority flush candidate by (age, fill-ratio), or None."""
@@ -455,12 +635,14 @@ class CNNBatcher:
 
         Resolve earlier-tick in-flight results, age the buckets, then
         flush the ranked candidates within this tick's budget: one
-        blocking flush (sync) or the in-flight window's free slots
-        (dispatch-ahead)."""
+        blocking flush (sync — the blocking fetch eats the quantum no
+        matter how many lanes exist) or the free in-flight window slots
+        summed across every replica lane (dispatch-ahead — the budget
+        that scales with the replica count)."""
         served = 0
         if self.dispatch_ahead:
             served += self._resolve_older_than(self._tick_no)
-            budget = self.max_inflight - len(self._inflight)
+            budget = self._free_window()
         else:
             budget = 1
         for key, q in self._queues.items():
@@ -477,7 +659,7 @@ class CNNBatcher:
             budget -= 1
         if self.dispatch_ahead and self._candidate() is not None:
             # a tick that ended with candidates still back-pressured
-            # behind the full window (ticks-under-pressure, not a
+            # behind the full window(s) (ticks-under-pressure, not a
             # per-candidate count)
             self._counters["window_waits"] += 1
         self._gc_buckets()
@@ -502,11 +684,10 @@ class CNNBatcher:
                 q, self._queues[key] = self._queues[key], []
                 while q:
                     batch, q = q[:self.max_batch], q[self.max_batch:]
-                    if self.dispatch_ahead and \
-                            len(self._inflight) >= self.max_inflight:
+                    if self.dispatch_ahead and self._free_window() == 0:
                         served += self._resolve_one()  # window back-pressure
                     served += self._flush(key, batch)
-        while self._inflight:
+        while any(lane.inflight for lane in self._lanes):
             served += self._resolve_one()
         self._gc_buckets()
         return served
@@ -524,17 +705,28 @@ class CNNBatcher:
                 len(self._wait_hist) >= _WAIT_HIST_BUCKETS:
             label = "<overflow>"
         hist = self._wait_hist.setdefault(label, deque(maxlen=_WAIT_HIST_LEN))
-        hist.extend(r.wait_ticks for r in reqs)
-        self._wait_stats_cache = None
+        recent = self._wait_recent.setdefault(
+            label, deque(maxlen=self.wait_window))
+        waits = [r.wait_ticks for r in reqs]
+        hist.extend(waits)
+        recent.extend(waits)
+        self._wait_stats_cache = {False: None, True: None}
 
-    def wait_stats(self) -> Dict[str, Dict[str, float]]:
+    def wait_stats(self, *, window: bool = False
+                   ) -> Dict[str, Dict[str, float]]:
         """Per-bucket submit-to-dispatch wait percentiles, in ticks.
+
+        ``window=True`` computes them over only the last ``wait_window``
+        samples per bucket (a second bounded deque) — the fleet-SLO view:
+        lifetime percentiles dilute a latency regression under hours of
+        healthy history, the windowed ones surface it within one window.
 
         Cached between flushes so polling ``stats`` for a counter never
         pays a percentile pass over the histograms."""
-        if self._wait_stats_cache is None:
+        if self._wait_stats_cache[window] is None:
+            src = self._wait_recent if window else self._wait_hist
             out = {}
-            for label, hist in self._wait_hist.items():
+            for label, hist in src.items():
                 a = np.asarray(hist)
                 out[label] = {
                     "n": int(a.size),
@@ -542,20 +734,29 @@ class CNNBatcher:
                     "p99": float(np.percentile(a, 99)),
                     "max": int(a.max()),
                 }
-            self._wait_stats_cache = out
-        return self._wait_stats_cache
+            self._wait_stats_cache[window] = out
+        return self._wait_stats_cache[window]
 
     @property
     def stats(self) -> Dict:
         d = dict(self._counters)
         d["generation"] = self.generation
         d["wait_ticks"] = self.wait_stats()
+        d["wait_ticks_recent"] = self.wait_stats(window=True)
         d["inflight_age"] = {
             "n": self._inflight_age_n,
             "mean": (self._inflight_age_sum / self._inflight_age_n
                      if self._inflight_age_n else 0.0),
             "max": self._counters["inflight_age_max"],
         }
+        d["n_replicas"] = len(self._lanes)
+        d["replicas"] = [
+            {"replica": lane.rid, "flushes": lane.flushes,
+             "served": lane.served, "inflight": len(lane.inflight),
+             "inflight_peak": lane.inflight_peak, "stuck": lane.stuck,
+             "device": str(lane.device) if lane.device is not None
+             else None}
+            for lane in self._lanes]
         return d
 
     # -- convenience --------------------------------------------------------
@@ -565,7 +766,8 @@ class CNNBatcher:
         """Serve a request list to completion; returns rid -> output."""
         self.submit(reqs)
         for _ in range(max_ticks):
-            if self.pending() == 0 and not self._inflight:
+            if self.pending() == 0 and \
+                    not any(lane.inflight for lane in self._lanes):
                 break
             self.tick()
         self.drain()

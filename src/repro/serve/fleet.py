@@ -47,7 +47,7 @@ import numpy as np
 
 from ..analysis import planlint
 from ..analysis.report import Report, Severity
-from ..core.integer_inference import stack_digest
+from ..core.integer_inference import replicate_stack, stack_digest
 from ..core.noise import NoiseConfig
 from .cnn_batching import CNNBatcher, CNNRequest
 from .faults import FaultPlan, FaultyDevice
@@ -133,6 +133,8 @@ class _Model:
     clean_fn: Optional[Callable] = None
     noisy_fn: Optional[Callable] = None
     exhausted: bool = False
+    n_replicas: int = 1
+    devices: Optional[list] = None      # replica placement (None: shared)
 
 
 class FleetRuntime:
@@ -157,7 +159,7 @@ class FleetRuntime:
                  slo: ModelSLO = ModelSLO(), probe: np.ndarray,
                  canary_seed: int, finetune_factory: Optional[Callable]
                  = None, condition: Optional[NoiseConfig] = None,
-                 batcher_kw: Optional[dict] = None):
+                 batcher_kw: Optional[dict] = None, n_replicas: int = 1):
         """Add a named model to the fleet.
 
         ``serve_builder(stack) -> apply_fn(x, noise=None, rng=None)``
@@ -169,6 +171,16 @@ class FleetRuntime:
         registry must pass ``planlint.lint_fleet`` (names unique, SLOs
         satisfiable against the fault plan, canary seeds distinct,
         stacks clean) — violations raise :class:`FleetConfigError`.
+
+        ``n_replicas`` > 1 serves the model on that many replica lanes
+        (docs/SERVING_MESH.md): placement round-robins over
+        ``launch.mesh.replica_devices`` and each lane gets its own apply
+        closure over a ``replicate_stack`` device copy (falling back to
+        one shared closure for opaque unit-test model objects that
+        ``device_put`` cannot place). Canary, retrain and hot-swap stay
+        fleet-level decisions; swaps install replica-by-replica between
+        flushes and surface as ``swap-replica`` trace events under the
+        fleet's own ``swap``.
         """
         entries = [(m.name, m.slo, m.canary_seed, m.stack)
                    for m in self._models.values()]
@@ -182,24 +194,46 @@ class FleetRuntime:
             if errs:
                 raise FleetConfigError("; ".join(
                     f"{f.check}[{f.subject}]: {f.message}" for f in errs))
+        kw = dict(batcher_kw or {})
+        n_replicas = int(kw.pop("n_replicas", n_replicas))
         m = _Model(name=name, stack=stack, serve_builder=serve_builder,
                    slo=slo, probe=np.asarray(probe),
                    canary_seed=int(canary_seed),
                    finetune_factory=finetune_factory,
-                   batcher=None, condition=condition)
+                   batcher=None, condition=condition,
+                   n_replicas=n_replicas)
         m.window = deque(maxlen=slo.canary_window)
+        if n_replicas > 1 and "replica_devices" not in kw:
+            from ..launch import mesh as mesh_mod
+            m.devices = mesh_mod.replica_devices(n_replicas)
+            kw["replica_devices"] = m.devices
         m.batcher = CNNBatcher(
             serve_builder(stack), device=self._device,
             on_event=lambda etype, kw, _m=m: self._bridge(_m, etype, kw),
-            **(batcher_kw or {}))
+            n_replicas=n_replicas,
+            replica_apply_fns=self._replica_fns(m), **kw)
         self._rebuild_canary(m)
         self._models[name] = m
         self.trace.emit(
             "register", tick=self._tick, model=name, slo=slo.to_dict(),
             canary_seed=m.canary_seed, stack=self._digest(stack),
             probe=digest(m.probe), condition=self._nc_list(condition),
-            has_finetune=finetune_factory is not None)
+            has_finetune=finetune_factory is not None,
+            n_replicas=n_replicas)
         return m
+
+    def _replica_fns(self, m: _Model):
+        """Per-lane apply closures over placed stack copies, or None to
+        share one step across lanes. Opaque unit-test model objects (no
+        pytree registration / not device_put-able) fall back to sharing
+        — logically replicated, physically one closure."""
+        if m.n_replicas <= 1 or m.devices is None:
+            return None
+        try:
+            stacks = replicate_stack(m.stack, m.devices)
+        except Exception:  # noqa: BLE001 — toy stacks: share the closure
+            return None
+        return [m.serve_builder(s) for s in stacks]
 
     @staticmethod
     def _nc_list(nc: Optional[NoiseConfig]):
@@ -357,7 +391,8 @@ class FleetRuntime:
         m.job = None
         m.last_good = (m.stack, m.batcher.generation)
         m.stack = new_stack
-        m.batcher.swap_apply_fn(m.serve_builder(new_stack))
+        m.batcher.swap_apply_fn(m.serve_builder(new_stack),
+                                replica_apply_fns=self._replica_fns(m))
         self._rebuild_canary(m)
         m.state = HEALTHY
         self.trace.emit("swap", tick=self._tick, model=m.name,
@@ -375,7 +410,8 @@ class FleetRuntime:
         m.last_good = None
         m.job = None
         m.stack = stack
-        m.batcher.swap_apply_fn(m.serve_builder(stack))
+        m.batcher.swap_apply_fn(m.serve_builder(stack),
+                                replica_apply_fns=self._replica_fns(m))
         self._rebuild_canary(m)
         m.state = DEGRADED
         self.trace.emit("degrade", tick=self._tick, model=m.name,
@@ -388,7 +424,11 @@ class FleetRuntime:
     def _bridge(self, m: _Model, etype: str, kw: dict):
         """Translate batcher events into model-tagged trace events."""
         if etype == "swap":
-            return  # the fleet emits its own swap/degrade event
+            # the fleet emits its own swap/degrade DECISION event; the
+            # per-lane installs surface as replica-tagged rollout events
+            if "replica" in kw:
+                self.trace.emit("swap-replica", model=m.name, **kw)
+            return
         evt = {"model": m.name}
         if "key" in kw:
             shape, dtype = kw.pop("key")

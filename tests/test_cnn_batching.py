@@ -306,6 +306,29 @@ def test_wait_tick_stats_exposed():
     assert st["p50"] == 2.0 and st["p99"] == 2.0 and st["max"] == 2
 
 
+def test_wait_tick_stats_windowed_not_history_diluted():
+    """Satellite bugfix (ISSUE 10): lifetime percentiles dilute a recent
+    latency regression under old healthy history; ``wait_ticks_recent``
+    covers only the last ``wait_window`` samples, so the fleet SLO check
+    sees the regression era, not the average of both."""
+    rng = np.random.default_rng(113)
+    b = CNNBatcher(_mark_fn, max_batch=2, max_wait_ticks=4, wait_window=8)
+    for i in range(16):  # healthy era: full buckets, zero wait
+        b.submit(_reqs([(3, 3)] * 2, rng))
+        b.tick()
+    for i in range(8):   # regression era: singletons age 4 ticks
+        b.submit(_reqs([(3, 3)], rng))
+        for _ in range(5):
+            b.tick()
+    label, = b.stats["wait_ticks"].keys()
+    life = b.stats["wait_ticks"][label]
+    recent = b.stats["wait_ticks_recent"][label]
+    assert life["n"] == 40 and life["p50"] == 0.0  # diluted: looks healthy
+    assert recent["n"] == 8                        # bounded window
+    assert recent["p50"] == recent["max"] == 4     # the regression, visible
+    assert b.wait_stats(window=True) is b.stats["wait_ticks_recent"]  # cached
+
+
 def test_ladder_integration_normalizes_and_counts():
     from repro.serve.shape_ladder import LadderSpec, ShapeLadder
     rng = np.random.default_rng(14)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch import mesh as mesh_mod
 from repro.serve.cnn_batching import CNNBatcher, CNNRequest
 from repro.serve.shape_ladder import LadderSpec, ShapeLadder
 
@@ -50,14 +51,18 @@ def _mk_request(rng, rid, shapes):
 
 
 def _run_schedule(seed, dispatch_ahead, *, ladder=None, shapes=_SHAPES,
-                  n_ops=14):
+                  n_ops=14, n_replicas=1):
     rng = np.random.default_rng(seed)
     b = CNNBatcher(
         _toy, max_batch=int(rng.choice([2, 4, 8])),
         max_wait_ticks=int(rng.integers(0, 4)),
         dispatch_ahead=dispatch_ahead,
         max_inflight=int(rng.integers(1, 5)),
-        ladder=ladder, step_fn=_STEP)
+        ladder=ladder, step_fn=_STEP,  # shared across lanes: the
+        # CPU-simulation mode (and the shared compile cache)
+        n_replicas=n_replicas,
+        replica_devices=(mesh_mod.replica_devices(n_replicas)
+                         if n_replicas > 1 else None))
     reqs = []
     for _ in range(n_ops):
         op = rng.random()
@@ -136,6 +141,34 @@ def test_modes_agree_bit_exact():
         assert len(r_sync) == len(r_async)
         for a, c in zip(r_sync, r_async):
             assert np.array_equal(np.asarray(a.out), np.asarray(c.out))
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("dispatch_ahead", [False, True])
+def test_fuzz_multi_replica_bit_exact(dispatch_ahead):
+    """Replica-lane sweep (ISSUE 10): seeded schedules × {1, 2, 4}
+    replicas. Every replica count must serve exactly-once, bit-exact vs
+    the unbatched apply_fn, AND byte-identical to the 1-replica run of
+    the same schedule — routing may only move work between lanes, never
+    change what any request computes."""
+    for seed in range(25):
+        outs_by_n = {}
+        for n in (1, 2, 4):
+            b, reqs = _run_schedule(3000 + seed, dispatch_ahead,
+                                    n_replicas=n)
+            _check_schedule(b, reqs, (3000 + seed, n))
+            st = b.stats
+            assert st["n_replicas"] == n and len(st["replicas"]) == n
+            assert sum(l["flushes"] for l in st["replicas"]) \
+                == st["flushes"], (seed, n)
+            assert sum(l["served"] for l in st["replicas"]) \
+                == st["served"], (seed, n)
+            assert all(l["inflight"] == 0 for l in st["replicas"])
+            outs_by_n[n] = [np.asarray(r.out) for r in reqs]
+        for n in (2, 4):  # replica-count invariance, byte for byte
+            assert len(outs_by_n[n]) == len(outs_by_n[1])
+            for a, c in zip(outs_by_n[1], outs_by_n[n]):
+                assert np.array_equal(a, c), (seed, n)
 
 
 def test_double_submit_rejected():

@@ -184,6 +184,17 @@ _TUPLE_AXIS_PROBE = textwrap.dedent("""
                                             trainer.TrainConfig()))
     _, _, m_ref = step1(p_ref, s_ref, batch, jnp.int32(0))
     print("TUPLE_AXIS_PROBE", l1, float(m_ref["loss"]))
+
+    # the serving mesh rides the same constrain() path (ISSUE 10): a
+    # single-axis replica constraint must stay a value no-op even with
+    # tuple-axis constraints force-kept — the workaround only ever
+    # drops COMBINED axes, so serving must be unaffected by either
+    # setting of the gate
+    smesh = mesh_mod.make_serving_mesh(2)
+    xb = jnp.arange(24.0).reshape(4, 6)
+    yb = jax.jit(lambda t: shd.serving_constrain(t, smesh))(xb)
+    assert bool(jnp.all(yb == xb)), "serving_constrain corrupted values"
+    print("SERVING_MESH_CONSTRAIN_OK")
 """)
 
 
@@ -199,6 +210,12 @@ def test_tuple_axis_workaround_still_needed():
     (historically 7.05 vs 7.20). The day a jax upgrade makes this test
     fail, the workaround is removable: delete the CPU gate in
     ``_tuple_axis_constraints_ok`` and this probe together.
+
+    The probe also exercises the SERVING mesh through the same
+    ``constrain`` path (``sharding.serving_constrain`` over a 2-replica
+    mesh): its single-axis spec must stay a value no-op under the
+    force-kept gate, proving the workaround never needs to engage for
+    serving regardless of jax version.
     """
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
@@ -208,6 +225,8 @@ def test_tuple_axis_workaround_still_needed():
     lines = [ln for ln in r.stdout.splitlines()
              if ln.startswith("TUPLE_AXIS_PROBE")]
     assert lines, f"probe crashed:\n{r.stdout}\n{r.stderr}"
+    assert "SERVING_MESH_CONSTRAIN_OK" in r.stdout, \
+        f"serving-mesh constrain check failed:\n{r.stdout}\n{r.stderr}"
     _, sharded, ref = lines[0].split()
     diverged = abs(float(sharded) - float(ref)) > 1e-3
     if jax.__version__ == "0.4.37":
